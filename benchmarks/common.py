@@ -1,0 +1,79 @@
+"""Shared benchmark infrastructure: a briefly-trained tiny DiT denoiser (real
+denoiser dynamics on CPU) + timing / convergence measurement helpers."""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCHS
+from repro.core import ParaTAAConfig, ddim_coeffs, ddpm_coeffs, sample, sample_recording
+from repro.diffusion import dit as dit_mod
+from repro.diffusion.samplers import draw_noises, sequential_sample
+from repro.data.pipeline import LatentPipeline
+from repro.launch import steps as S
+from repro.optim import adamw_init
+
+NUM_TOKENS = 16
+
+
+@functools.lru_cache(maxsize=1)
+def trained_dit(steps: int = 80, seed: int = 0):
+    cfg = ARCHS["dit-xl"].reduced()
+    params = dit_mod.dit_init(cfg, jax.random.PRNGKey(seed))
+    opt = adamw_init(params)
+    step_fn = jax.jit(S.make_train_step(cfg), donate_argnums=(0, 1))
+    pipe = LatentPipeline(num_tokens=NUM_TOKENS, latent_dim=cfg.latent_dim,
+                          num_classes=cfg.num_classes, seed=seed)
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch(i, 16).items()}
+        params, opt, _ = step_fn(params, opt, batch, jnp.asarray(i, jnp.int32))
+    return cfg, params
+
+
+def eps_fn_for(cfg, params, label: int = 3):
+    def eps_fn(xw, taus):
+        y = jnp.full((xw.shape[0],), label, jnp.int32)
+        return dit_mod.dit_apply(params, cfg, xw, taus, y)
+    return eps_fn
+
+
+def scenario(sampler: str, T: int):
+    return (ddim_coeffs if sampler == "ddim" else ddpm_coeffs)(T)
+
+
+def solve(eps_fn, coeffs, *, mode="taa", k=8, m=3, window=0, s_max=None,
+          tau=1e-3, record=False, xi=None, seed=0, shape=None, **kw):
+    if xi is None:
+        xi = draw_noises(jax.random.PRNGKey(seed), coeffs, shape)
+    cfg = ParaTAAConfig(order_k=k, history_m=m, mode=mode, window=window,
+                        tau=tau, s_max=s_max or 3 * coeffs.T, **kw)
+    fn = sample_recording if record else sample
+    return fn(eps_fn, coeffs, cfg, xi)
+
+
+def timed(fn, *args, reps: int = 3, **kw):
+    fn(*args, **kw)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+        jax.block_until_ready(jax.tree.leaves(out)[0])
+    return out, (time.perf_counter() - t0) / reps
+
+
+def x0_distance(traj_or_x0, x_ref):
+    a = traj_or_x0[0] if traj_or_x0.ndim == x_ref.ndim + 1 else traj_or_x0
+    return float(jnp.linalg.norm(a - x_ref) / (jnp.linalg.norm(x_ref) + 1e-9))
+
+
+def quality_steps(x0_history, x_ref, tol: float = 2e-2):
+    """Early-stopping metric (Sec 4.1): first iteration whose x0 is within
+    `tol` relative distance of the sequential solution."""
+    ref_n = float(jnp.linalg.norm(x_ref)) + 1e-9
+    d = np.linalg.norm(np.asarray(x0_history) - np.asarray(x_ref).reshape(1, -1),
+                       axis=1) / ref_n
+    hits = np.where(d < tol)[0]
+    return int(hits[0]) + 1 if len(hits) else -1

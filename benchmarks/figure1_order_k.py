@@ -1,0 +1,24 @@
+"""Figure 1: convergence of FP residuals under different orders k."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+
+def run(T: int = 50, iters: int = 30):
+    cfg, params = common.trained_dit()
+    eps = common.eps_fn_for(cfg, params)
+    shape = (common.NUM_TOKENS, cfg.latent_dim)
+    rows = []
+    for sampler in ["ddim", "ddpm"]:
+        coeffs = common.scenario(sampler, T)
+        for k in [1, 2, 4, 8, 16, T]:
+            (_, info), dt = common.timed(
+                lambda: common.solve(eps, coeffs, mode="fp", k=k, m=1,
+                                     s_max=iters, record=True, shape=shape),
+                reps=1)
+            res = np.asarray(info["res_history"]).sum(axis=1)
+            rows.append((f"fig1/{sampler}{T}/fp_k{k}", dt * 1e6 / iters,
+                         f"res@5={res[4]:.3e};res@{iters}={res[-1]:.3e}"))
+    return rows

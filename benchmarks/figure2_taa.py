@@ -1,0 +1,30 @@
+"""Figure 2: FP vs AA vs TAA residual convergence under different k."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+
+def run(T: int = 50, iters: int = 30):
+    cfg, params = common.trained_dit()
+    eps = common.eps_fn_for(cfg, params)
+    shape = (common.NUM_TOKENS, cfg.latent_dim)
+    rows = []
+    for sampler in ["ddim", "ddpm"]:
+        coeffs = common.scenario(sampler, T)
+        for mode, k, m in [("fp", 8, 1), ("aa", 8, 3), ("aa+", 8, 3),
+                           ("taa", 8, 3), ("taa", 4, 3)]:
+            (_, info), dt = common.timed(
+                lambda: common.solve(eps, coeffs, mode=mode, k=k, m=m,
+                                     s_max=iters, record=True, shape=shape),
+                reps=1)
+            res = np.asarray(info["res_history"]).sum(axis=1)
+            # iterations to drive the residual sum below 1e-3 of its start
+            target = res[0] * 1e-3
+            hit = np.where(res < target)[0]
+            conv = int(hit[0]) + 1 if len(hit) else -1
+            rows.append((f"fig2/{sampler}{T}/{mode}_k{k}_m{m}",
+                         dt * 1e6 / iters,
+                         f"res@{iters}={res[-1]:.3e};iters_to_1e-3={conv}"))
+    return rows

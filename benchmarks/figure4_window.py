@@ -1,0 +1,28 @@
+"""Figure 4: ParaTAA convergence under different window sizes w."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.diffusion.samplers import draw_noises, sequential_sample
+
+
+def run(T: int = 100):
+    cfg, params = common.trained_dit()
+    eps = common.eps_fn_for(cfg, params)
+    shape = (common.NUM_TOKENS, cfg.latent_dim)
+    coeffs = common.scenario("ddim", T)
+    xi = draw_noises(jax.random.PRNGKey(7), coeffs, shape)
+    x_seq = sequential_sample(eps, coeffs, xi)
+    rows = []
+    for w in [10, 20, 40, T]:
+        (traj, info), dt = common.timed(
+            lambda: common.solve(eps, coeffs, xi=xi, mode="taa", k=8, m=3,
+                                 window=w, record=True), reps=1)
+        q = common.quality_steps(info["x0_history"], x_seq)
+        rows.append((f"fig4/ddim{T}/w{w}", dt * 1e6,
+                     f"steps={int(info['iters'])};qsteps={q};"
+                     f"nfe={int(info['nfe'])};"
+                     f"relerr={common.x0_distance(traj, x_seq):.1e}"))
+    return rows

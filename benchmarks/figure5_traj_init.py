@@ -1,0 +1,38 @@
+"""Figure 5 / Sec 5.3 / Appendix E: initialization from an existing sampling
+trajectory of a similar condition (label swap = the "similar prompt" case;
+the CLIP-score curve is proxied by distance to the target's own solution)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.core import ParaTAAConfig, sample, sample_recording
+from repro.diffusion.samplers import draw_noises, sequential_sample
+
+
+def run(T: int = 50):
+    cfg, params = common.trained_dit()
+    eps1 = common.eps_fn_for(cfg, params, label=3)   # "P1"
+    eps2 = common.eps_fn_for(cfg, params, label=7)   # "P2", similar condition
+    shape = (common.NUM_TOKENS, cfg.latent_dim)
+    coeffs = common.scenario("ddim", T)
+    xi = draw_noises(jax.random.PRNGKey(9), coeffs, shape)
+    x_seq2 = sequential_sample(eps2, coeffs, xi)
+
+    traj1, _ = common.solve(eps1, coeffs, xi=xi, mode="taa", k=8, m=3)
+    rows = []
+    for name, t_init, x_init in [("random", 0, None),
+                                 ("traj_P1_Tinit50", 50, traj1),
+                                 ("traj_P1_Tinit35", 35, traj1)]:
+        t_init = min(t_init, T)
+        cfgp = ParaTAAConfig(order_k=8, history_m=3, mode="taa", tau=1e-3,
+                             s_max=3 * T, t_init=t_init)
+        (traj, info), dt = common.timed(
+            lambda: sample_recording(eps2, coeffs, cfgp, xi, x_init=x_init),
+            reps=1)
+        q = common.quality_steps(np.asarray(info["x0_history"]), x_seq2, tol=5e-2)
+        rows.append((f"fig5/ddim{T}/{name}", dt * 1e6,
+                     f"steps={int(info['iters'])};qsteps={q};"
+                     f"relerr={common.x0_distance(traj, x_seq2):.1e}"))
+    return rows

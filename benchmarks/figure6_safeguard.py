@@ -1,0 +1,38 @@
+"""Figure 6: (a) non-uniform per-timestep convergence, (b) safeguard has no
+cost, (c) AA+ (heuristic triangular extraction) vs TAA."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+
+def run(T: int = 50, iters: int = 40):
+    cfg, params = common.trained_dit()
+    eps = common.eps_fn_for(cfg, params)
+    shape = (common.NUM_TOKENS, cfg.latent_dim)
+    coeffs = common.scenario("ddpm", T)
+    rows = []
+
+    # (a) early-timestep rows converge first (triangular structure)
+    _, info = common.solve(eps, coeffs, mode="fp", k=8, m=1, s_max=iters,
+                           record=True, shape=shape)
+    res = np.asarray(info["res_history"])  # (iters, T)
+    top = res[:, -10:].sum(axis=1)
+    bottom = res[:, :10].sum(axis=1)
+    it_top = int(np.argmax(top < top[0] * 1e-3) or iters)
+    it_bot = int(np.argmax(bottom < bottom[0] * 1e-3) or iters)
+    rows.append((f"fig6a/ddpm{T}/fp_k8", 0.0,
+                 f"iters_top10={it_top};iters_bottom10={it_bot}"))
+
+    # (b) safeguard on/off; (c) aa+ vs taa
+    for name, kw in [("taa_safeguard", dict(mode="taa", safeguard=True)),
+                     ("taa_no_safeguard", dict(mode="taa", safeguard=False)),
+                     ("aa+", dict(mode="aa+")), ("aa", dict(mode="aa"))]:
+        (_, info), dt = common.timed(
+            lambda: common.solve(eps, coeffs, k=8, m=3, s_max=iters,
+                                 record=True, shape=shape, **kw), reps=1)
+        r = np.asarray(info["res_history"]).sum(axis=1)
+        rows.append((f"fig6bc/ddpm{T}/{name}", dt * 1e6 / iters,
+                     f"res@{iters}={r[-1]:.3e};iters={int(info['iters'])}"))
+    return rows

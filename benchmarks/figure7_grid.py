@@ -1,0 +1,30 @@
+"""Figure 7 / Appendix C: grid search over order k and history size m."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.diffusion.samplers import draw_noises
+
+
+def run(T: int = 50, n_seeds: int = 2):
+    cfg, params = common.trained_dit()
+    eps = common.eps_fn_for(cfg, params)
+    shape = (common.NUM_TOKENS, cfg.latent_dim)
+    rows = []
+    for sampler in ["ddim", "ddpm"]:
+        coeffs = common.scenario(sampler, T)
+        for m in [1, 2, 3, 5]:
+            for k in [2, 4, 8, 16, T]:
+                steps = []
+                for seed in range(n_seeds):
+                    xi = draw_noises(jax.random.PRNGKey(seed), coeffs, shape)
+                    _, info = common.solve(eps, coeffs, xi=xi,
+                                           mode="taa" if m > 1 else "fp",
+                                           k=k, m=m, s_max=3 * T)
+                    steps.append(int(info["iters"]) if bool(info["converged"])
+                                 else 3 * T)
+                rows.append((f"fig7/{sampler}{T}/k{k}_m{m}", 0.0,
+                             f"steps={np.mean(steps):.1f}"))
+    return rows

@@ -1,0 +1,27 @@
+"""Roofline summary from the dry-run JSON records (one row per cell)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+
+def run(results_dir: str = "results/dryrun_final"):
+    rows = []
+    for p in sorted(Path(results_dir).glob("*.json")):
+        rec = json.loads(p.read_text())
+        name = f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if rec.get("status") == "skipped":
+            rows.append((name, 0.0, "skipped:" + rec["reason"][:60]))
+            continue
+        if rec.get("status") != "ok":
+            rows.append((name, 0.0, "error"))
+            continue
+        lb = max(rec["compute_s"], rec["memory_s"], rec["collective_s"])
+        rows.append((name, lb * 1e6,
+                     f"dominant={rec['dominant']};"
+                     f"compute_ms={rec['compute_s']*1e3:.2f};"
+                     f"mem_ms={rec['memory_s']*1e3:.2f};"
+                     f"coll_ms={rec['collective_s']*1e3:.2f};"
+                     f"fits={rec['fits_hbm']};"
+                     f"mfratio={rec['model_flops_ratio'] and round(rec['model_flops_ratio'], 3)}"))
+    return rows

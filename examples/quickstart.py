@@ -1,0 +1,53 @@
+"""Quickstart: train a tiny DiT on synthetic latents, then sample with
+ParaTAA and verify it reproduces sequential DDIM sampling in ~3x fewer steps.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCHS
+from repro.core import ParaTAAConfig, ddim_coeffs, sample
+from repro.data.pipeline import LatentPipeline
+from repro.diffusion import dit
+from repro.diffusion.samplers import draw_noises, sequential_sample
+from repro.launch import steps as S
+from repro.optim import adamw_init
+
+
+def main():
+    # --- 1. a small DiT denoiser, briefly trained ---------------------------
+    cfg = ARCHS["dit-xl"].reduced()
+    params = dit.dit_init(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    step = jax.jit(S.make_train_step(cfg), donate_argnums=(0, 1))
+    pipe = LatentPipeline(num_tokens=16, latent_dim=cfg.latent_dim,
+                          num_classes=cfg.num_classes)
+    print("training tiny DiT ...")
+    for i in range(80):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch(i, 16).items()}
+        params, opt, m = step(params, opt, batch, jnp.asarray(i, jnp.int32))
+    print(f"  final loss {float(m['loss']):.4f}")
+
+    # --- 2. sequential DDIM-50 (the baseline ParaTAA must reproduce) --------
+    coeffs = ddim_coeffs(50)
+    xi = draw_noises(jax.random.PRNGKey(42), coeffs, (16, cfg.latent_dim))
+
+    def eps_fn(xw, taus):
+        y = jnp.full((xw.shape[0],), 3, jnp.int32)
+        return dit.dit_apply(params, cfg, xw, taus, y)
+
+    x_seq = sequential_sample(eps_fn, coeffs, xi)
+    print(f"sequential DDIM-50: 50 model evaluations")
+
+    # --- 3. ParaTAA ----------------------------------------------------------
+    solver = ParaTAAConfig(order_k=8, history_m=3, mode="taa", tau=1e-3)
+    traj, info = sample(eps_fn, coeffs, solver, xi)
+    err = float(jnp.linalg.norm(traj[0] - x_seq) / jnp.linalg.norm(x_seq))
+    print(f"ParaTAA:            {int(info['iters'])} parallel steps "
+          f"({50 / int(info['iters']):.1f}x fewer), rel err {err:.2e}")
+    assert err < 2e-2
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""The paper's primary contribution: ParaTAA — parallel sampling of diffusion
+models via triangular nonlinear equations + Triangular Anderson Acceleration."""
+from repro.core.coeffs import SolverCoeffs, ddim_coeffs, ddpm_coeffs, system_matrices
+from repro.core.parataa import ParaTAAConfig, sample, sample_recording
+
+__all__ = [
+    "SolverCoeffs", "ddim_coeffs", "ddpm_coeffs", "system_matrices",
+    "ParaTAAConfig", "sample", "sample_recording",
+]

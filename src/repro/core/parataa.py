@@ -1,0 +1,238 @@
+"""ParaTAA (Algorithm 1): parallel sampling of diffusion models with
+Triangular Anderson Acceleration.
+
+One driver covers FP / FP+ / AA / AA+ / TAA via `mode` + `order_k`:
+  * FP  (Shih et al. 2023)  : mode="fp",  order_k = window size
+  * FP+ (paper)             : mode="fp",  order_k tuned
+  * ParaTAA (paper)         : mode="taa", order_k & history_m tuned
+
+Each solver iteration evaluates eps_theta at `window` timesteps in ONE
+batched call — that batch is the parallel axis that gets sharded over the
+mesh (window folds into the denoiser's batch dim; see repro.launch.serve).
+
+The loop is a jax.lax.while_loop (jit-able end to end); a scan-based variant
+(`sample_recording`) records per-iteration residuals / iterates for the
+paper's figures and the early-stopping analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.coeffs import SolverCoeffs, system_matrices
+from repro.core.system import noise_term, first_order_residuals
+from repro.core.anderson import anderson_update
+
+
+@dataclasses.dataclass(frozen=True)
+class ParaTAAConfig:
+    order_k: int = 4           # order of the nonlinear system (Def. 2.1)
+    history_m: int = 3         # AA history size (m=1 ~ plain FP)
+    window: int = 0            # sliding window size w (0 => w = T)
+    mode: str = "taa"          # fp | aa | aa+ | taa
+    tau: float = 1e-3          # stopping tolerance
+    lam: float = 1e-8          # Gram regularizer (Remark 3.3)
+    s_max: int = 100           # max iterations
+    safeguard: bool = True     # Theorem 3.6 post-processing
+    t_init: int = 0            # 0 => fresh start (T_init = T)
+
+
+def _build_static(coeffs: SolverCoeffs, cfg: ParaTAAConfig):
+    T = coeffs.T
+    w = cfg.window if cfg.window else T
+    w = min(w, T)
+    k = min(cfg.order_k, T)
+    mats_k = system_matrices(coeffs, k)
+    mats_1 = system_matrices(coeffs, 1)
+    static = dict(
+        T=T, w=w, k=k,
+        lift_k=jnp.asarray(mats_k.lift, jnp.float32),
+        weps_k=jnp.asarray(mats_k.w_eps, jnp.float32),
+        wxi_k=jnp.asarray(mats_k.w_xi, jnp.float32),
+        a=jnp.asarray(coeffs.a, jnp.float32),
+        b=jnp.asarray(coeffs.b, jnp.float32),
+        c=jnp.asarray(coeffs.c, jnp.float32),
+        taus=jnp.asarray(coeffs.taus, jnp.float32),
+        thresh_scale=jnp.asarray(coeffs.g2[1:], jnp.float32),  # (T,) row t -> g2[t+1]
+    )
+    return static
+
+
+def _iterate(carry, static, cfg: ParaTAAConfig, eps_fn, xi, noise_k, thresh):
+    """One Algorithm-1 iteration.  Returns the new carry."""
+    T, w = static["T"], static["w"]
+    x, e = carry["x"], carry["e"]
+    D = x.shape[1]
+
+    t2 = carry["t2"]
+    t1 = jnp.maximum(0, t2 - w + 1)
+
+    # --- line 3: evaluate eps at window timesteps t1+1 .. t1+w in parallel --
+    xs = jax.lax.dynamic_slice(x, (t1 + 1, 0), (w, D))
+    taus_w = jax.lax.dynamic_slice(static["taus"], (t1 + 1,), (w,))
+    e_w = eps_fn(xs, taus_w).astype(e.dtype)
+    e = jax.lax.dynamic_update_slice(e, e_w, (t1 + 1, 0))
+
+    # --- update residual R = F^(k)(x, e) - x (rows 0..T-1) ------------------
+    F = static["lift_k"] @ x.astype(jnp.float32) \
+        + static["weps_k"] @ e.astype(jnp.float32) + noise_k
+    R = F - x[:T].astype(jnp.float32)
+
+    # --- lines 4-9: first-order residuals, window bookkeeping ---------------
+    # Deviation from Algorithm 1 (robustness fix, see DESIGN §7): rows above
+    # t2 are NOT hard-frozen — they keep taking the (cheap, eps-free) F^(k)
+    # polish with their stored e.  The k-th order system with FIXED e is
+    # linear-triangular and exactly first-order-consistent at its fixed
+    # point, so converged rows stay converged, while hard-freezing them at
+    # threshold-level error can deadlock lower rows whose (smaller)
+    # thresholds sit below the inherited error.  eps evaluations are still
+    # confined to the window — the compute saving is unchanged.
+    r = first_order_residuals((static["a"], static["b"], static["c"]), x, e, xi)
+    rows = jnp.arange(T)
+    active = rows >= t1
+    conv = r <= thresh
+    unconv = active & ~conv
+    any_unconv = jnp.any(unconv)
+    # highest unconverged active row
+    new_t2_active = T - 1 - jnp.argmax(jnp.flip(unconv))
+    # all active rows converged: done if t1 == 0, else slide the window down
+    new_t2 = jnp.where(any_unconv, new_t2_active,
+                       jnp.where(t1 == 0, jnp.int32(-1), t1 - 1))
+    done = new_t2 < 0
+    new_t1 = jnp.maximum(0, new_t2 - w + 1)
+    upd_mask = (rows >= new_t1) & ~done
+
+    # --- histories (Sec. 3 notation): write dF[(i-1) % m] = R^i - R^{i-1} ---
+    it = carry["it"]
+    m = cfg.history_m
+    dF = carry["dF"]
+    slot_prev = jnp.maximum(it - 1, 0) % m
+    dF_entry = jnp.where(it >= 1, R - carry["R_prev"], jnp.zeros_like(R))
+    dF = jax.lax.dynamic_update_index_in_dim(dF, dF_entry.astype(dF.dtype), slot_prev, 0)
+
+    # --- lines 10-11: accelerated update over the (new) window --------------
+    guard = None
+    if cfg.safeguard:
+        # rows whose entire suffix has converged (rows above new_t2 are
+        # frozen-converged by construction)
+        conv_or_frozen = conv | (rows > new_t2)
+        suffix_all = jnp.flip(jnp.cumprod(jnp.flip(conv_or_frozen.astype(jnp.int32))))
+        guard = jnp.concatenate([suffix_all[1:] > 0, jnp.array([True])])  # row T-1 suffix empty
+    mode = cfg.mode if cfg.history_m > 1 else "fp"
+    x_rows_new = anderson_update(
+        x[:T], R.astype(x.dtype), carry["dX"], dF, upd_mask,
+        mode=mode, lam=cfg.lam, safeguard_mask=guard)
+
+    x_new = jnp.concatenate([x_rows_new, x[T:]], axis=0)
+
+    # write dX[i % m] = x^{i+1} - x^i
+    slot = it % m
+    dX = jax.lax.dynamic_update_index_in_dim(
+        carry["dX"], (x_new[:T] - x[:T]).astype(carry["dX"].dtype), slot, 0)
+
+    return dict(
+        x=x_new, e=e, R_prev=R, dX=dX, dF=dF,
+        t2=new_t2, it=it + 1, done=done,
+        r_last=r, nfe=carry["nfe"] + w,
+    )
+
+
+def _init_carry(coeffs, cfg, static, xi, x_init, dtype):
+    T, w = static["T"], static["w"]
+    D = xi.shape[1]
+    t_init = cfg.t_init if cfg.t_init else T
+    if x_init is None:
+        x_init = xi  # standard Gaussian init (paper Sec. 5 setting)
+    x = x_init.astype(dtype)
+    # x_T is always the initial noise
+    x = x.at[T].set(xi[T].astype(dtype))
+    m = cfg.history_m
+    return dict(
+        x=x,
+        e=jnp.zeros((T + 1, D), dtype),
+        R_prev=jnp.zeros((T, D), jnp.float32),
+        dX=jnp.zeros((m, T, D), dtype),
+        dF=jnp.zeros((m, T, D), dtype),
+        t2=jnp.asarray(t_init - 1, jnp.int32),
+        it=jnp.asarray(0, jnp.int32),
+        done=jnp.asarray(False),
+        r_last=jnp.full((T,), jnp.inf, jnp.float32),
+        nfe=jnp.asarray(0, jnp.int32),
+    )
+
+
+def sample(eps_fn: Callable, coeffs: SolverCoeffs, cfg: ParaTAAConfig, xi,
+           x_init: Optional[jax.Array] = None, dtype=jnp.float32):
+    """Run ParaTAA to convergence (or s_max).
+
+    eps_fn: (x (w, *shape), taus (w,)) -> eps (w, *shape)
+    xi:     (T+1, *shape) noise draws (xi[T] = x_T)
+    x_init: optional (T+1, *shape) initialization trajectory (Sec. 4.2)
+    Returns (trajectory (T+1, *shape), info dict).
+    """
+    shape = xi.shape[1:]
+    D = int(np.prod(shape))
+    xi_f = xi.reshape(coeffs.T + 1, D)
+    x0_f = None if x_init is None else x_init.reshape(coeffs.T + 1, D)
+
+    def eps_flat(xw, taus_w):
+        return eps_fn(xw.reshape((-1,) + shape), taus_w).reshape(-1, D)
+
+    static = _build_static(coeffs, cfg)
+    mats_k = (static["lift_k"], static["weps_k"])
+    noise_k = static["wxi_k"] @ xi_f.astype(jnp.float32)
+    thresh = (cfg.tau ** 2) * static["thresh_scale"] * D
+
+    carry0 = _init_carry(coeffs, cfg, static, xi_f, x0_f, dtype)
+
+    def cond(c):
+        return (~c["done"]) & (c["it"] < cfg.s_max)
+
+    def body(c):
+        return _iterate(c, static, cfg, eps_flat, xi_f, noise_k, thresh)
+
+    out = jax.lax.while_loop(cond, body, carry0)
+    info = dict(iters=out["it"], nfe=out["nfe"], converged=out["done"],
+                residuals=out["r_last"])
+    return out["x"].reshape((coeffs.T + 1,) + shape), info
+
+
+def sample_recording(eps_fn, coeffs: SolverCoeffs, cfg: ParaTAAConfig, xi,
+                     x_init: Optional[jax.Array] = None, dtype=jnp.float32):
+    """Fixed-s_max scan variant that records per-iteration diagnostics:
+    residual vectors (s_max, T) and x_0 iterates (s_max, D) — used by the
+    benchmark reproductions of Figures 1, 2, 4, 6 and the early-stopping
+    analysis."""
+    shape = xi.shape[1:]
+    D = int(np.prod(shape))
+    xi_f = xi.reshape(coeffs.T + 1, D)
+    x0_f = None if x_init is None else x_init.reshape(coeffs.T + 1, D)
+
+    def eps_flat(xw, taus_w):
+        return eps_fn(xw.reshape((-1,) + shape), taus_w).reshape(-1, D)
+
+    static = _build_static(coeffs, cfg)
+    noise_k = static["wxi_k"] @ xi_f.astype(jnp.float32)
+    thresh = (cfg.tau ** 2) * static["thresh_scale"] * D
+
+    carry0 = _init_carry(coeffs, cfg, static, xi_f, x0_f, dtype)
+
+    def step(c, _):
+        c2 = jax.lax.cond(
+            c["done"],
+            lambda c: c,
+            lambda c: _iterate(c, static, cfg, eps_flat, xi_f, noise_k, thresh),
+            c)
+        rec = dict(r=c2["r_last"], x0=c2["x"][0], t2=c2["t2"], done=c2["done"])
+        return c2, rec
+
+    out, recs = jax.lax.scan(step, carry0, None, length=cfg.s_max)
+    info = dict(iters=out["it"], nfe=out["nfe"], converged=out["done"],
+                res_history=recs["r"], x0_history=recs["x0"],
+                t2_history=recs["t2"], done_history=recs["done"])
+    return out["x"].reshape((coeffs.T + 1,) + shape), info

@@ -1,0 +1,58 @@
+"""Triangular nonlinear system evaluation (Definition 2.1) + residuals.
+
+`apply_F` is the vectorized banded-matrix form used by the solver;
+`apply_F_literal` is a direct transcription of Definition 2.1 used as the
+test oracle (Theorem 2.2 equivalence tests compare the two and compare
+solutions across orders k).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.coeffs import SolverCoeffs, SystemMatrices, abar_prod, system_matrices
+
+
+def noise_term(mats: SystemMatrices, xi) -> jnp.ndarray:
+    """Constant part of F: (T, D) = w_xi @ xi (xi fixed for a sampling run)."""
+    w_xi = jnp.asarray(mats.w_xi, jnp.float32)
+    return jnp.einsum("ij,j...->i...", w_xi, xi.astype(jnp.float32))
+
+
+def apply_F(mats_f32, x, e, noise):
+    """F^(k)(x, e): rows 0..T-1.  mats_f32 = (lift, w_eps) as jnp arrays;
+    x, e: (T+1, D); noise: (T, D)."""
+    lift, w_eps = mats_f32
+    return lift @ x + w_eps @ e + noise
+
+
+def first_order_residuals(coeffs_f32, x, e, xi):
+    """Paper eq. (11): r_{t-1} = ||x_{t-1} - a_t x_t - b_t e_t - c_{t-1}
+    xi_{t-1}||^2, returned as (T,) with row index t-1."""
+    a, b, c = coeffs_f32
+    T = x.shape[0] - 1
+    pred = (a[1:, None] * x[1:] + b[1:, None] * e[1:] + c[:T, None] * xi[:T])
+    diff = x[:T] - pred
+    return jnp.sum(jnp.square(diff.astype(jnp.float32)), axis=tuple(range(1, diff.ndim)))
+
+
+# ---------------------------------------------------------------------------
+# Literal oracle (tests only — O(T*k) python loop over Definition 2.1)
+# ---------------------------------------------------------------------------
+
+
+def apply_F_literal(coeffs: SolverCoeffs, order: int, x, e, xi) -> np.ndarray:
+    """Direct transcription of Definition 2.1 in numpy (float64)."""
+    T, a, b, c = coeffs.T, coeffs.a, coeffs.b, coeffs.c
+    x = np.asarray(x, np.float64)
+    e = np.asarray(e, np.float64)
+    xi = np.asarray(xi, np.float64)
+    out = np.zeros((T,) + x.shape[1:], np.float64)
+    for t in range(1, T + 1):
+        tk = min(t + order - 1, T)
+        acc = abar_prod(a, t, tk) * x[tk]
+        for j in range(t, tk + 1):
+            acc = acc + abar_prod(a, t, j - 1) * b[j] * e[j]
+            acc = acc + abar_prod(a, t, j - 1) * c[j - 1] * xi[j - 1]
+        out[t - 1] = acc
+    return out

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, TokenPipeline, LatentPipeline
+
+__all__ = ["DataConfig", "TokenPipeline", "LatentPipeline"]

@@ -1,0 +1,46 @@
+"""Sequential reference samplers — the autoregressive procedure (paper eq. 6).
+
+These are the ground truth that parallel sampling must reproduce (Thm 2.2:
+the triangular system's unique solution IS this trajectory).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.coeffs import SolverCoeffs
+
+
+def draw_noises(key, coeffs: SolverCoeffs, shape):
+    """xi: (T+1, *shape); xi[T] is the initial noise x_T, xi[0..T-1] are the
+    per-step noises (scaled by c_t; zero-weight for ODE samplers)."""
+    return jax.random.normal(key, (coeffs.T + 1,) + tuple(shape), jnp.float32)
+
+
+def sequential_sample(eps_fn, coeffs: SolverCoeffs, xi, *, return_traj: bool = False):
+    """Runs eq. (6) exactly: T sequential eps evaluations.
+
+    eps_fn: (x (1,*shape), tau (1,)) -> (1,*shape)   [batched over timesteps]
+    xi:     (T+1, *shape) noises (xi[T] = x_T)
+    Returns x_0, or the full trajectory (T+1, *shape).
+    """
+    T = coeffs.T
+    a = jnp.asarray(coeffs.a, jnp.float32)
+    b = jnp.asarray(coeffs.b, jnp.float32)
+    c = jnp.asarray(coeffs.c, jnp.float32)
+    taus = jnp.asarray(coeffs.taus, jnp.float32)
+
+    def body(x_t, t):
+        # t runs T..1
+        e = eps_fn(x_t[None], taus[t][None])[0]
+        bc = (1,) * (x_t.ndim)
+        x_prev = a[t] * x_t + b[t] * e + c[t - 1] * xi[t - 1]
+        return x_prev, x_prev
+
+    ts = jnp.arange(T, 0, -1)
+    x0, traj_rev = jax.lax.scan(body, xi[T], ts)
+    if not return_traj:
+        return x0
+    # traj_rev holds x_{T-1}, ..., x_0; assemble (T+1, *shape) in index order
+    traj = jnp.concatenate([traj_rev[::-1], xi[T][None]], axis=0)
+    return traj

@@ -1,0 +1,115 @@
+"""Flash attention (forward) as a Pallas TPU kernel.
+
+Grid: (batch*heads, q_blocks, kv_blocks) — the kv axis is the minor
+(sequential) grid dimension, so VMEM scratch accumulators (acc, m, l) carry
+across kv iterations (the TPU grid is executed in order).  Per step the
+kernel holds one (bq, d) query tile and one (bk, d) key/value tile in VMEM,
+streams blocks from HBM, and maintains an online softmax.  Causal /
+sliding-window masking is applied from block-relative positions; fully
+masked blocks are skipped with pl.when (compute saving, the same trick the
+paper-era GPU kernels use via early exit).
+
+Block shapes default to (bq, d) = (128, head_dim) and bk = 128 — (8, 128)
+lane-aligned and MXU-shaped for d in {64, 128, 256}.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  bq: int, bk: int, causal: bool, window: int, t_total: int,
+                  s_total: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # absolute positions (queries right-aligned when s < t: offset t - s)
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+        + (t_total - s_total)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    # block-level skip: any (q, k) pair in this tile alive?
+    q_max = qi * bq + bq - 1 + (t_total - s_total)
+    q_min = qi * bq + (t_total - s_total)
+    k_min, k_max = ki * bk, ki * bk + bk - 1
+    alive = True
+    if causal:
+        alive = jnp.logical_and(alive, k_min <= q_max)
+    if window:
+        alive = jnp.logical_and(alive, k_max > q_min - window)
+
+    @pl.when(alive)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (bq, d)
+        k = k_ref[0].astype(jnp.float32)  # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * (1.0 / np.sqrt(q.shape[-1]))
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 128, bk: int = 128, interpret: bool = False):
+    """q: (B, H, S, D); k, v: (B, H, T, D) -> (B, H, S, D)."""
+    b, h, s, d = q.shape
+    t = k.shape[2]
+    assert s % bq == 0 and t % bk == 0, (s, t, bq, bk)
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, t, d)
+    vf = v.reshape(b * h, t, d)
+    grid = (b * h, s // bq, t // bk)
+
+    kernel = functools.partial(_flash_kernel, bq=bq, bk=bk, causal=causal,
+                               window=window, t_total=t, s_total=s)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        scratch_shapes=[
+            # f32 accumulators persist across the (sequential) kv grid dim
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)

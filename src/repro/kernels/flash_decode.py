@@ -1,0 +1,118 @@
+"""GQA flash decode as a Pallas TPU kernel (one new token vs a long cache).
+
+Decode attention is memory-bound: the cost is streaming the KV cache from
+HBM once.  Grid: (batch, kv_blocks) with kv sequential — f32 accumulators
+(per q-head) carry in VMEM scratch across kv blocks; each step loads one
+(bk, KV, D) cache tile.  GQA is handled in-kernel: queries arrive grouped as
+(KV, G, D) and scores are computed per kv-head against its G query heads —
+the cache is NOT repeated in HBM (that would multiply the bandwidth cost by
+G, defeating GQA).  Validity masking via per-batch `lengths` supports both
+growing caches and ring buffers (caller maps ring slots to validity).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                   *, bk: int, kv: int, g: int, d: int,
+                   ks_ref=None, vs_ref=None):
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[0]
+    base = ki * bk
+
+    @pl.when(base < length)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32).reshape(kv * g, d)    # (KV*G, D)
+        k = k_ref[0].astype(jnp.float32)                        # (bk, KV, D)
+        v = v_ref[0].astype(jnp.float32)
+        if ks_ref is not None:  # int8 cache: dequantize in VMEM — the HBM
+            k = k * ks_ref[0].astype(jnp.float32)[..., None]    # stream stays 1B/elem
+            v = v * vs_ref[0].astype(jnp.float32)[..., None]
+        # scores per kv head against its group of q heads
+        kt = k.transpose(1, 0, 2)                               # (KV, bk, D)
+        qg = q.reshape(kv, g, d)
+        s = jax.lax.dot_general(qg, kt, (((2,), (2,)), ((0,), (0,))),
+                                preferred_element_type=jnp.float32)  # (KV, G, bk)
+        s = s * (1.0 / np.sqrt(d))
+        pos = base + jax.lax.broadcasted_iota(jnp.int32, (kv, g, bk), 2)
+        s = jnp.where(pos < length, s, NEG_INF)
+        s2 = s.reshape(kv * g, bk)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s2, axis=1, keepdims=True))
+        p = jnp.exp(s2 - m_new)                                 # (KV*G, bk)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        vt = v.transpose(1, 0, 2)                               # (KV, bk, D)
+        pv = jax.lax.dot_general(p.reshape(kv, g, bk), vt,
+                                 (((2,), (1,)), ((0,), (0,))),
+                                 preferred_element_type=jnp.float32)  # (KV, G, D)
+        acc_ref[...] = acc_ref[...] * alpha + pv.reshape(kv * g, d)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode(q, k_cache, v_cache, lengths, *, k_scale=None, v_scale=None,
+                 bk: int = 256, interpret: bool = False):
+    """q: (B, H, D); k/v_cache: (B, T, KV, D); lengths: (B,) -> (B, H, D).
+
+    Pass k_scale/v_scale (B, T, KV) with int8 caches: the kernel streams
+    1 byte/element from HBM and dequantizes in VMEM."""
+    b, h, d = q.shape
+    t, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    assert t % bk == 0, (t, bk)
+    quant = k_scale is not None
+    grid = (b, t // bk)
+    in_specs = [
+        pl.BlockSpec((1,), lambda bi, ki: (bi,), memory_space=pltpu.SMEM),
+        pl.BlockSpec((1, h, d), lambda bi, ki: (bi, 0, 0)),
+        pl.BlockSpec((1, bk, kv, d), lambda bi, ki: (bi, ki, 0, 0)),
+        pl.BlockSpec((1, bk, kv, d), lambda bi, ki: (bi, ki, 0, 0)),
+    ]
+    args = [lengths.astype(jnp.int32), q, k_cache, v_cache]
+    if quant:
+        in_specs += [pl.BlockSpec((1, bk, kv), lambda bi, ki: (bi, ki, 0)),
+                     pl.BlockSpec((1, bk, kv), lambda bi, ki: (bi, ki, 0))]
+        args += [k_scale, v_scale]
+
+        def kernel(len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+                   acc_ref, m_ref, l_ref):
+            _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref,
+                           m_ref, l_ref, bk=bk, kv=kv, g=g, d=d,
+                           ks_ref=ks_ref, vs_ref=vs_ref)
+    else:
+        kernel = functools.partial(_decode_kernel, bk=bk, kv=kv, g=g, d=d)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, h, d), lambda bi, ki: (bi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((h, d), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*args)
+    return out

@@ -1,0 +1,87 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Dispatch: `use_pallas=None` (default) auto-selects — the compiled kernels on
+TPU backends, the pure-jnp references on CPU (XLA:CPU cannot lower TPU
+pallas_call; interpret mode is for correctness tests, not speed).  Tests
+pass use_pallas=True + interpret=True explicitly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import flash_attention as _flash_attention
+from repro.kernels.flash_decode import flash_decode as _flash_decode
+from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
+from repro.kernels.rglru_scan import rglru_scan_kernel as _rglru_scan
+from repro.kernels.taa_update import taa_gram as _taa_gram, taa_apply as _taa_apply
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pick(use_pallas: Optional[bool]) -> bool:
+    return _on_tpu() if use_pallas is None else use_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "use_pallas", "interpret"))
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              use_pallas: Optional[bool] = None, interpret: bool = False):
+    """q: (B,H,S,D); k, v: (B,H,T,D) -> (B,H,S,D)."""
+    if _pick(use_pallas):
+        return _flash_attention(q, k, v, causal=causal, window=window,
+                                interpret=interpret)
+    return _ref.attention_ref(q, k, v, causal=causal, window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def decode_attention(q, k_cache, v_cache, lengths, *,
+                     use_pallas: Optional[bool] = None, interpret: bool = False):
+    """q: (B,H,D); caches (B,T,KV,D); lengths (B,) -> (B,H,D)."""
+    if _pick(use_pallas):
+        return _flash_decode(q, k_cache, v_cache, lengths, interpret=interpret)
+    return _ref.decode_ref(q, k_cache, v_cache, lengths)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_pallas", "interpret"))
+def ssd(x, dt, A, B, C, *, chunk: int = 128,
+        use_pallas: Optional[bool] = None, interpret: bool = False):
+    """Mamba2 SSD scan.  Returns (y, final_state)."""
+    if _pick(use_pallas):
+        return _ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=interpret)
+    return _ref.ssd_ref(x, dt, A, B, C)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def rglru(a, b, *, use_pallas: Optional[bool] = None, interpret: bool = False):
+    """Linear recurrence h_t = a_t h_{t-1} + b_t over axis 1."""
+    if _pick(use_pallas):
+        return _rglru_scan(a, b, interpret=interpret)
+    return _ref.rglru_ref(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "use_pallas", "interpret"))
+def taa_rowwise_gamma(dF, R, mask, *, lam: float = 1e-8,
+                      use_pallas: Optional[bool] = None, interpret: bool = False):
+    """Per-row TAA gammas via suffix-cumsum Grams (Theorem 3.2)."""
+    if _pick(use_pallas):
+        G, u = _taa_gram(dF, R, mask, interpret=interpret)
+    else:
+        G, u = _ref.taa_gram_ref(dF, R, mask)
+    m = dF.shape[0]
+    Gs = jnp.flip(jnp.cumsum(jnp.flip(G, 0), 0), 0) + lam * jnp.eye(m)
+    us = jnp.flip(jnp.cumsum(jnp.flip(u, 0), 0), 0)
+    return jnp.linalg.solve(Gs, us[..., None])[..., 0]
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def taa_apply(x, R, dX, dF, gamma, mask, *,
+              use_pallas: Optional[bool] = None, interpret: bool = False):
+    if _pick(use_pallas):
+        return _taa_apply(x, R, dX, dF, gamma, mask, interpret=interpret)
+    return _ref.taa_apply_ref(x, R, dX, dF, gamma, mask)

@@ -1,0 +1,111 @@
+"""Mamba2 SSD chunked scan as a Pallas TPU kernel.
+
+Grid: (batch, heads, n_chunks) — chunks sequential (minor grid dim) so the
+(P, N) state carries in VMEM scratch.  Per chunk the kernel computes the
+intra-chunk quadratic term (two (Q,N)/(Q,Q) MXU matmuls with a decay mask),
+folds in the inter-chunk state contribution, and updates the carried state —
+the TPU-native mapping of the SSD algorithm: all heavy ops are matmuls over
+(chunk x state)-shaped tiles, the sequential dependency is only chunk-to-
+chunk through a (P, N) tile that never leaves VMEM.
+
+Single-group (G=1) layout, matching mamba2-1.3b.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, fs_ref, state_ref,
+                *, q: int, p: int, n: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (Q, 1)... stored (Q,)
+    A = a_ref[0]                              # scalar (per head)
+    B = b_ref[0].astype(jnp.float32)          # (Q, N)
+    C = c_ref[0].astype(jnp.float32)          # (Q, N)
+
+    la = dt * A                               # (Q,) log decay per step (<= 0)
+    cum = jnp.cumsum(la)                      # inclusive
+    seg = cum[-1]
+
+    # intra-chunk: scores[i, j] = (C_i . B_j) * exp(cum_i - cum_j) * dt_j, j <= i
+    cb = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    dec = jnp.where(jj <= ii, jnp.exp(cum[:, None] - cum[None, :]), 0.0)
+    w = cb * dec * dt[None, :]                # (Q, Q)
+    y = jax.lax.dot(w, x, preferred_element_type=jnp.float32)    # (Q, P)
+
+    # inter-chunk: y_i += (C_i exp(cum_i)) @ state^T ; state: (P, N)
+    c_dec = C * jnp.exp(cum)[:, None]         # (Q, N)
+    y = y + jax.lax.dot_general(c_dec, state_ref[...],
+                                (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (Q, P)
+
+    # state update: state = exp(seg) * state + sum_j exp(seg - cum_j) dt_j x_j (x) B_j
+    wj = jnp.exp(seg - cum) * dt              # (Q,)
+    xs = x * wj[:, None]                      # (Q, P)
+    s_new = jax.lax.dot_general(xs, B, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (P, N)
+    state_ref[...] = state_ref[...] * jnp.exp(seg) + s_new
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        fs_ref[0] = state_ref[...].astype(fs_ref.dtype)
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 128, interpret: bool = False):
+    """x: (b, s, h, p); dt: (b, s, h) post-softplus; A: (h,) negative;
+    B, C: (b, s, n) single group -> (y (b,s,h,p), final_state (b,h,p,n))."""
+    bsz, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    # layouts: per (batch, head) streams
+    xt = x.transpose(0, 2, 1, 3).reshape(bsz * h, s, p)
+    dtt = dt.transpose(0, 2, 1).reshape(bsz * h, s)
+    bt = jnp.broadcast_to(B[:, None], (bsz, h, s, n)).reshape(bsz * h, s, n)
+    ct = jnp.broadcast_to(C[:, None], (bsz, h, s, n)).reshape(bsz * h, s, n)
+    at = jnp.broadcast_to(A[None, :], (bsz, h)).reshape(bsz * h)
+
+    grid = (bsz, h, nc)
+    kernel = functools.partial(_ssd_kernel, q=chunk, p=p, n=n)
+    y, fs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda bi, hi, ci: (bi * pl.num_programs(1) + hi, ci, 0)),
+            pl.BlockSpec((1, chunk), lambda bi, hi, ci: (bi * pl.num_programs(1) + hi, ci)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (bi * pl.num_programs(1) + hi,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi * pl.num_programs(1) + hi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi * pl.num_programs(1) + hi, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda bi, hi, ci: (bi * pl.num_programs(1) + hi, ci, 0)),
+            pl.BlockSpec((1, p, n), lambda bi, hi, ci: (bi * pl.num_programs(1) + hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz * h, s, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz * h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, at, bt, ct)
+    y = y.reshape(bsz, h, s, p).transpose(0, 2, 1, 3)
+    fs = fs.reshape(bsz, h, p, n)
+    return y, fs

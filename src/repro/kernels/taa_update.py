@@ -1,0 +1,119 @@
+"""Fused TAA (Theorem 3.2) building blocks as Pallas TPU kernels.
+
+The suffix-cumsum reformulation (see repro.core.anderson) reduces TAA to:
+  1. per-row Gram blocks  G_t = F_t^T F_t (m x m), u_t = F_t^T R_t (m)
+  2. a reverse cumsum over t + T tiny (m x m) solves         [host jnp]
+  3. the update x_t + R_t - (dX_t + dF_t)^T gamma_t
+
+Steps 1 and 3 are memory-bound passes over the (m, T, D) histories; these
+kernels fuse each into a single HBM sweep.  Grid: (T, d_blocks) with the
+d-axis sequential so the (m, m)/(m,) partials accumulate in VMEM scratch.
+m is padded to 8 (sublane) — the Gram tile stays in registers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gram_kernel(df_ref, r_ref, mask_ref, g_ref, u_ref, acc_g, acc_u, *,
+                 m: int, bd: int):
+    di = pl.program_id(1)
+    nd = pl.num_programs(1)
+
+    @pl.when(di == 0)
+    def _init():
+        acc_g[...] = jnp.zeros_like(acc_g)
+        acc_u[...] = jnp.zeros_like(acc_u)
+
+    w = mask_ref[0]
+    df = df_ref[:, 0].astype(jnp.float32) * w  # (m, bd)
+    r = r_ref[0].astype(jnp.float32) * w       # (bd,)
+    acc_g[...] += jax.lax.dot_general(df, df, (((1,), (1,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+    acc_u[...] += (df @ r)[:, None]
+
+    @pl.when(di == nd - 1)
+    def _final():
+        g_ref[0] = acc_g[...]
+        u_ref[0] = acc_u[...][:, 0]
+
+
+def taa_gram(dF, R, mask, *, bd: int = 512, interpret: bool = False):
+    """dF: (m, T, D); R: (T, D); mask: (T,) f32 -> (G (T,m,m), u (T,m))."""
+    m, t, d = dF.shape
+    pad = (-d) % bd
+    if pad:
+        dF = jnp.pad(dF, ((0, 0), (0, 0), (0, pad)))
+        R = jnp.pad(R, ((0, 0), (0, pad)))
+    dpad = d + pad
+    grid = (t, dpad // bd)
+    kernel = functools.partial(_gram_kernel, m=m, bd=bd)
+    g, u = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, 1, bd), lambda ti, di: (0, ti, di)),
+            pl.BlockSpec((1, bd), lambda ti, di: (ti, di)),
+            pl.BlockSpec((1,), lambda ti, di: (ti,), memory_space=pltpu.SMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, m, m), lambda ti, di: (ti, 0, 0)),
+            pl.BlockSpec((1, m), lambda ti, di: (ti, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, m, m), jnp.float32),
+            jax.ShapeDtypeStruct((t, m), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((m, m), jnp.float32),
+                        pltpu.VMEM((m, 1), jnp.float32)],
+        interpret=interpret,
+    )(dF, R, mask)
+    return g, u
+
+
+def _apply_kernel(x_ref, r_ref, dx_ref, df_ref, gam_ref, mask_ref, o_ref, *,
+                  m: int, bd: int):
+    w = mask_ref[0]
+    x = x_ref[0].astype(jnp.float32)           # (bd,)
+    r = r_ref[0].astype(jnp.float32)
+    hist = dx_ref[:, 0].astype(jnp.float32) + df_ref[:, 0].astype(jnp.float32)  # (m, bd)
+    gam = gam_ref[0].astype(jnp.float32)       # (m,)
+    corr = gam @ hist                          # (bd,)
+    o_ref[0] = jnp.where(w > 0, x + r - corr, x).astype(o_ref.dtype)
+
+
+def taa_apply(x, R, dX, dF, gamma, mask, *, bd: int = 512,
+              interpret: bool = False):
+    """x, R: (T, D); dX, dF: (m, T, D); gamma: (T, m); mask: (T,) f32 ->
+    x + mask * (R - (dX + dF)^T gamma)."""
+    m, t, d = dX.shape
+    pad = (-d) % bd
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        R = jnp.pad(R, ((0, 0), (0, pad)))
+        dX = jnp.pad(dX, ((0, 0), (0, 0), (0, pad)))
+        dF = jnp.pad(dF, ((0, 0), (0, 0), (0, pad)))
+    dpad = d + pad
+    grid = (t, dpad // bd)
+    kernel = functools.partial(_apply_kernel, m=m, bd=bd)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bd), lambda ti, di: (ti, di)),
+            pl.BlockSpec((1, bd), lambda ti, di: (ti, di)),
+            pl.BlockSpec((m, 1, bd), lambda ti, di: (0, ti, di)),
+            pl.BlockSpec((m, 1, bd), lambda ti, di: (0, ti, di)),
+            pl.BlockSpec((1, m), lambda ti, di: (ti, 0)),
+            pl.BlockSpec((1,), lambda ti, di: (ti,), memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, bd), lambda ti, di: (ti, di)),
+        out_shape=jax.ShapeDtypeStruct((t, dpad), x.dtype),
+        interpret=interpret,
+    )(x, R, dX, dF, gamma, mask)
+    return out[:, :d]

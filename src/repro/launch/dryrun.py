@@ -1,0 +1,461 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  This module is the multi-pod dry-run: it lowers +
+# compiles every (architecture x input-shape x mesh) cell against the
+# production meshes and extracts memory / cost / collective analysis for the
+# roofline tables (EXPERIMENTS.md SS Dry-run / Roofline).
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCHS, ASSIGNED, get_arch, get_shape
+from repro.launch.mesh import make_production_mesh
+from repro.launch import steps as S
+from repro.models.shardctx import use_mesh
+from repro.models import runconfig
+from repro.roofline import analysis as RA
+
+# unroll the blocked-attention KV scan so cost_analysis counts every block
+# (layer stacks stay rolled — per-layer cost is extrapolated from L=1 / L=2)
+runconfig.set_unroll_scans(True)
+
+
+def _lower_and_compile(cfg, shape, mesh):
+    """Lower + compile one step for (cfg, shape) on mesh.  Returns
+    (compiled, t_lower, t_compile)."""
+    t0 = time.time()
+    params, opt = S.abstract_model_state(cfg, mesh, with_opt=(shape.kind == "train"))
+    inputs = S.input_specs(cfg, shape, mesh)
+    if shape.kind == "train":
+        fn = S.make_train_step(cfg, grad_accum=cfg.train_grad_accum)
+        step_sds = jax.ShapeDtypeStruct((), jnp.int32)
+        jitted = jax.jit(fn, donate_argnums=(0, 1))
+        lowered = jitted.lower(params, opt, inputs, step_sds)
+    elif shape.kind == "prefill":
+        cache = S.abstract_cache(cfg, shape, mesh)
+        jitted = jax.jit(S.make_prefill_step(cfg), donate_argnums=(2,))
+        lowered = jitted.lower(params, inputs["inputs"], cache)
+    else:  # decode
+        cache = S.abstract_cache(cfg, shape, mesh)
+        jitted = jax.jit(S.make_decode_step(cfg), donate_argnums=(2,))
+        lowered = jitted.lower(params, inputs["token"], cache)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    return compiled, t_lower, time.time() - t0
+
+
+def _loss_cost(cfg, shape, mesh):
+    """Standalone value_and_grad(loss) compile at MICROBATCH size (scans
+    unrolled): counts everything in the loss except the rolled layer stack
+    (which _layer_cost covers), per microbatch."""
+    ga = cfg.train_grad_accum
+    mb_shape = dataclasses.replace(shape, global_batch=shape.global_batch // ga)
+    params, _ = S.abstract_model_state(cfg, mesh, with_opt=False)
+    inputs = S.input_specs(cfg, mb_shape, mesh)
+    loss_fn = S.make_loss_fn(cfg)
+    lowered = jax.jit(lambda p, b: jax.value_and_grad(loss_fn)(p, b)).lower(params, inputs)
+    return _cost_of(lowered.compile())
+
+
+def _cost_of(compiled):
+    cost = compiled.cost_analysis()
+    coll = RA.parse_collective_bytes(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            coll)
+
+
+def _layer_cost(cfg, shape, mesh):
+    """Per-scan-unit cost from a STANDALONE compile.
+
+    XLA's cost_analysis attributes zero cost to while-loop bodies, so the
+    rolled layer scan reports only the non-loop part.  We therefore compile
+    one scan unit (a layer, or a period group for hybrids) as its own program
+    — same shardings, same remat policy, with grad for train shapes — and
+    extrapolate: total = const(full compile) + n_units * unit.  Everything
+    still comes from compiled artifacts.  Returns ((flops, bytes, coll),
+    n_units).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.models import backbone as B
+    from repro.models import pdefs
+    from repro.models.pdefs import resolve_axis
+
+    if cfg.is_hybrid:
+        group_kinds, n_units, _ = B.hybrid_layout(cfg)
+        defs = {f"l{j}": B._layer_def(cfg, k) for j, k in enumerate(group_kinds)}
+
+        def unit_apply(lp, h, pos, cache, mode):
+            nc = {}
+            for j, k in enumerate(group_kinds):
+                lc = cache[f"l{j}"] if cache is not None else None
+                h, c, _ = B._apply_layer(cfg, k, lp[f"l{j}"], h, pos,
+                                         mode=mode, cache=lc, causal=True)
+                nc[f"l{j}"] = c
+            return h, nc
+    else:
+        kind = cfg.layer_kinds()[0]
+        n_units = cfg.num_layers
+        defs = B._layer_def(cfg, kind)
+
+        def unit_apply(lp, h, pos, cache, mode):
+            h, nc, _ = B._apply_layer(cfg, kind, lp, h, pos, mode=mode,
+                                      cache=cache, causal=True)
+            return h, nc
+
+    lparams = pdefs.abstract_params(defs, mesh, dtype=S.PARAM_DTYPE)
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        b //= cfg.train_grad_accum  # per-microbatch unit cost
+    s_eff = 1 if shape.kind == "decode" else s
+    ba = resolve_axis("embed", b, mesh)
+    h_sds = jax.ShapeDtypeStruct((b, s_eff, cfg.d_model), S.PARAM_DTYPE,
+                                 sharding=NamedSharding(mesh, P(ba, None, None)))
+    pos_shape = (3, b, s_eff) if cfg.m_rope else (b, s_eff)
+    pos_sds = jax.ShapeDtypeStruct(pos_shape, jnp.int32,
+                                   sharding=NamedSharding(mesh, P()))
+
+    mode = shape.kind if shape.kind != "train" else "train"
+    cache_sds = None
+    if mode in ("prefill", "decode"):
+        full_cache = S.abstract_cache(cfg, shape, mesh)
+        if cfg.is_hybrid:
+            full_cache = full_cache["periods"]
+        # one unit's slice of the stacked cache
+        cache_sds = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(
+                x.shape[1:], x.dtype,
+                sharding=NamedSharding(
+                    mesh, jax.sharding.PartitionSpec(*x.sharding.spec[1:]))),
+            full_cache)
+
+    if mode == "train":
+        def fn(lp, h, pos):
+            def lf(lp, h):
+                out, _ = unit_apply(lp, h, pos, None, mode)
+                return jnp.sum(out.astype(jnp.float32))
+            lf = jax.checkpoint(lf, policy=B.REMAT_POLICY)
+            l, grads = jax.value_and_grad(lf, argnums=(0, 1))(lp, h)
+            return l, grads
+        lowered = jax.jit(fn).lower(lparams, h_sds, pos_sds)
+    else:
+        def fn(lp, h, pos, cache):
+            return unit_apply(lp, h, pos, cache, mode)
+        lowered = jax.jit(fn, donate_argnums=(3,)).lower(lparams, h_sds, pos_sds, cache_sds)
+    compiled = lowered.compile()
+    return _cost_of(compiled), n_units
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True) -> dict:
+    cfg = get_arch(arch_name)
+    shape = get_shape(shape_name)
+    ok, reason = cfg.supports_shape(shape)
+    if not ok:
+        return {"arch": arch_name, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    rec = {"arch": arch_name, "shape": shape_name,
+           "mesh": "multi" if multi_pod else "single", "chips": chips,
+           "status": "error"}
+    with use_mesh(mesh):
+        # --- compile A (scans rolled): memory_analysis = the "it fits" proof,
+        # with one microbatch / one CE chunk / one layer live at a time.
+        runconfig.set_unroll_scans(False)
+        compiled, t_lower, t_compile = _lower_and_compile(cfg, shape, mesh)
+        mem = compiled.memory_analysis()
+        f_full, b_full, coll_full = _cost_of(compiled)
+
+        # --- cost accounting: XLA costs a while-loop body at ZERO, so the
+        # full compile reports only non-loop code (optimizer update, embeds,
+        # hybrid tail layers, ...).  The rest is assembled from standalone
+        # compiles with inner scans unrolled:
+        #   train:  total = const + ga * (loss_microbatch + n_units * unit)
+        #   serve:  total = const + n_units * unit
+        # where a unit is a layer (homogeneous) or a period group (hybrid).
+        # DiT stacks are python loops (unrolled in HLO): full compile exact.
+        runconfig.set_unroll_scans(True)
+        ga = cfg.train_grad_accum
+        if cfg.is_diffusion:
+            (f_l, b_l, coll_l), n_units = (0.0, 0.0, {}), 0
+        else:
+            (f_l, b_l, coll_l), n_units = _layer_cost(cfg, shape, mesh)
+        if shape.kind == "train":
+            f_loss, b_loss, coll_loss = _loss_cost(cfg, shape, mesh)
+            flops = f_full + ga * (f_loss + n_units * f_l)
+            bytes_acc = b_full + ga * (b_loss + n_units * b_l)
+            coll = {k: coll_full[k] + ga * (coll_loss.get(k, 0) + n_units * coll_l.get(k, 0))
+                    for k in coll_full}
+        else:
+            flops = f_full + n_units * f_l
+            bytes_acc = b_full + n_units * b_l
+            coll = {k: coll_full[k] + n_units * coll_l.get(k, 0) for k in coll_full}
+
+    coll_bytes = float(sum(coll.values()))
+    terms = RA.roofline_terms(flops, bytes_acc, coll_bytes)
+    mf = RA.model_flops(cfg, shape)
+
+    rec.update(
+        status="ok",
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        # memory_analysis (per device)
+        argument_bytes=getattr(mem, "argument_size_in_bytes", None),
+        output_bytes=getattr(mem, "output_size_in_bytes", None),
+        temp_bytes=getattr(mem, "temp_size_in_bytes", None),
+        peak_bytes=(getattr(mem, "argument_size_in_bytes", 0)
+                    + getattr(mem, "temp_size_in_bytes", 0)),
+        fits_hbm=bool((getattr(mem, "argument_size_in_bytes", 0)
+                       + getattr(mem, "temp_size_in_bytes", 0)) < RA.HBM_PER_CHIP),
+        # cost analysis (per device, depth-extrapolated)
+        flops_per_chip=flops, bytes_per_chip=bytes_acc,
+        collective_bytes_per_chip=coll_bytes, collective_breakdown=coll,
+        # roofline
+        compute_s=terms.compute_s, memory_s=terms.memory_s,
+        collective_s=terms.collective_s, dominant=terms.dominant,
+        model_flops_global=mf,
+        model_flops_ratio=(mf / (flops * chips)) if flops else None,
+    )
+    if verbose:
+        print(f"[{rec['mesh']}] {arch_name} x {shape_name}: "
+              f"compile {t_compile:.1f}s, "
+              f"compute {terms.compute_s*1e3:.2f}ms / mem {terms.memory_s*1e3:.2f}ms / "
+              f"coll {terms.collective_s*1e3:.2f}ms -> {terms.dominant}-bound; "
+              f"peak {rec['peak_bytes']/1e9:.2f} GB/chip "
+              f"(fits={rec['fits_hbm']}) mf-ratio={rec['model_flops_ratio'] and round(rec['model_flops_ratio'],3)}")
+        print("  memory_analysis:", mem)
+    return rec
+
+
+def run_parataa_cell(multi_pod: bool, *, T: int = 100, window: int = 64,
+                     n_samples: int = 8, history_m: int = 3,
+                     shard_samples: bool = False, dp_full: bool = False,
+                     verbose: bool = True) -> dict:
+    """The paper's own workload as a mesh cell: batched ParaTAA sampling with
+    the full DiT-XL denoiser.  The window-of-timesteps x samples batch
+    (n_samples * window DiT forwards per iteration) folds into the denoiser
+    batch and shards over `data`; DiT is TP-sharded over `model`.
+
+    Memory: full while-loop program.  Cost: one solver iteration compiled
+    standalone (eps window eval + residuals + TAA update) — multiply by the
+    measured iteration count (benchmarks: ~7-20) for end-to-end cost.
+    """
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import ParaTAAConfig, ddim_coeffs, sample
+    from repro.core.coeffs import system_matrices
+    from repro.core.anderson import anderson_update
+    from repro.core.system import first_order_residuals
+    from repro.diffusion import dit as dit_mod
+    from repro.models import pdefs
+
+    cfg = get_arch("dit-xl")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    rec = {"arch": "dit-xl", "shape": "parataa_serve",
+           "mesh": "multi" if multi_pod else "single", "chips": chips,
+           "status": "error", "T": T, "window": window, "n_samples": n_samples}
+    coeffs = ddim_coeffs(T)
+    n_tok, latent = 256, cfg.latent_dim
+    D = n_tok * latent
+
+    with use_mesh(mesh):
+        if dp_full:
+            # hillclimb C2: serving a 675M-param denoiser does not need TP —
+            # replicate params (1.35 GB bf16), shard the window-batch over
+            # ALL mesh axes => zero per-layer collectives
+            defs = dit_mod.dit_defs(cfg)
+            params = jax.tree.map(
+                lambda d: jax.ShapeDtypeStruct(
+                    d.shape, jnp.dtype(d.dtype) if d.dtype else S.PARAM_DTYPE,
+                    sharding=NamedSharding(mesh, P())),
+                defs, is_leaf=pdefs.is_def)
+        else:
+            params = pdefs.abstract_params(dit_mod.dit_defs(cfg), mesh,
+                                           dtype=S.PARAM_DTYPE)
+        solver = ParaTAAConfig(order_k=8, history_m=history_m, window=window,
+                               mode="taa", s_max=2 * T)
+
+        # --- memory: the full batched sampling program (rolled while loop)
+        runconfig.set_unroll_scans(False)
+        # optimized sharding (hillclimb C1): sample axis over `data` makes
+        # the solver state chip-local; baseline replicates it
+        samp_ax = "data" if (shard_samples and n_samples % 16 == 0) else None
+        xi_sds = jax.ShapeDtypeStruct(
+            (n_samples, T + 1, n_tok, latent), jnp.float32,
+            sharding=NamedSharding(mesh, P(samp_ax, None, None, None)))
+        lab_sds = jax.ShapeDtypeStruct((n_samples,), jnp.int32,
+                                       sharding=NamedSharding(mesh, P(samp_ax)))
+
+        def serve(params, xis, labels):
+            def one(xi, label):
+                def eps_fn(xw, taus):
+                    y = jnp.full((xw.shape[0],), label, jnp.int32)
+                    return dit_mod.dit_apply(params, cfg, xw, taus, y)
+                traj, info = sample(eps_fn, coeffs, solver, xi)
+                return traj[0], info["iters"]
+            return jax.vmap(one)(xis, labels)
+
+        t0 = time.time()
+        compiled = jax.jit(serve).lower(params, xi_sds, lab_sds).compile()
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+
+        # --- cost: one solver iteration standalone (window eval + update)
+        mats = system_matrices(coeffs, solver.order_k)
+        lift = jnp.asarray(mats.lift, jnp.float32)
+        weps = jnp.asarray(mats.w_eps, jnp.float32)
+        a = jnp.asarray(coeffs.a, jnp.float32)
+        b = jnp.asarray(coeffs.b, jnp.float32)
+        c = jnp.asarray(coeffs.c, jnp.float32)
+        taus = jnp.asarray(coeffs.taus, jnp.float32)
+
+        def iteration(params, x, e, dX, dF, xi, labels, t1):
+            # batched window eval: (n_samples * window) DiT forwards
+            xs = jax.vmap(lambda xv, t: jax.lax.dynamic_slice(
+                xv, (t + 1, 0), (window, D)))(x, t1)
+            taus_w = jax.lax.dynamic_slice(taus, (t1[0] + 1,), (window,))
+            xw = xs.reshape(n_samples * window, n_tok, latent)
+            if dp_full:  # window-batch over every chip (C2)
+                xw = jax.lax.with_sharding_constraint(
+                    xw, NamedSharding(mesh, P(tuple(mesh.axis_names), None, None)))
+            y = jnp.repeat(labels, window)
+            eps = dit_mod.dit_apply(params, cfg, xw,
+                                    jnp.tile(taus_w, n_samples), y)
+            e_w = eps.reshape(n_samples, window, D)
+            e = jax.vmap(lambda ev, w, t: jax.lax.dynamic_update_slice(
+                ev, w, (t + 1, 0)))(e, e_w, t1)
+            # residual + TAA update per sample
+            def upd(xv, ev, dXv, dFv, xiv):
+                F = lift @ xv + weps @ ev + (jnp.asarray(mats.w_xi, jnp.float32) @ xiv)
+                R = F - xv[:T]
+                r = first_order_residuals((a, b, c), xv, ev, xiv)
+                maskv = jnp.ones((T,), bool)
+                x_new = anderson_update(xv[:T], R, dXv, dFv, maskv,
+                                        mode="taa", lam=solver.lam)
+                return jnp.concatenate([x_new, xv[T:]], 0), r
+            x, r = jax.vmap(upd)(x, e, dX, dF, xi)
+            return x, e, r
+
+        sds = lambda shp: jax.ShapeDtypeStruct(
+            shp, jnp.float32, sharding=NamedSharding(mesh, P(samp_ax, *([None] * (len(shp) - 1)))))
+        runconfig.set_unroll_scans(True)
+        import contextlib
+        from repro.models.shardctx import batch_axes
+        ctx = (batch_axes(mesh.axis_names) if dp_full else contextlib.nullcontext())
+        with ctx:
+            it_lowered = jax.jit(iteration).lower(
+            params, sds((n_samples, T + 1, D)), sds((n_samples, T + 1, D)),
+            sds((n_samples, history_m, T, D)), sds((n_samples, history_m, T, D)),
+            sds((n_samples, T + 1, D)), lab_sds,
+            jax.ShapeDtypeStruct((n_samples,), jnp.int32,
+                                 sharding=NamedSharding(mesh, P(samp_ax))))
+        it_compiled = it_lowered.compile()
+        f_it, b_it, coll_it = _cost_of(it_compiled)
+
+    terms = RA.roofline_terms(f_it, b_it, float(sum(coll_it.values())))
+    # useful flops: 2 * N_params * tokens-evaluated per iteration
+    n_params = cfg.param_count()
+    mf = 2.0 * n_params * n_samples * window * n_tok
+    rec.update(
+        status="ok", compile_s=round(t_compile, 2),
+        argument_bytes=getattr(mem, "argument_size_in_bytes", None),
+        temp_bytes=getattr(mem, "temp_size_in_bytes", None),
+        peak_bytes=(getattr(mem, "argument_size_in_bytes", 0)
+                    + getattr(mem, "temp_size_in_bytes", 0)),
+        fits_hbm=bool((getattr(mem, "argument_size_in_bytes", 0)
+                       + getattr(mem, "temp_size_in_bytes", 0)) < RA.HBM_PER_CHIP),
+        flops_per_chip=f_it, bytes_per_chip=b_it,
+        collective_bytes_per_chip=float(sum(coll_it.values())),
+        collective_breakdown=coll_it,
+        compute_s=terms.compute_s, memory_s=terms.memory_s,
+        collective_s=terms.collective_s, dominant=terms.dominant,
+        model_flops_global=mf,
+        model_flops_ratio=mf / (f_it * chips) if f_it else None,
+        note="per-ITERATION cost; end-to-end = iters (~7-20, see benchmarks) x this",
+    )
+    if verbose:
+        print(f"[{rec['mesh']}] dit-xl x parataa_serve: compile {t_compile:.1f}s, "
+              f"per-iter compute {terms.compute_s*1e3:.2f}ms / mem "
+              f"{terms.memory_s*1e3:.2f}ms / coll {terms.collective_s*1e3:.2f}ms "
+              f"-> {terms.dominant}; peak {rec['peak_bytes']/1e9:.2f} GB/chip "
+              f"fits={rec['fits_hbm']} mf-ratio={rec['model_flops_ratio'] and round(rec['model_flops_ratio'],3)}")
+        print("  memory_analysis:", mem)
+    return rec
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    p.add_argument("--all", action="store_true", help="every assigned cell")
+    p.add_argument("--out", default="results/dryrun")
+    p.add_argument("--include-dit", action="store_true",
+                   help="also dry-run the paper's dit-xl arch")
+    p.add_argument("--parataa", action="store_true",
+                   help="dry-run the ParaTAA batched-sampling serve cell")
+    args = p.parse_args()
+
+    if args.parataa:
+        out = Path(args.out)
+        out.mkdir(parents=True, exist_ok=True)
+        for mp in {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]:
+            tag = f"dit-xl__parataa_serve__{'multi' if mp else 'single'}"
+            try:
+                rec = run_parataa_cell(mp)
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                rec = {"arch": "dit-xl", "shape": "parataa_serve",
+                       "mesh": "multi" if mp else "single",
+                       "status": "error", "error": repr(e)}
+            (out / f"{tag}.json").write_text(json.dumps(rec, indent=1, default=str))
+        return
+
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    if args.all:
+        cells = [(a, s) for a in ASSIGNED for s in SHAPES]
+        if args.include_dit:
+            cells += [("dit-xl", "train_4k")]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch_name, shape_name in cells:
+        for mp in meshes:
+            tag = f"{arch_name}__{shape_name}__{'multi' if mp else 'single'}"
+            path = out / f"{tag}.json"
+            if path.exists() and args.all:
+                print(f"skip (cached): {tag}")
+                continue
+            try:
+                rec = run_cell(arch_name, shape_name, mp)
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                rec = {"arch": arch_name, "shape": shape_name,
+                       "mesh": "multi" if mp else "single",
+                       "status": "error", "error": repr(e)}
+                failures += 1
+            path.write_text(json.dumps(rec, indent=1, default=str))
+    if failures:
+        raise SystemExit(f"{failures} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Production meshes.  Functions (not module-level constants) so importing
+this module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 2, model: int = 2):
+    """Small mesh for CPU integration tests (requires
+    xla_force_host_platform_device_count >= data*model)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,235 @@
+"""The jit-compiled step functions (train / prefill / decode / parataa-serve)
+and their abstract input specs — shared by the dry-run, the real drivers, and
+the benchmarks.
+
+`input_specs(arch, shape, mesh)` returns ShapeDtypeStructs (weak-type-correct,
+sharding-annotated, zero allocation) for every model input, per the shape's
+kind; `abstract_state` does the same for params/optimizer/caches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import backbone, pdefs
+from repro.models.pdefs import resolve_axis
+from repro.optim import AdamWConfig, adamw_init, adamw_update, lr_schedule
+from repro.diffusion import dit as dit_mod
+
+PARAM_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+
+def make_loss_fn(cfg: ArchConfig):
+    if cfg.is_diffusion:
+        from repro.diffusion.schedules import make_schedule
+        abar = jnp.asarray(make_schedule("linear", 1000)[0], jnp.float32)
+
+        def loss_fn(params, batch):
+            return dit_mod.dit_loss(params, cfg, batch, abar)
+    else:
+        def loss_fn(params, batch):
+            return backbone.lm_loss(params, cfg, batch)
+    return loss_fn
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: Optional[AdamWConfig] = None,
+                    total_steps: int = 10_000, grad_accum: int = 1):
+    """grad_accum > 1 splits the global batch into microbatches (rolled
+    accumulation scan) — halves live activation memory per doubling, the
+    standard 16 GB/chip lever."""
+    opt_cfg = opt_cfg or AdamWConfig()
+    loss_fn = make_loss_fn(cfg)
+
+    def grads_of(params, batch):
+        # always the scan structure (ga=1 included) so the dry-run's cost
+        # assembly (const + ga * microbatch) is uniform
+        mb = jax.tree.map(
+            lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum) + x.shape[1:]),
+            batch)
+
+        def body(carry, b):
+            loss_acc, g_acc = carry
+            l, g = jax.value_and_grad(loss_fn)(params, b)
+            return (loss_acc + l, jax.tree.map(jnp.add, g_acc, g)), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), zeros), mb)
+        inv = 1.0 / grad_accum
+        return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    def train_step(params, opt_state, batch, step):
+        loss, grads = grads_of(params, batch)
+        lr = lr_schedule(step, base_lr=opt_cfg.lr, total_steps=total_steps)
+        params, opt_state, metrics = adamw_update(grads, opt_state, params, opt_cfg, lr)
+        return params, opt_state, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, inputs, cache):
+        return backbone.prefill(params, cfg, inputs, cache)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    def decode_step(params, token, cache):
+        return backbone.decode_step(params, cfg, token, cache)
+    return decode_step
+
+
+def make_parataa_serve_step(cfg: ArchConfig, solver_cfg, coeffs):
+    """One full ParaTAA sampling run as a single jit-able program (DiT arch);
+    the window batch inside is the sharded parallel axis."""
+    from repro.core import sample as parataa_sample
+
+    def serve_step(params, xi, labels):
+        def eps_fn(xw, taus_w):
+            y = jnp.broadcast_to(labels[:1], (xw.shape[0],))
+            return dit_mod.dit_apply(params, cfg, xw, taus_w, y)
+        traj, info = parataa_sample(eps_fn, coeffs, solver_cfg, xi)
+        return traj[0], info["iters"], info["nfe"]
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract specs (ShapeDtypeStruct + shardings; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype, mesh, spec):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def _batch_axis(mesh, n: int):
+    return resolve_axis("embed", n, mesh) if mesh is not None else None
+    # note: "embed" logical rule == fsdp == (pod, data); batch uses the same
+    # data-parallel axes with the same divisibility fallback
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, mesh=None):
+    """Model inputs for this (arch, shape) cell as ShapeDtypeStructs."""
+    b, s = shape.global_batch, shape.seq_len
+    ba = _batch_axis(mesh, b) if mesh is not None else None
+
+    if cfg.is_diffusion:
+        # DiT: latent-token diffusion training batch (N tokens = 256)
+        n, ld = 256, cfg.latent_dim
+        return {
+            "latents": _sds((b, n, ld), PARAM_DTYPE, mesh, P(ba, None, None)),
+            "labels": _sds((b,), jnp.int32, mesh, P(ba)),
+            "noise": _sds((b, n, ld), PARAM_DTYPE, mesh, P(ba, None, None)),
+            "t": _sds((b,), jnp.int32, mesh, P(ba)),
+        }
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend == "embed":
+            inputs = _sds((b, s, cfg.d_model), PARAM_DTYPE, mesh, P(ba, None, None))
+        else:
+            inputs = _sds((b, s), jnp.int32, mesh, P(ba, None))
+        if shape.kind == "train":
+            return {"inputs": inputs,
+                    "labels": _sds((b, s), jnp.int32, mesh, P(ba, None))}
+        return {"inputs": inputs}
+
+    # decode: one new token against a seq_len cache
+    if cfg.frontend == "embed":
+        token = _sds((b, 1, cfg.d_model), PARAM_DTYPE, mesh, P(ba, None, None))
+    else:
+        token = _sds((b, 1), jnp.int32, mesh, P(ba, None))
+    return {"token": token}
+
+
+def _cache_spec_for(path_str: str, shape, mesh):
+    """PartitionSpec for a cache leaf, by name + divisibility."""
+    def ax(logical, dim):
+        return resolve_axis(logical, dim, mesh)
+
+    if path_str.endswith("index"):
+        return P()
+    b = shape[0]
+    ba = ax("embed", b)  # fsdp axes for the batch dim
+    if "conv" in path_str:
+        return P(ba, None, ax("inner", shape[2]))
+    if path_str.endswith("state") and len(shape) == 4:  # mamba (B,H,P,N)
+        return P(ba, ax("ssm_heads", shape[1]), None, None)
+    if path_str.endswith("state"):  # rg-lru (B, d)
+        return P(ba, ax("inner", shape[1]))
+    if path_str.endswith("k") or path_str.endswith("v"):  # attn (B,C,KV,D)
+        kv_ax = ax("kv_heads", shape[2])
+        if kv_ax is not None:
+            return P(ba, None, kv_ax, None)
+        # context-parallel fallback: shard the sequence dim of the cache
+        return P(ba, ax("heads", shape[1]), None, None)
+    if path_str.endswith("scale"):  # int8 kv scales (B, C, KV)
+        kv_ax = ax("kv_heads", shape[2])
+        if kv_ax is not None:
+            return P(ba, None, kv_ax)
+        return P(ba, ax("heads", shape[1]), None)
+    return P(*([None] * len(shape)))
+
+
+def abstract_cache(cfg: ArchConfig, shape: ShapeConfig, mesh=None,
+                   dtype=PARAM_DTYPE):
+    """ShapeDtypeStruct cache with shardings (for decode/prefill cells)."""
+    sds_cache = backbone.abstract_cache(cfg, shape.global_batch, shape.seq_len, dtype)
+
+    def attach(path, leaf):
+        # normalized path like "periods/l0/k" (keystr gives "['periods']['l0']['k']")
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        shp = leaf.shape
+        # stacked caches (homogeneous layers / hybrid period groups) carry a
+        # leading stack dim
+        stacked = (not cfg.is_hybrid) or ("periods" in pstr)
+        if "index" in pstr:
+            spec = P(*([None] * len(shp)))
+        elif stacked:
+            spec = P(None, *_cache_spec_for(pstr, shp[1:], mesh))
+        else:
+            spec = _cache_spec_for(pstr, shp, mesh)
+        if mesh is None:
+            return jax.ShapeDtypeStruct(shp, leaf.dtype)
+        return jax.ShapeDtypeStruct(shp, leaf.dtype, sharding=NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map_with_path(attach, sds_cache)
+
+
+def abstract_model_state(cfg: ArchConfig, mesh=None, with_opt: bool = True,
+                         dtype=PARAM_DTYPE):
+    """Abstract (params, opt_state) with resolved shardings."""
+    if cfg.is_diffusion:
+        defs = dit_mod.dit_defs(cfg)
+    else:
+        defs = backbone.build_defs(cfg)
+    params = pdefs.abstract_params(defs, mesh, dtype=dtype)
+    if not with_opt:
+        return params, None
+
+    def f32_like(p):
+        if mesh is None:
+            return jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        return jax.ShapeDtypeStruct(p.shape, jnp.float32, sharding=p.sharding)
+
+    opt = {
+        "master": jax.tree.map(f32_like, params),
+        "mu": jax.tree.map(f32_like, params),
+        "nu": jax.tree.map(f32_like, params),
+        "count": (jax.ShapeDtypeStruct((), jnp.int32) if mesh is None else
+                  jax.ShapeDtypeStruct((), jnp.int32,
+                                       sharding=NamedSharding(mesh, P()))),
+    }
+    return params, opt

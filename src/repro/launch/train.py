@@ -1,0 +1,124 @@
+"""End-to-end training driver (LM archs and the DiT denoiser).
+
+Wires together: config registry -> model -> sharded data pipeline -> AdamW ->
+async checkpointing -> fault-tolerance supervision.  On this container it
+runs real training for reduced/smoke configs on CPU (examples/ use it); on a
+TPU cluster the same driver runs the full configs (mesh from
+make_production_mesh).
+
+    PYTHONPATH=src python -m repro.launch.train --arch dit-xl --smoke \
+        --steps 200 --batch 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_arch
+from repro.launch import steps as S
+from repro.ckpt import CheckpointManager
+from repro.data.pipeline import DataConfig, TokenPipeline, LatentPipeline
+from repro.models import backbone
+from repro.optim import AdamWConfig, adamw_init
+from repro.runtime import RestartPolicy, StragglerMitigator, run_supervised
+from repro.diffusion import dit as dit_mod
+
+
+def build_state(cfg, key, dtype=jnp.float32):
+    if cfg.is_diffusion:
+        params = dit_mod.dit_init(cfg, key, dtype)
+    else:
+        params = backbone.init(cfg, key, dtype)
+    return params, adamw_init(params)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--smoke", action="store_true", help="reduced config")
+    p.add_argument("--steps", type=int, default=100)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=128)
+    p.add_argument("--lr", type=float, default=3e-4)
+    p.add_argument("--ckpt-dir", default=None)
+    p.add_argument("--ckpt-every", type=int, default=50)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--log-every", type=int, default=10)
+    args = p.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    key = jax.random.PRNGKey(args.seed)
+    params, opt_state = build_state(cfg, key)
+    opt_cfg = AdamWConfig(lr=args.lr, weight_decay=0.01)
+    train_step = jax.jit(S.make_train_step(cfg, opt_cfg, total_steps=args.steps),
+                         donate_argnums=(0, 1))
+
+    if cfg.is_diffusion:
+        pipe = LatentPipeline(num_tokens=16, latent_dim=cfg.latent_dim,
+                              num_classes=cfg.num_classes, seed=args.seed)
+        get_batch = lambda step: {k: jnp.asarray(v) for k, v in
+                                  pipe.batch(step, args.batch).items()}
+    else:
+        dcfg = DataConfig(seq_len=args.seq, global_batch=args.batch,
+                          vocab_size=cfg.vocab_size, seed=args.seed)
+        tp = TokenPipeline(dcfg)
+
+        def get_batch(step):
+            b = tp.batch(step)
+            if cfg.frontend == "embed":
+                rng = np.random.default_rng(step)
+                emb = rng.normal(size=(args.batch, args.seq, cfg.d_model)) * 0.05
+                return {"inputs": jnp.asarray(emb, jnp.float32),
+                        "labels": jnp.asarray(b["labels"])}
+            return {k: jnp.asarray(v) for k, v in b.items()}
+
+    ckpt = CheckpointManager(Path(args.ckpt_dir), keep=3) if args.ckpt_dir else None
+    straggler = StragglerMitigator()
+    state = {"params": params, "opt": opt_state}
+    losses = []
+
+    def do_step(step):
+        t0 = time.time()
+        batch = get_batch(step)
+        state["params"], state["opt"], metrics = train_step(
+            state["params"], state["opt"], batch, jnp.asarray(step, jnp.int32))
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        straggler.record(time.time() - t0)
+        if step % args.log_every == 0:
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({time.time()-t0:.2f}s)", flush=True)
+
+    def save(step):
+        if ckpt:
+            ckpt.save(step, {"step": step, **state})
+
+    def restore():
+        if not ckpt:
+            return 0
+        step, tree = ckpt.restore({"step": 0, **state})
+        if tree is None:
+            return 0
+        state["params"], state["opt"] = tree["params"], tree["opt"]
+        return int(tree["step"])
+
+    start = restore()
+    run_supervised(do_step, start_step=start, num_steps=args.steps,
+                   save_fn=save, restore_fn=restore,
+                   policy=RestartPolicy(), ckpt_every=args.ckpt_every)
+    if ckpt:
+        ckpt.save(args.steps, {"step": args.steps, **state}, blocking=True)
+    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,365 @@
+"""Backbone assembly: builds any assigned architecture from its ArchConfig.
+
+API (all functional, params are pytrees):
+  build_defs(cfg)                       -> ParamDef tree
+  init(cfg, key, dtype)                 -> params
+  forward(params, cfg, tokens/embeds)   -> logits            (train shapes)
+  prefill(params, cfg, inputs, cache)   -> (logits, cache)
+  decode_step(params, cfg, token, cache)-> (logits, cache)
+  trunk(...)                            -> hidden states      (used by the
+                                           DiffusionWrapper denoiser head)
+  init_cache(cfg, batch, max_seq, dtype)
+
+Homogeneous stacks are lax.scan'd over stacked layer params (small HLO, lets
+XLA's scheduler overlap layer i+1's FSDP all-gather with layer i's compute);
+the hybrid recurrentgemma stack is an unrolled loop (26 heterogeneous layers).
+Train mode wraps each layer in jax.checkpoint (remat).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import pdefs
+from repro.models.pdefs import ParamDef, stack_defs
+from repro.models.layers import rmsnorm, rmsnorm_def, mlp, mlp_def
+from repro.models.attention import attention, attention_def, init_attn_cache
+from repro.models.moe import moe_apply, moe_def
+from repro.models.mamba2 import mamba_apply, mamba_def, init_mamba_cache
+from repro.models.rglru import rglru_apply, rglru_def, init_rglru_cache
+from repro.models.shardctx import constrain
+from repro.models import runconfig
+
+# Full per-layer recompute: at 16 GB/chip (v5e) saving weight-matmul outputs
+# (dots_with_no_batch_dims_saveable) keeps ~1 GB/layer of intermediates live
+# into the backward pass; recomputing the layer is the standard trade.
+REMAT_POLICY = jax.checkpoint_policies.nothing_saveable
+
+
+# ---------------------------------------------------------------------------
+# Definitions
+# ---------------------------------------------------------------------------
+
+
+def _layer_def(cfg: ArchConfig, kind: str):
+    if kind == "ssm":
+        return {"norm": rmsnorm_def(cfg.d_model), "mamba": mamba_def(cfg)}
+    d = {"norm1": rmsnorm_def(cfg.d_model), "norm2": rmsnorm_def(cfg.d_model)}
+    if kind == "attn":
+        d["attn"] = attention_def(cfg)
+    else:  # rglru
+        d["rec"] = rglru_def(cfg)
+    if cfg.is_moe:
+        d["moe"] = moe_def(cfg)
+    elif cfg.d_ff:
+        d["mlp"] = mlp_def(cfg.d_model, cfg.d_ff)
+    return d
+
+
+def hybrid_layout(cfg: ArchConfig):
+    """Hybrid stacks scan over PERIOD groups (e.g. rglru, rglru, attn) with an
+    unrolled tail for the remainder — small HLO, periodic cost accounting."""
+    kinds = cfg.layer_kinds()
+    period = cfg.rglru_ratio
+    n_per = cfg.num_layers // period
+    group_kinds = kinds[:period]
+    tail_kinds = kinds[n_per * period:]
+    return group_kinds, n_per, tail_kinds
+
+
+def build_defs(cfg: ArchConfig):
+    kinds = cfg.layer_kinds()
+    defs = {
+        "embed": ParamDef((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                          init="normal", scale=1.0 / np.sqrt(cfg.d_model)),
+        "final_norm": rmsnorm_def(cfg.d_model),
+    }
+    if cfg.is_hybrid:
+        group_kinds, n_per, tail_kinds = hybrid_layout(cfg)
+        group = {f"l{j}": _layer_def(cfg, k) for j, k in enumerate(group_kinds)}
+        defs["periods"] = stack_defs(group, n_per)
+        defs["tail"] = [_layer_def(cfg, k) for k in tail_kinds]
+    else:
+        defs["layers"] = stack_defs(_layer_def(cfg, kinds[0]), cfg.num_layers)
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                                   init="lecun")
+    return defs
+
+
+def init(cfg: ArchConfig, key, dtype=jnp.float32):
+    return pdefs.init_params(build_defs(cfg), key, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+
+
+def _layer_cache(cfg: ArchConfig, kind: str, batch: int, max_seq: int, dtype):
+    if kind == "ssm":
+        return init_mamba_cache(cfg, batch, dtype)
+    if kind == "rglru":
+        return init_rglru_cache(cfg, batch, dtype)
+    window = cfg.window_size if cfg.attention_kind == "swa" else 0
+    return init_attn_cache(cfg, batch, max_seq, window, dtype)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    kinds = cfg.layer_kinds()
+    if cfg.is_hybrid:
+        group_kinds, n_per, tail_kinds = hybrid_layout(cfg)
+        group = {f"l{j}": _layer_cache(cfg, k, batch, max_seq, dtype)
+                 for j, k in enumerate(group_kinds)}
+        periods = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_per,) + x.shape), group)
+        tail = [_layer_cache(cfg, k, batch, max_seq, dtype) for k in tail_kinds]
+        return {"periods": periods, "tail": tail}
+    one = _layer_cache(cfg, kinds[0], batch, max_seq, dtype)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.num_layers,) + x.shape), one)
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs for the cache — used by the dry-run (no allocation)."""
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_seq, dtype))
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+
+def _apply_layer(cfg: ArchConfig, kind: str, params, h, positions, *,
+                 mode: str, cache, causal: bool):
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "ssm":
+        y, new_cache = mamba_apply(params["mamba"], cfg,
+                                   rmsnorm(params["norm"], h, cfg.norm_eps),
+                                   mode=mode, cache=cache)
+        return h + y, new_cache, aux
+
+    x = rmsnorm(params["norm1"], h, cfg.norm_eps)
+    if kind == "attn":
+        window = cfg.window_size if cfg.attention_kind == "swa" else 0
+        y, new_cache = attention(params["attn"], cfg, x, positions,
+                                 window=window, causal=causal, cache=cache, mode=mode)
+    else:  # rglru
+        y, new_cache = rglru_apply(params["rec"], cfg, x, mode=mode, cache=cache)
+    h = h + y
+    x2 = rmsnorm(params["norm2"], h, cfg.norm_eps)
+    if cfg.is_moe:
+        y2, aux = moe_apply(params["moe"], cfg, x2)
+    else:
+        y2 = mlp(params["mlp"], x2, cfg.act)
+    return h + y2, new_cache, aux
+
+
+def trunk(params, cfg: ArchConfig, h, positions, *, mode: str = "train",
+          cache=None, causal: bool = True, remat: Optional[bool] = None):
+    """h: (B, S, d) -> (h_out, new_cache, aux_loss)."""
+    if remat is None:
+        remat = mode == "train"
+    kinds = cfg.layer_kinds()
+    seq_ax = "seq" if ((cfg.tp_strategy == "hidden" or cfg.seq_parallel)
+                       and mode != "decode") else None
+    h = constrain(h, "batch", seq_ax, None)
+
+    if cfg.is_hybrid:
+        group_kinds, n_per, tail_kinds = hybrid_layout(cfg)
+
+        def group_body(carry, xs):
+            h, aux = carry
+            gp, gc = xs
+            ncs = {}
+            for j, k in enumerate(group_kinds):
+                lc = gc[f"l{j}"] if gc is not None else None
+                h, nc, a = _apply_layer(cfg, k, gp[f"l{j}"], h, positions,
+                                        mode=mode, cache=lc, causal=causal)
+                ncs[f"l{j}"] = nc
+                aux = aux + a
+            return (h, aux), (ncs if gc is not None else None)
+
+        body_fn = (jax.checkpoint(group_body, policy=REMAT_POLICY)
+                   if remat else group_body)
+        pc = cache["periods"] if cache is not None else None
+        (h, aux), new_periods = jax.lax.scan(
+            body_fn, (h, jnp.zeros((), jnp.float32)), (params["periods"], pc))
+        new_tail = []
+        for j, k in enumerate(tail_kinds):
+            lc = cache["tail"][j] if cache is not None else None
+            fn = functools.partial(_apply_layer, cfg, k, mode=mode, causal=causal)
+            if remat:
+                fn = jax.checkpoint(fn, policy=REMAT_POLICY)
+            h, nc, a = fn(params["tail"][j], h, positions, cache=lc)
+            new_tail.append(nc)
+            aux = aux + a
+        new_cache = ({"periods": new_periods, "tail": new_tail}
+                     if cache is not None else None)
+        return rmsnorm(params["final_norm"], h, cfg.norm_eps), new_cache, aux
+
+    # homogeneous: scan over stacked layer params (and stacked caches)
+    kind = kinds[0]
+
+    def body(carry, xs):
+        h, aux = carry
+        lp, lc = xs
+        h, nc, a = _apply_layer(cfg, kind, lp, h, positions,
+                                mode=mode, cache=lc, causal=causal)
+        # annotate the carry itself: with seq_parallel the remat'd
+        # layer-boundary activations live sequence-sharded over `model`
+        h = constrain(h, "batch", seq_ax, None)
+        return (h, aux + a), nc
+
+    # NOTE: layer scan stays rolled (small HLO; the dry-run extrapolates
+    # per-layer cost from L=1 / L=2 compiles instead of unrolling).
+    body_fn = jax.checkpoint(body, policy=REMAT_POLICY) if remat else body
+    xs = (params["layers"], cache)
+    (h, aux), new_cache = jax.lax.scan(body_fn, (h, jnp.zeros((), jnp.float32)), xs)
+    if cache is None:
+        new_cache = None
+    return rmsnorm(params["final_norm"], h, cfg.norm_eps), new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head / full passes
+# ---------------------------------------------------------------------------
+
+
+def embed(params, cfg: ArchConfig, inputs):
+    """Token ids (B,S) int32 -> (B,S,d); or pass precomputed embeddings
+    through for stub-frontend archs (float inputs of shape (B,S,d))."""
+    if jnp.issubdtype(inputs.dtype, jnp.floating):
+        assert cfg.frontend == "embed", cfg.name
+        return inputs
+    h = jnp.take(params["embed"], inputs, axis=0)
+    if cfg.is_hybrid:  # gemma-style embed scaling
+        h = h * jnp.asarray(np.sqrt(cfg.d_model), h.dtype)
+    return h
+
+
+def unembed(params, cfg: ArchConfig, h):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = h @ w
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits
+
+
+def _default_positions(cfg: ArchConfig, batch: int, seq: int, offset=0):
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset  # (1, S)
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if cfg.m_rope:
+        return jnp.broadcast_to(pos[None], (3, batch, seq))  # (t,h,w) streams
+    return pos
+
+
+def forward(params, cfg: ArchConfig, inputs, positions=None, *, remat=None):
+    """Train-shape forward: inputs -> logits (B, S, V)."""
+    b, s = inputs.shape[:2]
+    if positions is None:
+        positions = _default_positions(cfg, b, s)
+    h = embed(params, cfg, inputs)
+    h, _, aux = trunk(params, cfg, h, positions, mode="train", remat=remat)
+    return unembed(params, cfg, h), aux
+
+
+def prefill(params, cfg: ArchConfig, inputs, cache, positions=None,
+            *, last_only: bool = True):
+    """Process a prompt, filling the cache.  Returns (logits, cache).
+    `last_only` unembeds just the final position — serving only needs the
+    next-token distribution, and a (B, S, 152k) logits output would dominate
+    the prefill memory footprint at 32k context."""
+    b, s = inputs.shape[:2]
+    if positions is None:
+        positions = _default_positions(cfg, b, s)
+    h = embed(params, cfg, inputs)
+    h, new_cache, _ = trunk(params, cfg, h, positions, mode="prefill",
+                            cache=cache, remat=False)
+    if last_only:
+        h = h[:, -1:]
+    return unembed(params, cfg, h), new_cache
+
+
+def decode_step(params, cfg: ArchConfig, token, cache):
+    """One decoding step.  token: (B, 1) ids (or (B,1,d) embeds for stub
+    frontends).  Returns (logits (B,1,V), new cache)."""
+    b = token.shape[0]
+    # absolute position = cache index (same for all layers; take layer 0)
+    idx = (cache["periods"]["l0"]["index"][0] if cfg.is_hybrid
+           else cache["index"][0])
+    pos = jnp.broadcast_to(jnp.asarray(idx, jnp.int32)[None, None], (b, 1))
+    positions = jnp.broadcast_to(pos[None], (3, b, 1)) if cfg.m_rope else pos
+    h = embed(params, cfg, token)
+    h, new_cache, _ = trunk(params, cfg, h, positions, mode="decode",
+                            cache=cache, remat=False)
+    return unembed(params, cfg, h), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Loss (LM pretraining objective)
+# ---------------------------------------------------------------------------
+
+
+N_CE_CHUNKS = 8  # token-chunked cross entropy (memory: one chunk of f32
+                 # logits live at a time instead of (B, S, V))
+
+
+def _chunked_xent(h, w, labels, softcap: float):
+    """h: (B,S,d); w: (d,V) (vocab stays model-sharded); labels: (B,S).
+    Streams CE over BATCH chunks under jax.checkpoint — never materializes
+    the full (B,S,V) f32 logits.  Chunking over batch (not flat tokens)
+    keeps the data-parallel sharding expressible through the reshape; the
+    constrain() inside the body re-asserts it.  Unrolled so cost analysis
+    counts every chunk."""
+    b, s, d = h.shape
+    # the per-chunk batch must stay divisible by the data-parallel axes,
+    # otherwise GSPMD can't shard the chunk and REPLICATES the whole vocab
+    # matmul on every chip (a 16-256x flops/bytes regression, found the hard
+    # way — see EXPERIMENTS.md §Perf)
+    from repro.models.shardctx import current_mesh
+    mesh = current_mesh()
+    dp = 1
+    if mesh is not None:
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        for ax in ("pod", "data"):
+            dp *= sizes.get(ax, 1)
+    nc = N_CE_CHUNKS
+    while nc > 1 and (b % nc or (b // nc) % dp):
+        nc //= 2
+    nc = max(nc, 1)
+    bc = b // nc
+
+    def body(carry, xs):
+        hc, lc = xs  # (bc, S, d), (bc, S)
+        hc = constrain(hc, "batch", None, None)
+        logits = (hc @ w).astype(jnp.float32)
+        if softcap:
+            logits = jnp.tanh(logits / softcap) * softcap
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(
+        jax.checkpoint(body), jnp.zeros((), jnp.float32),
+        (h.reshape(nc, bc, s, d), labels.reshape(nc, bc, s)),
+        unroll=nc)
+    return total / (b * s)
+
+
+def lm_loss(params, cfg: ArchConfig, batch):
+    """batch: {"inputs": (B,S) ids or (B,S,d) embeds, "labels": (B,S) ids}."""
+    inputs = batch["inputs"]
+    b, s = inputs.shape[:2]
+    h = embed(params, cfg, inputs)
+    h, _, aux = trunk(params, cfg, h, _default_positions(cfg, b, s), mode="train")
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    nll = _chunked_xent(h, w, batch["labels"], cfg.logit_softcap)
+    if cfg.is_moe:
+        nll = nll + 0.01 * aux / cfg.num_layers
+    return nll

@@ -1,0 +1,219 @@
+"""Mamba2 block (SSD — state-space duality, Dao & Gu 2024), attention-free.
+
+Train/prefill use the *chunked* SSD algorithm: intra-chunk quadratic
+(attention-like, MXU-friendly) + inter-chunk associative scan over per-chunk
+states.  This is the TPU-native mapping of the paper-adjacent GPU kernel: the
+intra-chunk part is matmuls over (chunk x chunk) and (chunk x state) tiles,
+and the inter-chunk recurrence is log-depth.  Decode is an O(1) state update.
+
+Note for DESIGN §Arch-applicability: the SSD recurrence h_t = a_t h_{t-1} +
+b_t is *linear diagonal*, i.e. exactly the degenerate case of the paper's
+triangular system where the fixed point is reached in one parallel pass —
+the chunked/associative scan below IS the closed-form parallel solver.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.pdefs import ParamDef
+from repro.models.layers import rmsnorm, rmsnorm_def
+
+
+def mamba_def(cfg: ArchConfig):
+    d, din = cfg.d_model, cfg.d_inner
+    gn = cfg.ssm_ngroups * cfg.ssm_state
+    h = cfg.ssm_nheads
+    w = cfg.ssm_conv_width
+    return {
+        "in_x": ParamDef((d, din), ("embed", "inner"), init="lecun"),
+        "in_z": ParamDef((d, din), ("embed", "inner"), init="lecun"),
+        "in_B": ParamDef((d, gn), ("embed", None), init="lecun"),
+        "in_C": ParamDef((d, gn), ("embed", None), init="lecun"),
+        "in_dt": ParamDef((d, h), ("embed", "ssm_heads"), init="lecun"),
+        "conv_x": ParamDef((w, din), ("conv", "inner"), init="lecun"),
+        "conv_B": ParamDef((w, gn), ("conv", None), init="lecun"),
+        "conv_C": ParamDef((w, gn), ("conv", None), init="lecun"),
+        "A_log": ParamDef((h,), ("ssm_heads",), init="zeros", dtype="float32"),
+        "dt_bias": ParamDef((h,), ("ssm_heads",), init="zeros", dtype="float32"),
+        "D": ParamDef((h,), ("ssm_heads",), init="ones", dtype="float32"),
+        "norm": rmsnorm_def(din),
+        "out": ParamDef((din, d), ("inner", "embed"), init="lecun"),
+    }
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype):
+    gn = cfg.ssm_ngroups * cfg.ssm_state
+    w = cfg.ssm_conv_width
+    return {
+        "state": jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        "conv_x": jnp.zeros((batch, w - 1, cfg.d_inner), dtype),
+        "conv_B": jnp.zeros((batch, w - 1, gn), dtype),
+        "conv_C": jnp.zeros((batch, w - 1, gn), dtype),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def _causal_conv(x, kernel, carry=None):
+    """Depthwise causal conv.  x: (B, S, C); kernel: (W, C).
+    carry: (B, W-1, C) previous inputs (decode/chunk continuation)."""
+    w = kernel.shape[0]
+    if carry is None:
+        carry = jnp.zeros((x.shape[0], w - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)  # (B, S+W-1, C)
+    out = sum(xp[:, i : i + x.shape[1]] * kernel[i][None, None, :] for i in range(w))
+    new_carry = xp[:, -(w - 1) :] if w > 1 else carry
+    return out, new_carry
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    x: (b, s, h, p); dt: (b, s, h) (post-softplus); A: (h,) negative;
+    B, C: (b, s, g, n).  Returns (y (b,s,h,p), final_state (b,h,p,n)).
+    All math in f32.
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hg = h // g  # heads per group
+    q = chunk
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    f32 = jnp.float32
+    x, dt, B, C = (t.astype(f32) for t in (x, dt, B, C))
+    xr = x.reshape(b, nc, q, h, p)
+    dtr = dt.reshape(b, nc, q, h)
+    Br = B.reshape(b, nc, q, g, n)
+    Cr = C.reshape(b, nc, q, g, n)
+
+    la = dtr * A[None, None, None, :]  # (b,nc,q,h) log decay per step (<=0)
+    cum = jnp.cumsum(la, axis=2)  # inclusive within-chunk cumsum
+    seg_total = cum[:, :, -1]  # (b,nc,h) total chunk log decay
+
+    # ---- intra-chunk (quadratic, matmul-shaped) ----
+    # scores[i,j] = (C_i . B_j) * exp(cum_i - cum_j) * dt_j, j <= i
+    # head-major layout throughout: the (q, q) decay matrix is built directly
+    # as (b,nc,h,q,q) (no 5D transpose), and all elementwise passes stay in
+    # that layout so XLA fuses them into the score matmul epilogue.
+    cb = jnp.einsum("bcign,bcjgn->bcgij", Cr, Br)  # (b,nc,g,q,q)
+    cum_h = jnp.moveaxis(cum, 2, 3)  # (b,nc,h,q)
+    dec = cum_h[..., :, None] - cum_h[..., None, :]  # (b,nc,h,q,q)
+    mask = np.tril(np.ones((q, q), bool))
+    L = jnp.where(mask[None, None, None], jnp.exp(dec), 0.0)  # (b,nc,h,q,q)
+    xdt = xr * dtr[..., None]  # (b,nc,q,h,p)
+    # group-broadcast: head h belongs to group h // hg
+    cbh = jnp.repeat(cb, hg, axis=2)  # (b,nc,h,q,q)
+    w_ij = cbh * L  # (b,nc,h,q,q)
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", w_ij, xdt)
+
+    # ---- per-chunk states ----
+    # S_c = sum_j exp(seg_total - cum_j) * dt_j * x_j (x) B_j  -> (b,nc,h,p,n)
+    wj = jnp.exp(seg_total[:, :, None, :] - cum)  # (b,nc,q,h)
+    Brh = jnp.repeat(Br, hg, axis=3)  # (b,nc,q,h,n)... wait Br is (b,nc,q,g,n)
+    S_c = jnp.einsum("bcjhp,bcjhn,bcjh->bchpn", xdt, jnp.repeat(Br, hg, axis=3), wj)
+
+    # ---- inter-chunk associative scan over chunk states ----
+    Ad = jnp.exp(seg_total)  # (b,nc,h) per-chunk decay factor
+    if init_state is not None:
+        # fold initial state in as a virtual chunk 0 contribution
+        S0 = init_state.astype(f32)  # (b,h,p,n)
+    else:
+        S0 = jnp.zeros((b, h, p, n), f32)
+
+    def combine(e1, e2):
+        a1, s1 = e1
+        a2, s2 = e2
+        return a1 * a2, s1 * a2[..., None, None] + s2
+
+    a_sc, s_sc = jax.lax.associative_scan(combine, (jnp.moveaxis(Ad, 1, 0), jnp.moveaxis(S_c, 1, 0)), axis=0)
+    H_incl = jnp.moveaxis(s_sc, 0, 1)  # (b,nc,h,p,n) inclusive states (no init)
+    a_incl = jnp.moveaxis(a_sc, 0, 1)  # (b,nc,h) cumulative decay
+    H_incl = H_incl + a_incl[..., None, None] * S0[:, None]
+    # incoming state for chunk c = H_{c-1} (exclusive)
+    H_in = jnp.concatenate([S0[:, None], H_incl[:, :-1]], axis=1)  # (b,nc,h,p,n)
+
+    # ---- inter-chunk contribution ----
+    Crh = jnp.repeat(Cr, hg, axis=3)  # (b,nc,q,h,n)
+    y_inter = jnp.einsum("bcihn,bchpn,bcih->bcihp", Crh, H_in, jnp.exp(cum))
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    final_state = H_incl[:, -1]  # (b,h,p,n)
+    return y, final_state
+
+
+def _ssd_decode(x, dt, A, B, C, state):
+    """Single-token SSD update.  x: (b,h,p), dt: (b,h), B/C: (b,g,n),
+    state: (b,h,p,n) -> (y, new_state)."""
+    f32 = jnp.float32
+    x, dt, B, C, state = (t.astype(f32) for t in (x, dt, B, C, state))
+    h, g = x.shape[1], B.shape[1]
+    hg = h // g
+    a = jnp.exp(dt * A[None, :])  # (b,h)
+    Bh = jnp.repeat(B, hg, axis=1)  # (b,h,n)
+    Ch = jnp.repeat(C, hg, axis=1)
+    new_state = state * a[..., None, None] + jnp.einsum("bhp,bhn,bh->bhpn", x, Bh, dt)
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, new_state)
+    return y, new_state
+
+
+def mamba_apply(params, cfg: ArchConfig, x, *, mode: str = "train",
+                cache: Optional[dict] = None):
+    """x: (B, S, d) -> (y, new_cache)."""
+    b, s, d = x.shape
+    h, p, gn = cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_ngroups * cfg.ssm_state
+
+    z = x @ params["in_z"]  # (b,s,din)
+    u = x @ params["in_x"]
+    Bx = x @ params["in_B"]
+    Cx = x @ params["in_C"]
+    dt_raw = x @ params["in_dt"]  # (b,s,h)
+
+    carry_x = cache["conv_x"] if cache is not None else None
+    carry_B = cache["conv_B"] if cache is not None else None
+    carry_C = cache["conv_C"] if cache is not None else None
+    u, ncx = _causal_conv(u, params["conv_x"], carry_x)
+    Bx, ncB = _causal_conv(Bx, params["conv_B"], carry_B)
+    Cx, ncC = _causal_conv(Cx, params["conv_C"], carry_C)
+    u, Bx, Cx = jax.nn.silu(u), jax.nn.silu(Bx), jax.nn.silu(Cx)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])  # (h,)
+    ur = u.reshape(b, s, h, p)
+    Br = Bx.reshape(b, s, cfg.ssm_ngroups, cfg.ssm_state)
+    Cr = Cx.reshape(b, s, cfg.ssm_ngroups, cfg.ssm_state)
+
+    if mode == "decode":
+        assert s == 1 and cache is not None
+        y1, new_state = _ssd_decode(ur[:, 0], dt[:, 0], A, Br[:, 0], Cr[:, 0], cache["state"])
+        y = y1[:, None]  # (b,1,h,p)
+        new_cache = {"state": new_state, "conv_x": ncx, "conv_B": ncB,
+                     "conv_C": ncC, "index": cache["index"] + 1}
+    else:
+        init_state = cache["state"] if cache is not None else None
+        chunk = min(cfg.ssm_chunk, s)
+        # pad sequence to a chunk multiple; padded steps get dt = 0
+        # (decay = exp(0) = 1 and zero input contribution => exact)
+        pad = (-s) % chunk
+        if pad:
+            ur_p = jnp.pad(ur, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            Br_p = jnp.pad(Br, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            Cr_p = jnp.pad(Cr, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        else:
+            ur_p, dt_p, Br_p, Cr_p = ur, dt, Br, Cr
+        y, final_state = _ssd_chunked(ur_p, dt_p, A, Br_p, Cr_p, chunk, init_state)
+        y = y[:, :s]
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"state": final_state, "conv_x": ncx, "conv_B": ncB,
+                         "conv_C": ncC, "index": jnp.asarray(s, jnp.int32)}
+
+    y = y + ur.astype(jnp.float32) * params["D"][None, None, :, None]
+    y = y.reshape(b, s, h * p).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ params["out"], new_cache

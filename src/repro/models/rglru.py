@@ -1,0 +1,117 @@
+"""Griffin recurrent block with RG-LRU (recurrentgemma).
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t), with per-channel learned
+decay a_t = exp(-c * softplus(Lambda) * r_t) and sigmoid gates r, i computed
+by block-diagonal projections of the conv output.
+
+The recurrence is linear diagonal => parallelized exactly with a single
+associative scan (see DESIGN §Arch-applicability: this is the closed-form
+corner of the paper's fixed-point framework — one "iteration" suffices).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.pdefs import ParamDef
+
+RGLRU_C = 8.0
+NUM_GATE_BLOCKS = 8
+
+
+def rglru_def(cfg: ArchConfig):
+    d = cfg.d_model  # lru width == d_model
+    nb = NUM_GATE_BLOCKS
+    bs = d // nb
+    w = cfg.rglru_conv_width
+    return {
+        "w_y": ParamDef((d, d), ("embed", "inner"), init="lecun"),
+        "w_x": ParamDef((d, d), ("embed", "inner"), init="lecun"),
+        "conv": ParamDef((w, d), ("conv", "inner"), init="lecun"),
+        "w_a": ParamDef((nb, bs, bs), (None, None, "inner"), init="lecun"),
+        "w_i": ParamDef((nb, bs, bs), (None, None, "inner"), init="lecun"),
+        "b_a": ParamDef((d,), ("inner",), init="zeros"),
+        "b_i": ParamDef((d,), ("inner",), init="zeros"),
+        "lam": ParamDef((d,), ("inner",), init="normal", scale=0.5, dtype="float32"),
+        "w_o": ParamDef((d, d), ("inner", "embed"), init="lecun"),
+    }
+
+
+def init_rglru_cache(cfg: ArchConfig, batch: int, dtype):
+    d, w = cfg.d_model, cfg.rglru_conv_width
+    return {
+        "state": jnp.zeros((batch, d), jnp.float32),
+        "conv": jnp.zeros((batch, w - 1, d), dtype),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def _block_diag(x, w, b):
+    """x: (..., d); w: (nb, bs, bs) -> (..., d)."""
+    nb, bs, _ = w.shape
+    xs = x.reshape(x.shape[:-1] + (nb, bs))
+    y = jnp.einsum("...nk,nkj->...nj", xs, w)
+    return y.reshape(x.shape) + b
+
+
+def _rglru_gates(params, u):
+    """u: (B, S, d) conv output -> (log_a, b_term) both f32."""
+    f32 = jnp.float32
+    r = jax.nn.sigmoid(_block_diag(u, params["w_a"], params["b_a"]).astype(f32))
+    i = jax.nn.sigmoid(_block_diag(u, params["w_i"], params["b_i"]).astype(f32))
+    log_a = -RGLRU_C * jax.nn.softplus(params["lam"]) * r  # (B,S,d), <= 0
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * i * u.astype(f32)
+    return a, b
+
+
+def rglru_scan(a, b, h0=None):
+    """h_t = a_t h_{t-1} + b_t via associative scan along axis 1 (f32)."""
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    a_c, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if h0 is not None:
+        h = h + a_c * h0[:, None, :]
+    return h
+
+
+def _causal_conv(x, kernel, carry=None):
+    w = kernel.shape[0]
+    if carry is None:
+        carry = jnp.zeros((x.shape[0], w - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * kernel[i][None, None, :] for i in range(w))
+    return out, (xp[:, -(w - 1) :] if w > 1 else carry)
+
+
+def rglru_apply(params, cfg: ArchConfig, x, *, mode: str = "train",
+                cache: Optional[dict] = None):
+    """Griffin recurrent block.  x: (B, S, d) -> (y, new_cache)."""
+    y_branch = jax.nn.gelu(x @ params["w_y"])
+    u = x @ params["w_x"]
+    carry = cache["conv"] if cache is not None else None
+    u, new_conv = _causal_conv(u, params["conv"], carry)
+    a, b = _rglru_gates(params, u)
+
+    if mode == "decode":
+        assert x.shape[1] == 1 and cache is not None
+        h = a[:, 0] * cache["state"] + b[:, 0]  # (B, d)
+        new_cache = {"state": h, "conv": new_conv, "index": cache["index"] + 1}
+        h = h[:, None]
+    else:
+        h0 = cache["state"] if cache is not None else None
+        h = rglru_scan(a, b, h0)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"state": h[:, -1], "conv": new_conv,
+                         "index": jnp.asarray(x.shape[1], jnp.int32)}
+
+    out = (y_branch * h.astype(x.dtype)) @ params["w_o"]
+    return out, new_cache

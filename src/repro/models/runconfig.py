@@ -1,0 +1,17 @@
+"""Process-wide model-lowering knobs.
+
+UNROLL_SCANS: the dry-run sets this so every lax.scan (layer stack, blocked-
+attention KV loop) lowers unrolled — XLA's cost_analysis counts a while-loop
+body once regardless of trip count, so rolled loops under-report FLOPs/bytes.
+Real training keeps scans rolled (small HLO, scheduler-friendly).
+"""
+UNROLL_SCANS = False
+
+
+def set_unroll_scans(v: bool):
+    global UNROLL_SCANS
+    UNROLL_SCANS = v
+
+
+def scan_unroll(length: int):
+    return length if UNROLL_SCANS else 1

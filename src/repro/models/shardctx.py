@@ -1,0 +1,88 @@
+"""Activation-sharding context: lets model code express logical activation
+shardings (`constrain(x, "batch", "seq", None)`) that resolve against the
+launcher's mesh — and become no-ops in single-device tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_MESH = contextvars.ContextVar("repro_mesh", default=None)
+# override for the "batch" logical axis (e.g. serving: batch over ALL axes)
+_BATCH_AXES = contextvars.ContextVar("repro_batch_axes", default=None)
+
+
+@contextlib.contextmanager
+def batch_axes(axes):
+    tok = _BATCH_AXES.set(tuple(axes))
+    try:
+        yield
+    finally:
+        _BATCH_AXES.reset(tok)
+
+# logical activation axes -> mesh axes (with divisibility fallback)
+ACT_RULES = {
+    "batch": "fsdp",   # ("pod","data") multi-pod, ("data",) single-pod
+    "seq": "model",    # context parallel (hidden-TP archs / long context)
+    "heads": "model",
+    "embed": None,
+    "window": "fsdp",  # ParaTAA window-of-timesteps axis
+}
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    tok = _MESH.set(mesh)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _MESH.reset(tok)
+
+
+def current_mesh():
+    return _MESH.get()
+
+
+def _resolve(logical: Optional[str], dim: int, mesh):
+    if logical is None:
+        return None
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if logical == "batch" and _BATCH_AXES.get() is not None:
+        axes = tuple(a for a in _BATCH_AXES.get() if a in sizes)
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        if axes and dim % total == 0:
+            return axes if len(axes) > 1 else axes[0]
+        return None
+    target = ACT_RULES.get(logical)
+    if target is None:
+        return None
+    if target == "fsdp":
+        axes = tuple(a for a in ("pod", "data") if a in sizes)
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        if axes and dim % total == 0:
+            return axes if len(axes) > 1 else axes[0]
+        if "data" in sizes and dim % sizes["data"] == 0:
+            return "data"
+        return None
+    if target in sizes and dim % sizes[target] == 0:
+        return target
+    return None
+
+
+def constrain(x, *logical_axes):
+    """with_sharding_constraint against the ambient mesh (no-op without one)."""
+    mesh = _MESH.get()
+    if mesh is None:
+        return x
+    assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+    spec = P(*[_resolve(ax, d, mesh) for ax, d in zip(logical_axes, x.shape)])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,69 @@
+"""AdamW in pure JAX with mixed-precision master weights.
+
+Optimizer state (per parameter): f32 master copy + f32 (mu, nu).  Model
+params may be bf16 (compute dtype) — updates are applied to the master copy
+and cast back, the standard large-scale mixed-precision scheme.  State
+inherits the parameter's PartitionSpec, i.e. it is ZeRO-sharded exactly like
+the FSDP'd params.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params):
+    # copy=True: with f32 params, astype would alias the param buffer and
+    # break donation (same buffer donated twice in the train step)
+    f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+    return {
+        "master": jax.tree.map(f32, params),
+        "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "nu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, opt_state, params, cfg: AdamWConfig, lr_t=None):
+    """Returns (new_params, new_opt_state, metrics)."""
+    count = opt_state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-12)) if cfg.grad_clip else 1.0
+    lr = cfg.lr if lr_t is None else lr_t
+
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(g, mu, nu, master):
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        step = (mu / c1) / (jnp.sqrt(nu / c2) + cfg.eps)
+        master = master - lr * (step + cfg.weight_decay * master)
+        return mu, nu, master
+
+    flat = jax.tree.map(upd, grads, opt_state["mu"], opt_state["nu"], opt_state["master"])
+    mu = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    nu = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    master = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(lambda m, p: m.astype(p.dtype), master, params)
+    new_state = {"master": master, "mu": mu, "nu": nu, "count": count}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": jnp.asarray(lr)}

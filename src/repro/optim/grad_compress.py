@@ -1,0 +1,88 @@
+"""Error-feedback gradient compression for the data-parallel all-reduce.
+
+Two compressors, both with per-worker error feedback (Karimireddy et al.
+2019) so compression error is re-injected next step and convergence is
+preserved:
+
+  * int8 block quantization: per-block (128) absmax scale, 4x bytes saved
+    on the wire vs f32 (2x vs bf16).
+  * top-k sparsification: keep the k largest-magnitude entries per tensor.
+
+Usage inside a shard_map'd train step (see repro.launch.train):
+    g_c, new_err = compress_with_feedback(g, err, cfg)
+    g_sync = jax.lax.psum(decompress(g_c), "data") / n_data
+Off by default; enabled via TrainConfig.grad_compression.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressConfig:
+    kind: str = "int8"  # int8 | topk | none
+    block: int = 128
+    topk_frac: float = 0.05
+
+
+def _quant_int8(x, block):
+    flat = x.reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequant_int8(q, scale, shape):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    return flat[: int(jnp.prod(jnp.asarray(shape)))].reshape(shape)
+
+
+def compress_leaf(g, err, cfg: CompressConfig):
+    """Returns (dequantized-compressed gradient, new error-feedback state).
+    The dequantized value is what enters the all-reduce; the int8 payload is
+    what would cross the wire (bytes accounting in the roofline tables)."""
+    g32 = g.astype(jnp.float32) + (err if err is not None else 0.0)
+    if cfg.kind == "int8":
+        q, scale = _quant_int8(g32, cfg.block)
+        deq = _dequant_int8(q, scale, g32.shape)
+    elif cfg.kind == "topk":
+        k = max(1, int(g32.size * cfg.topk_frac))
+        flat = g32.reshape(-1)
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        deq = jnp.where(jnp.abs(flat) >= thresh, flat, 0.0).reshape(g32.shape)
+    else:
+        return g32, jnp.zeros_like(g32)
+    return deq, g32 - deq
+
+
+def compress_with_feedback(grads, err_state, cfg: CompressConfig):
+    if cfg.kind == "none":
+        return grads, err_state
+    if err_state is None:
+        err_state = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    out = jax.tree.map(lambda g, e: compress_leaf(g, e, cfg), grads, err_state)
+    deq = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return deq, err
+
+
+def wire_bytes(grads, cfg: CompressConfig) -> int:
+    """Bytes a DP all-reduce would move per step under this compression."""
+    total = 0
+    for g in jax.tree.leaves(grads):
+        n = g.size
+        if cfg.kind == "int8":
+            total += n + 4 * (n // cfg.block + 1)
+        elif cfg.kind == "topk":
+            k = max(1, int(n * cfg.topk_frac))
+            total += k * 8  # value + index
+        else:
+            total += n * 4
+    return total

@@ -1,0 +1,13 @@
+"""Learning-rate schedules (warmup + cosine decay)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lr_schedule(step, *, base_lr: float, warmup_steps: int = 100,
+                total_steps: int = 10_000, min_ratio: float = 0.1):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = base_lr * jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+    prog = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup_steps, warm, base_lr * cos)

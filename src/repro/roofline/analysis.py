@@ -1,0 +1,143 @@
+"""Three-term roofline analysis from compiled HLO (no hardware needed).
+
+    compute    = HLO_FLOPs            / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes_accessed   / (chips * HBM_BW)
+    collective = collective_bytes     / (chips * LINK_BW)
+
+cost_analysis() reports the per-device (post-SPMD) module, so the per-chip
+terms are flops/PEAK etc.; we report global quantities (x chips) and the
+identical per-chip seconds.  collective_bytes is parsed from the partitioned
+HLO text: the summed operand bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (x chips for the global
+figure).  Ring-algorithm factors (2(n-1)/n etc.) are NOT applied — the term
+is a consistent lower bound across configs.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (per spec).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # bytes/s / chip
+LINK_BW = 50e9          # bytes/s / ICI link
+HBM_PER_CHIP = 16e9     # v5e HBM capacity
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one 'dtype[dims]' (tuples handled by caller via findall)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind operand bytes (per device) from partitioned HLO.
+
+    Each instruction line looks like
+      %name = TYPE op-name(%operand1, %operand2, ...), ...
+    We build a name->result-bytes map, then sum operand sizes for every
+    collective op (`*-start` fusion variants included; `*-done` skipped so
+    async pairs are not double counted).
+    """
+    result_bytes: Dict[str, int] = {}
+    inst_re = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[^=]+?)\s+([\w\-]+)\(")
+    lines = hlo_text.splitlines()
+    for ln in lines:
+        m = inst_re.match(ln)
+        if m:
+            name, shape_str, _op = m.groups()
+            result_bytes[name] = _shape_bytes(shape_str)
+
+    totals = {k: 0 for k in _COLLECTIVES}
+    for ln in lines:
+        m = inst_re.match(ln)
+        if not m:
+            continue
+        name, shape_str, op = m.groups()
+        for coll in _COLLECTIVES:
+            if op == coll or op == coll + "-start":
+                # operand list between the first '(' after op and matching ')'
+                args = ln.split(op + "(", 1)[-1] if op + "(" in ln else \
+                    ln.split(op + "-start(", 1)[-1]
+                operand_names = re.findall(r"%([\w.\-]+)", args.split(")")[0])
+                ob = sum(result_bytes.get(n, 0) for n in operand_names)
+                if ob == 0:  # fall back to result size (e.g. formatting drift)
+                    ob = result_bytes.get(name, 0)
+                totals[coll] += ob
+    return totals
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lb(self) -> float:
+        """Lower-bound step time = max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the step at the roofline: dominant / sum (1.0 means the
+        dominant resource is the only cost under perfect overlap)."""
+        s = self.compute_s + self.memory_s + self.collective_s
+        return self.step_time_lb / s if s else 0.0
+
+
+def roofline_terms(flops_per_chip: float, bytes_per_chip: float,
+                   coll_bytes_per_chip: float) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=flops_per_chip / PEAK_FLOPS,
+        memory_s=bytes_per_chip / HBM_BW,
+        collective_s=coll_bytes_per_chip / LINK_BW,
+        flops_per_chip=flops_per_chip,
+        bytes_per_chip=bytes_per_chip,
+        coll_bytes_per_chip=coll_bytes_per_chip,
+    )
+
+
+def model_flops(cfg, shape, per_step: bool = True) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) for a train step;
+    2*N*D for inference (forward only)."""
+    n_params = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_params * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_params * tokens
+    tokens = shape.global_batch  # decode: one token per sequence
+    return 2.0 * n_params * tokens

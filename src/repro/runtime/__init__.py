@@ -1,0 +1,9 @@
+from repro.runtime.fault_tolerance import (
+    HeartbeatMonitor, RestartPolicy, StragglerMitigator, run_supervised,
+)
+from repro.runtime.elastic import ElasticMeshPlan
+
+__all__ = [
+    "HeartbeatMonitor", "RestartPolicy", "StragglerMitigator",
+    "run_supervised", "ElasticMeshPlan",
+]

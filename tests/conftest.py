@@ -1,0 +1,9 @@
+import os
+
+# keep tests on the single default CPU device (the dry-run sets its own
+# device count in its own process); cap compilation parallelism noise
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_threefry_partitionable", True)

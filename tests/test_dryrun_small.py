@@ -1,0 +1,60 @@
+"""Mini dry-run integration test: the sharding machinery (param specs, cache
+specs, activation constraints, collective parsing) on a small debug mesh in a
+subprocess (device count must be set before jax initializes)."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, dataclasses
+import jax, jax.numpy as jnp
+from repro.configs.registry import get_arch
+from repro.configs.base import ShapeConfig
+from repro.launch.mesh import make_debug_mesh
+from repro.launch import steps as S
+from repro.models.shardctx import use_mesh
+from repro.roofline import analysis as RA
+
+mesh = make_debug_mesh(4, 2)
+cfg = dataclasses.replace(get_arch("qwen3-0.6b").reduced(), train_grad_accum=1)
+shape = ShapeConfig("mini_train", seq_len=64, global_batch=8, kind="train")
+out = {}
+with use_mesh(mesh):
+    params, opt = S.abstract_model_state(cfg, mesh, with_opt=True)
+    inputs = S.input_specs(cfg, shape, mesh)
+    fn = S.make_train_step(cfg)
+    lowered = jax.jit(fn, donate_argnums=(0, 1)).lower(
+        params, opt, inputs, jax.ShapeDtypeStruct((), jnp.int32))
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    coll = RA.parse_collective_bytes(compiled.as_text())
+    mem = compiled.memory_analysis()
+    out = dict(flops=float(cost.get("flops", 0)),
+               coll=coll, temp=mem.temp_size_in_bytes)
+
+    # decode path too
+    shape_d = ShapeConfig("mini_decode", seq_len=256, global_batch=8, kind="decode")
+    cache = S.abstract_cache(cfg, shape_d, mesh)
+    dec = jax.jit(S.make_decode_step(cfg), donate_argnums=(2,)).lower(
+        params, S.input_specs(cfg, shape_d, mesh)["token"], cache).compile()
+    out["decode_ok"] = True
+print("RESULT " + json.dumps(out))
+"""
+
+
+def test_mini_dryrun_on_debug_mesh():
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
+        cwd=Path(__file__).resolve().parent.parent, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][0]
+    res = json.loads(line[len("RESULT "):])
+    assert res["decode_ok"]
+    assert res["flops"] > 0
+    # TP (model axis) must produce collectives in the train step
+    assert sum(res["coll"].values()) > 0, res["coll"]

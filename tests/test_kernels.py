@@ -1,0 +1,135 @@
+"""Per-kernel correctness: shape/dtype sweeps, interpret=True vs pure-jnp
+oracle (ref.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels import ops
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.rglru_scan import rglru_scan_kernel
+from repro.kernels.taa_update import taa_gram, taa_apply
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 3e-5
+
+
+@pytest.mark.parametrize("shape", [(2, 4, 256, 256, 64), (1, 2, 128, 384, 128),
+                                   (1, 1, 256, 256, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 100), (False, 0)])
+def test_flash_attention(shape, dtype, causal, window):
+    b, h, s, t, d = shape
+    q = jax.random.normal(KEY, (b, h, s, d), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, h, t, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, h, t, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32) - want.astype(jnp.float32))))
+    assert err < _tol(dtype), err
+
+
+def test_flash_attention_window_changes_output():
+    b, h, s, d = 1, 2, 256, 64
+    q = jax.random.normal(KEY, (b, h, s, d))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, h, s, d))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, h, s, d))
+    full = flash_attention(q, k, v, causal=True, window=0, interpret=True)
+    win = flash_attention(q, k, v, causal=True, window=64, interpret=True)
+    assert float(jnp.max(jnp.abs(full - win))) > 1e-3
+
+
+@pytest.mark.parametrize("shape", [(2, 8, 4, 512, 64), (3, 16, 2, 1024, 128),
+                                   (2, 8, 8, 512, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode(shape, dtype):
+    b, h, kv, t, d = shape
+    q = jax.random.normal(KEY, (b, h, d), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, t, kv, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, t, kv, d), dtype)
+    lengths = jnp.asarray(np.random.default_rng(0).integers(1, t, size=b))
+    out = flash_decode(q, k, v, lengths, interpret=True)
+    want = ref.decode_ref(q, k, v, lengths)
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32) - want.astype(jnp.float32))))
+    assert err < _tol(dtype), err
+
+
+@pytest.mark.parametrize("shape,chunk", [((2, 256, 4, 32, 64), 64),
+                                         ((1, 128, 2, 64, 128), 128),
+                                         ((1, 512, 8, 16, 32), 64)])
+def test_ssd_scan(shape, chunk):
+    b, s, h, p, n = shape
+    x = jax.random.normal(KEY, (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, h)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(KEY, 2), (h,)) * 0.3)
+    B = jax.random.normal(jax.random.fold_in(KEY, 3), (b, s, n)) * 0.5
+    C = jax.random.normal(jax.random.fold_in(KEY, 4), (b, s, n)) * 0.5
+    y, fs = ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=True)
+    yr, fsr = ref.ssd_ref(x, dt, A, B, C)
+    assert float(jnp.max(jnp.abs(y - yr))) / (float(jnp.max(jnp.abs(yr))) + 1e-9) < 1e-4
+    assert float(jnp.max(jnp.abs(fs - fsr))) / (float(jnp.max(jnp.abs(fsr))) + 1e-9) < 1e-4
+
+
+@pytest.mark.parametrize("shape,bt,bc", [((2, 512, 256), 128, 128),
+                                         ((1, 256, 512), 256, 256),
+                                         ((3, 128, 128), 64, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rglru_scan(shape, bt, bc, dtype):
+    b, s, c = shape
+    a = jax.nn.sigmoid(jax.random.normal(KEY, (b, s, c))).astype(dtype)
+    bb = (jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, c)) * 0.3).astype(dtype)
+    h = rglru_scan_kernel(a, bb, bt=bt, bc=bc, interpret=True)
+    hr = ref.rglru_ref(a, bb)
+    err = float(jnp.max(jnp.abs(h.astype(jnp.float32) - hr)))
+    assert err < (5e-2 if dtype == jnp.bfloat16 else 1e-4), err
+
+
+@pytest.mark.parametrize("m,t,d", [(3, 16, 512), (5, 25, 700), (2, 8, 128)])
+def test_taa_gram_and_apply(m, t, d):
+    dF = jax.random.normal(KEY, (m, t, d))
+    dX = jax.random.normal(jax.random.fold_in(KEY, 1), (m, t, d))
+    R = jax.random.normal(jax.random.fold_in(KEY, 2), (t, d))
+    x = jax.random.normal(jax.random.fold_in(KEY, 3), (t, d))
+    mask = (jnp.arange(t) >= t // 3).astype(jnp.float32)
+    G, u = taa_gram(dF, R, mask, bd=256, interpret=True)
+    Gr, ur = ref.taa_gram_ref(dF, R, mask)
+    assert float(jnp.max(jnp.abs(G - Gr))) < 1e-2
+    assert float(jnp.max(jnp.abs(u - ur))) < 1e-2
+    gamma = jax.random.normal(jax.random.fold_in(KEY, 4), (t, m)) * 0.1
+    out = taa_apply(x, R, dX, dF, gamma, mask, bd=256, interpret=True)
+    outr = ref.taa_apply_ref(x, R, dX, dF, gamma, mask)
+    assert float(jnp.max(jnp.abs(out - outr))) < 1e-4
+
+
+def test_ops_kernel_taa_gamma_matches_core_anderson():
+    """ops.taa_rowwise_gamma (kernel path) == the solver's own suffix Grams."""
+    from repro.core.anderson import _suffix_sum
+    m, t, d = 3, 12, 300
+    dF = jax.random.normal(KEY, (m, t, d))
+    R = jax.random.normal(jax.random.fold_in(KEY, 1), (t, d))
+    mask = (jnp.arange(t) >= 2).astype(jnp.float32)
+    gamma_k = ops.taa_rowwise_gamma(dF, R, mask, lam=1e-6, use_pallas=True,
+                                    interpret=True)
+    dFw = dF * mask[None, :, None]
+    G = jnp.einsum("mtd,ntd->tmn", dFw, dFw)
+    u = jnp.einsum("mtd,td->tm", dFw, R * mask[:, None])
+    Gs = _suffix_sum(G) + 1e-6 * jnp.eye(m)
+    us = _suffix_sum(u)
+    gamma_ref = jnp.linalg.solve(Gs, us[..., None])[..., 0]
+    np.testing.assert_allclose(np.asarray(gamma_k), np.asarray(gamma_ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_ops_dispatch_cpu_uses_ref():
+    q = jax.random.normal(KEY, (1, 2, 128, 64))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 2, 128, 64))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 2, 128, 64))
+    out = ops.attention(q, k, v)  # auto: CPU -> ref
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-6)

@@ -1,0 +1,75 @@
+"""int8 KV cache: decode equivalence and error characterization.
+
+Accuracy note (documented in EXPERIMENTS §Perf E): per-(token, head) absmax
+int8 introduces ~0.4% kv error; the resulting LOGIT error scales with the
+attention score magnitude (softmax exponentiates absolute score deltas), so
+the feature is safe for score-bounded models (qk-norm, logit-softcap, trained
+networks) and is off by default.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.models import backbone
+from repro.models.attention import _quantize_kv, _dequantize_kv
+
+
+def test_quantize_roundtrip_error_bound():
+    k = jax.random.normal(jax.random.PRNGKey(2), (2, 24, 4, 64))
+    q8, s8 = _quantize_kv(k)
+    err = jnp.abs(_dequantize_kv(q8, s8, jnp.float32) - k)
+    # absmax/127 per (token, head): error <= scale/2 elementwise
+    bound = (jnp.max(jnp.abs(k), axis=-1, keepdims=True) / 127.0) * 0.51 + 1e-6
+    assert bool(jnp.all(err <= bound))
+
+
+@pytest.mark.parametrize("name", ["qwen3-0.6b"])  # qk-norm keeps scores bounded
+def test_int8_cache_decode_matches_forward(name):
+    cfg = dataclasses.replace(ARCHS[name].reduced(), kv_quant=True)
+    params = backbone.init(cfg, jax.random.PRNGKey(0))
+    b, s, p0 = 2, 24, 16
+    x = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab_size)
+    ref_logits, _ = backbone.forward(params, cfg, x)
+    cache = backbone.init_cache(cfg, b, s, jnp.float32)
+    assert cache["k"].dtype == jnp.int8
+    _, cache = backbone.prefill(params, cfg, x[:, :p0], cache)
+    outs = []
+    for t in range(p0, s):
+        d, cache = backbone.decode_step(params, cfg, x[:, t:t + 1], cache)
+        outs.append(d)
+    dec = jnp.concatenate(outs, axis=1)
+    scale = float(jnp.max(jnp.abs(ref_logits[:, p0:]))) + 1e-9
+    rel = float(jnp.max(jnp.abs(dec - ref_logits[:, p0:]))) / scale
+    assert rel < 5e-2, rel
+
+
+def test_int8_cache_halves_bytes():
+    cfg = ARCHS["qwen3-0.6b"]
+    cq = dataclasses.replace(cfg, kv_quant=True)
+    c_bf16 = backbone.abstract_cache(cfg, 2, 1024, jnp.bfloat16)
+    c_int8 = backbone.abstract_cache(cq, 2, 1024, jnp.bfloat16)
+    size = lambda c: sum(np.prod(l.shape) * l.dtype.itemsize
+                         for l in jax.tree.leaves(c))
+    assert size(c_int8) < 0.56 * size(c_bf16)
+
+
+def test_int8_flash_decode_kernel_matches_dequant_oracle():
+    from repro.kernels.flash_decode import flash_decode
+    from repro.kernels import ref
+    key = jax.random.PRNGKey(0)
+    b, h, kv, t, d = 2, 8, 4, 512, 64
+    q = jax.random.normal(key, (b, h, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, t, kv, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, t, kv, d))
+    lengths = jnp.array([300, 512])
+    kq, ks = _quantize_kv(k)
+    vq, vs = _quantize_kv(v)
+    out = flash_decode(q, kq, vq, lengths, k_scale=ks, v_scale=vs, bk=256,
+                       interpret=True)
+    want = ref.decode_ref(q, _dequantize_kv(kq, ks, jnp.float32),
+                          _dequantize_kv(vq, vs, jnp.float32), lengths)
+    assert float(jnp.max(jnp.abs(out - want))) < 2e-5

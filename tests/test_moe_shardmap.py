@@ -1,0 +1,40 @@
+"""Expert-parallel shard_map MoE == local dispatch (exact, drop-free
+capacity), run in a subprocess with an 8-device debug mesh."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses, json
+import jax, jax.numpy as jnp
+from repro.configs.registry import ARCHS
+from repro.models import pdefs
+from repro.models.moe import moe_def, moe_apply, _moe_local
+from repro.launch.mesh import make_debug_mesh
+from repro.models.shardctx import use_mesh
+
+cfg = dataclasses.replace(ARCHS["qwen2-moe-a2.7b"].reduced(),
+                          moe_capacity_factor=8.0, d_model=64)
+params = pdefs.init_params(moe_def(cfg), jax.random.PRNGKey(0))
+x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, 64)) * 0.5
+y_local, _ = _moe_local(params, cfg, x)
+mesh = make_debug_mesh(2, 4)
+with use_mesh(mesh):
+    y_sm, _ = jax.jit(lambda p, x: moe_apply(p, cfg, x))(params, x)
+err = float(jnp.max(jnp.abs(y_sm - y_local)))
+print("RESULT " + json.dumps({"err": err}))
+"""
+
+
+def test_moe_shard_map_matches_local():
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+             "JAX_PLATFORMS": "cpu"},
+        cwd=Path(__file__).resolve().parent.parent, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][0]
+    assert json.loads(line[7:])["err"] < 1e-4

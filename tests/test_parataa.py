@@ -1,0 +1,150 @@
+"""ParaTAA solver tests: equivalence with sequential sampling (the paper's
+central claim), convergence orderings, safeguard, windows, trajectory init."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ParaTAAConfig, ddim_coeffs, ddpm_coeffs, sample, sample_recording
+from repro.core.anderson import anderson_update, taa_update_literal
+from repro.diffusion.samplers import sequential_sample, draw_noises
+from tests.helpers import make_oracle_denoiser
+
+D = 48
+
+
+def _run(coeffs, eps_fn, xi, **kw):
+    cfg = ParaTAAConfig(**{**dict(order_k=8, history_m=3, mode="taa",
+                                  tau=1e-3, s_max=300), **kw})
+    return sample(eps_fn, coeffs, cfg, xi)
+
+
+@pytest.mark.parametrize("mk,label", [(ddim_coeffs, "ddim"), (ddpm_coeffs, "ddpm")])
+@pytest.mark.parametrize("mode,k,m", [("fp", 25, 1), ("fp", 8, 1),
+                                      ("taa", 8, 3), ("aa", 8, 3), ("aa+", 8, 3)])
+def test_matches_sequential(mk, label, mode, k, m):
+    """Every solver variant converges to the sequential trajectory."""
+    coeffs = mk(25)
+    eps_fn = make_oracle_denoiser(D)
+    xi = draw_noises(jax.random.PRNGKey(42), coeffs, (D,))
+    x_seq = sequential_sample(eps_fn, coeffs, xi)
+    traj, info = _run(coeffs, eps_fn, xi, mode=mode, order_k=k, history_m=m)
+    assert bool(info["converged"]), (mode, k, m)
+    err = float(jnp.max(jnp.abs(traj[0] - x_seq)))
+    scale = float(jnp.max(jnp.abs(x_seq)))
+    assert err < 2e-2 * scale, (mode, err, scale)
+
+
+def test_parallel_beats_sequential_step_count():
+    """Paper headline: parallel steps << T (4-14x at scale; >=2x here)."""
+    coeffs = ddim_coeffs(100)
+    eps_fn = make_oracle_denoiser(D)
+    xi = draw_noises(jax.random.PRNGKey(1), coeffs, (D,))
+    _, info = _run(coeffs, eps_fn, xi, mode="taa", order_k=8, history_m=3)
+    assert bool(info["converged"])
+    assert int(info["iters"]) <= 50, int(info["iters"])  # >= 2x reduction
+
+
+def test_taa_faster_than_plain_fp_ddpm():
+    """Fig. 2: TAA converges in fewer iterations than FP (DDPM-100)."""
+    coeffs = ddpm_coeffs(100)
+    eps_fn = make_oracle_denoiser(D)
+    xi = draw_noises(jax.random.PRNGKey(3), coeffs, (D,))
+    _, info_fp = _run(coeffs, eps_fn, xi, mode="fp", order_k=100, history_m=1)
+    _, info_taa = _run(coeffs, eps_fn, xi, mode="taa", order_k=8, history_m=3)
+    assert int(info_taa["iters"]) < int(info_fp["iters"])
+
+
+def test_safeguard_worst_case():
+    """Thm 3.6: safeguarded TAA converges within ~T iterations even when the
+    acceleration is useless (adversarial: tiny lam, random-ish dynamics)."""
+    coeffs = ddim_coeffs(15)
+    eps_fn = make_oracle_denoiser(D, nonlin=0.8, seed=5)
+    xi = draw_noises(jax.random.PRNGKey(4), coeffs, (D,))
+    _, info = _run(coeffs, eps_fn, xi, mode="taa", order_k=4, history_m=3,
+                   safeguard=True, s_max=4 * 15)
+    assert bool(info["converged"])
+
+
+def test_window_subequations():
+    """Sliding window (Sec 2.2): w < T converges to the same solution."""
+    coeffs = ddim_coeffs(30)
+    eps_fn = make_oracle_denoiser(D)
+    xi = draw_noises(jax.random.PRNGKey(5), coeffs, (D,))
+    x_seq = sequential_sample(eps_fn, coeffs, xi)
+    traj, info = _run(coeffs, eps_fn, xi, mode="taa", window=10, s_max=400)
+    assert bool(info["converged"])
+    err = float(jnp.max(jnp.abs(traj[0] - x_seq)))
+    assert err < 2e-2 * float(jnp.max(jnp.abs(x_seq)))
+    # windowed runs use fewer evals per iteration
+    assert int(info["nfe"]) == 10 * int(info["iters"])
+
+
+def test_trajectory_init_reduces_iterations():
+    """Sec 4.2: initializing from a similar solved trajectory converges in
+    fewer iterations than noise init."""
+    coeffs = ddim_coeffs(50)
+    eps1 = make_oracle_denoiser(D, seed=0)
+    eps2 = make_oracle_denoiser(D, seed=0, nonlin=0.35)  # "similar prompt"
+    xi = draw_noises(jax.random.PRNGKey(6), coeffs, (D,))
+    traj1, info1 = _run(coeffs, eps1, xi)
+    assert bool(info1["converged"])
+    _, info_cold = _run(coeffs, eps2, xi)
+    _, info_warm = sample(eps2, coeffs,
+                          ParaTAAConfig(order_k=8, history_m=3, mode="taa",
+                                        tau=1e-3, s_max=300, t_init=35),
+                          xi, x_init=traj1)
+    assert int(info_warm["iters"]) <= int(info_cold["iters"])
+
+
+def test_recording_matches_plain():
+    coeffs = ddpm_coeffs(20)
+    eps_fn = make_oracle_denoiser(D)
+    xi = draw_noises(jax.random.PRNGKey(8), coeffs, (D,))
+    t1, i1 = _run(coeffs, eps_fn, xi, s_max=60)
+    t2, i2 = sample_recording(eps_fn, coeffs,
+                              ParaTAAConfig(order_k=8, history_m=3, mode="taa",
+                                            tau=1e-3, s_max=60), xi)
+    np.testing.assert_allclose(np.asarray(t1), np.asarray(t2), atol=1e-5)
+    assert int(i1["iters"]) == int(i2["iters"])
+
+
+def test_min_iterations_bound():
+    """Information propagation: FP with order k needs >= ceil((T-1)/k) iters."""
+    coeffs = ddim_coeffs(40)
+    eps_fn = make_oracle_denoiser(D)
+    xi = draw_noises(jax.random.PRNGKey(9), coeffs, (D,))
+    for k in [2, 5]:
+        _, info = _run(coeffs, eps_fn, xi, mode="fp", order_k=k, history_m=1,
+                       s_max=500)
+        assert int(info["iters"]) >= int(np.ceil((coeffs.T - 1) / k))
+
+
+def test_taa_suffix_matches_literal_theorem_3_2():
+    rng = np.random.default_rng(1)
+    T, Dm, m = 10, 6, 3
+    x = rng.normal(size=(T, Dm)).astype(np.float32)
+    R = rng.normal(size=(T, Dm)).astype(np.float32)
+    wmask = (np.arange(T) >= 3)
+    dX = rng.normal(size=(m, T, Dm)).astype(np.float32) * wmask[None, :, None]
+    dF = rng.normal(size=(m, T, Dm)).astype(np.float32) * wmask[None, :, None]
+    ours = anderson_update(jnp.asarray(x), jnp.asarray(R), jnp.asarray(dX),
+                           jnp.asarray(dF), jnp.asarray(wmask),
+                           mode="taa", lam=1e-6)
+    lit = taa_update_literal(x, R, dX, dF, 3, T - 1, 1e-6)
+    np.testing.assert_allclose(np.asarray(ours)[3:], lit[3:], rtol=2e-3, atol=2e-3)
+
+
+def test_batched_sampling_via_vmap():
+    """Serving path: vmap over independent samples."""
+    coeffs = ddim_coeffs(20)
+    eps_fn = make_oracle_denoiser(D)
+    cfg = ParaTAAConfig(order_k=6, history_m=3, mode="taa", tau=1e-3, s_max=80)
+    keys = jax.random.split(jax.random.PRNGKey(11), 3)
+    xis = jnp.stack([draw_noises(k, coeffs, (D,)) for k in keys])
+    trajs, infos = jax.vmap(lambda xi: sample(eps_fn, coeffs, cfg, xi))(xis)
+    assert trajs.shape == (3, 21, D)
+    for i in range(3):
+        x_seq = sequential_sample(eps_fn, coeffs, xis[i])
+        err = float(jnp.max(jnp.abs(trajs[i, 0] - x_seq)))
+        assert err < 2e-2 * float(jnp.max(jnp.abs(x_seq)))

@@ -1,0 +1,127 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.coeffs import ddim_coeffs, system_matrices
+from repro.core.system import apply_F_literal
+from repro.core.anderson import anderson_update, _suffix_sum
+from repro.models.attention import _blocked_attention, _dense_attention, _repeat_kv
+from repro.models import backbone
+from repro.configs.registry import ARCHS
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(T=st.integers(4, 30), k=st.integers(1, 30), eta=st.floats(0.0, 1.0),
+       seed=st.integers(0, 10_000))
+def test_kth_order_system_equals_literal(T, k, eta, seed):
+    """Vectorized banded matrices == Definition 2.1 for arbitrary (T, k, eta)."""
+    k = min(k, T)
+    coeffs = ddim_coeffs(T, eta=eta)
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(T + 1, 8)).astype(np.float32)
+    e = rng.normal(size=(T + 1, 8)).astype(np.float32)
+    xi = rng.normal(size=(T + 1, 8)).astype(np.float32)
+    lift, weps, wxi = system_matrices(coeffs, k).as_f32()
+    vec = lift @ x + weps @ e + wxi @ xi
+    lit = apply_F_literal(coeffs, k, x, e, xi)
+    np.testing.assert_allclose(vec, lit, rtol=2e-3, atol=2e-3)
+
+
+@settings(**SETTINGS)
+@given(T=st.integers(4, 20), m=st.integers(1, 5), seed=st.integers(0, 1000))
+def test_suffix_sum_is_suffix_sum(T, m, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(T, m)).astype(np.float32))
+    s = _suffix_sum(x, axis=0)
+    for t in range(T):
+        np.testing.assert_allclose(np.asarray(s[t]), np.asarray(x[t:]).sum(0),
+                                   rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 1000), t1=st.integers(0, 8))
+def test_fp_update_is_anderson_with_identity(seed, t1):
+    """mode='fp' == x + R on the window, x elsewhere (G = -I case)."""
+    rng = np.random.default_rng(seed)
+    T, D, m = 12, 6, 3
+    x = jnp.asarray(rng.normal(size=(T, D)).astype(np.float32))
+    R = jnp.asarray(rng.normal(size=(T, D)).astype(np.float32))
+    hist = jnp.zeros((m, T, D))
+    mask = jnp.arange(T) >= t1
+    out = anderson_update(x, R, hist, hist, mask, mode="fp", lam=1e-8)
+    want = jnp.where(mask[:, None], x + R, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 1000))
+def test_taa_with_zero_history_is_fp(seed):
+    """Empty history ring (iteration 0) must reduce TAA to plain FP."""
+    rng = np.random.default_rng(seed)
+    T, D, m = 10, 5, 3
+    x = jnp.asarray(rng.normal(size=(T, D)).astype(np.float32))
+    R = jnp.asarray(rng.normal(size=(T, D)).astype(np.float32))
+    zeros = jnp.zeros((m, T, D))
+    mask = jnp.ones(T, bool)
+    out = anderson_update(x, R, zeros, zeros, mask, mode="taa", lam=1e-8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x + R), atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(s=st.sampled_from([128, 256, 320]), window=st.sampled_from([0, 64, 100]),
+       kvb=st.sampled_from([64, 96, 128]), seed=st.integers(0, 100))
+def test_blocked_attention_equals_dense(s, window, kvb, seed):
+    key = jax.random.PRNGKey(seed)
+    b, h, kv, d = 1, 4, 2, 32
+    q = jax.random.normal(key, (b, s, h, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kv, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kv, d))
+    kf, vf = _repeat_kv(k, h // kv), _repeat_kv(v, h // kv)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    blocked = _blocked_attention(q, kf, vf, pos, pos, window=window,
+                                 causal=True, kv_block=kvb)
+    dense = _dense_attention(q, kf, vf, pos, pos, window=window, causal=True)
+    np.testing.assert_allclose(np.asarray(blocked), np.asarray(dense),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(p0=st.integers(4, 20), extra=st.integers(1, 8), seed=st.integers(0, 50))
+def test_decode_prefix_invariance(p0, extra, seed):
+    """Decode after prefill(p0) == forward at those positions, any split."""
+    cfg = ARCHS["qwen3-0.6b"].reduced()
+    key = jax.random.PRNGKey(seed)
+    params = backbone.init(cfg, jax.random.PRNGKey(0))
+    s = p0 + extra
+    x = jax.random.randint(key, (1, s), 0, cfg.vocab_size)
+    ref_logits, _ = backbone.forward(params, cfg, x)
+    cache = backbone.init_cache(cfg, 1, s, jnp.float32)
+    _, cache = backbone.prefill(params, cfg, x[:, :p0], cache)
+    outs = []
+    for t in range(p0, s):
+        d, cache = backbone.decode_step(params, cfg, x[:, t:t + 1], cache)
+        outs.append(d)
+    dec = jnp.concatenate(outs, axis=1)
+    scale = float(jnp.max(jnp.abs(ref_logits))) + 1e-9
+    assert float(jnp.max(jnp.abs(dec - ref_logits[:, p0:]))) / scale < 2e-2
+
+
+@settings(max_examples=8, deadline=None)
+@given(b=st.integers(1, 4), s=st.sampled_from([8, 16, 24]), seed=st.integers(0, 100))
+def test_chunked_xent_equals_plain_ce(b, s, seed):
+    cfg = ARCHS["qwen3-0.6b"].reduced()
+    key = jax.random.PRNGKey(seed)
+    d, v = cfg.d_model, 97
+    h = jax.random.normal(key, (b, s, d))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (d, v)) * 0.05
+    labels = jax.random.randint(jax.random.fold_in(key, 2), (b, s), 0, v)
+    got = backbone._chunked_xent(h, w, labels, 0.0)
+    logits = (h @ w).astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    want = jnp.mean(logz - gold)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)

@@ -1,0 +1,55 @@
+"""Roofline machinery tests: HLO collective parsing + term math."""
+import numpy as np
+
+from repro.roofline.analysis import (parse_collective_bytes, roofline_terms,
+                                     model_flops, PEAK_FLOPS, HBM_BW, LINK_BW)
+from repro.configs.registry import ARCHS, get_shape
+
+HLO = """
+HloModule jit_step
+ENTRY %main (param.0: f32[128,256]) -> f32[128,256] {
+  %param.0 = f32[128,256]{1,0} parameter(0)
+  %ag = f32[256,256]{1,0} all-gather(%param.0), replica_groups={}, dimensions={0}
+  %ar = f32[128,256]{1,0} all-reduce(%param.0), to_apply=%add
+  %ars = f32[128,256]{1,0} all-reduce-start(%param.0), to_apply=%add
+  %ard = f32[128,256]{1,0} all-reduce-done(%ars)
+  %rs = f32[8,256]{1,0} reduce-scatter(%param.0), dimensions={0}
+  %cp = bf16[64,64]{1,0} collective-permute(%small), source_target_pairs={{0,1}}
+  %small = bf16[64,64]{1,0} convert(%rs)
+  ROOT %out = f32[128,256]{1,0} add(%ar, %param.0)
+}
+"""
+
+
+def test_parse_collective_bytes_counts_operands_once():
+    out = parse_collective_bytes(HLO)
+    f32_bytes = 128 * 256 * 4
+    assert out["all-gather"] == f32_bytes
+    # all-reduce + all-reduce-start counted; -done skipped (no double count)
+    assert out["all-reduce"] == 2 * f32_bytes
+    assert out["reduce-scatter"] == f32_bytes
+    assert out["collective-permute"] == 64 * 64 * 2
+
+
+def test_roofline_terms_and_dominance():
+    t = roofline_terms(flops_per_chip=197e12, bytes_per_chip=819e9 * 2,
+                       coll_bytes_per_chip=50e9 * 0.5)
+    assert abs(t.compute_s - 1.0) < 1e-9
+    assert abs(t.memory_s - 2.0) < 1e-9
+    assert abs(t.collective_s - 0.5) < 1e-9
+    assert t.dominant == "memory"
+    assert t.step_time_lb == t.memory_s
+    assert 0 < t.roofline_fraction <= 1
+
+
+def test_model_flops_moe_counts_active_only():
+    dense = ARCHS["granite-8b"]
+    moe = ARCHS["moonshot-v1-16b-a3b"]
+    shape = get_shape("train_4k")
+    # moonshot has ~16B total params but ~3B active; model_flops must use active
+    total = moe.param_count(active_only=False)
+    active = moe.param_count(active_only=True)
+    assert total > 2.5 * active
+    assert model_flops(moe, shape) == 6.0 * active * shape.global_batch * shape.seq_len
+    assert model_flops(dense, get_shape("decode_32k")) == \
+        2.0 * dense.param_count(active_only=True) * 128

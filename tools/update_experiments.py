@@ -1,0 +1,26 @@
+"""Inject the rendered roofline tables into EXPERIMENTS.md.
+
+    PYTHONPATH=src python tools/update_experiments.py results/dryrun_final
+"""
+import re
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+from repro.roofline.report import render  # noqa: E402
+
+
+def main():
+    results = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_final"
+    exp = Path(__file__).resolve().parent.parent / "EXPERIMENTS.md"
+    text = exp.read_text()
+    tables = render(results, "single") + "\n\n" + render(results, "multi")
+    new = re.sub(r"<!-- DRYRUN:BEGIN -->.*<!-- DRYRUN:END -->",
+                 f"<!-- DRYRUN:BEGIN -->\n{tables}\n<!-- DRYRUN:END -->",
+                 text, flags=re.S)
+    exp.write_text(new)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()
