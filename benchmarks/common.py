@@ -10,12 +10,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import ARCHS
-from repro.core import ParaTAAConfig, ddim_coeffs, ddpm_coeffs, sample, sample_recording
+from repro.core import ddim_coeffs, ddpm_coeffs
 from repro.diffusion import dit as dit_mod
-from repro.diffusion.samplers import draw_noises, sequential_sample
 from repro.data.pipeline import LatentPipeline
 from repro.launch import steps as S
 from repro.optim import adamw_init
+from repro.sampling import draw_noises, get_sampler, run as run_request
 
 NUM_TOKENS = 16
 
@@ -46,13 +46,15 @@ def scenario(sampler: str, T: int):
 
 
 def solve(eps_fn, coeffs, *, mode="taa", k=8, m=3, window=0, s_max=None,
-          tau=1e-3, record=False, xi=None, seed=0, shape=None, **kw):
+          tau=1e-3, record=False, xi=None, seed=0, shape=None, init=None, **kw):
+    """Benchmark front-end to repro.sampling.run; returns the legacy
+    (trajectory, info) pair the figure modules consume."""
     if xi is None:
         xi = draw_noises(jax.random.PRNGKey(seed), coeffs, shape)
-    cfg = ParaTAAConfig(order_k=k, history_m=m, mode=mode, window=window,
-                        tau=tau, s_max=s_max or 3 * coeffs.T, **kw)
-    fn = sample_recording if record else sample
-    return fn(eps_fn, coeffs, cfg, xi)
+    spec = get_sampler(mode, order_k=k, history_m=m, window=window,
+                       tau=tau, s_max=s_max or 3 * coeffs.T, **kw)
+    res = run_request(spec, eps_fn, coeffs, xi, init=init, diagnostics=record)
+    return res.trajectory, res.info
 
 
 def timed(fn, *args, reps: int = 3, **kw):

@@ -5,7 +5,7 @@ import jax
 import numpy as np
 
 from benchmarks import common
-from repro.diffusion.samplers import draw_noises, sequential_sample
+from repro.sampling import draw_noises, sequential_sample
 
 
 def run(T: int = 100):

@@ -7,8 +7,7 @@ import jax
 import numpy as np
 
 from benchmarks import common
-from repro.core import ParaTAAConfig, sample, sample_recording
-from repro.diffusion.samplers import draw_noises, sequential_sample
+from repro.sampling import WarmStart, draw_noises, sequential_sample
 
 
 def run(T: int = 50):
@@ -25,11 +24,10 @@ def run(T: int = 50):
     for name, t_init, x_init in [("random", 0, None),
                                  ("traj_P1_Tinit50", 50, traj1),
                                  ("traj_P1_Tinit35", 35, traj1)]:
-        t_init = min(t_init, T)
-        cfgp = ParaTAAConfig(order_k=8, history_m=3, mode="taa", tau=1e-3,
-                             s_max=3 * T, t_init=t_init)
+        init = None if x_init is None else WarmStart(x_init, min(t_init, T))
         (traj, info), dt = common.timed(
-            lambda: sample_recording(eps2, coeffs, cfgp, xi, x_init=x_init),
+            lambda: common.solve(eps2, coeffs, xi=xi, mode="taa", k=8, m=3,
+                                 s_max=3 * T, record=True, init=init),
             reps=1)
         q = common.quality_steps(np.asarray(info["x0_history"]), x_seq2, tol=5e-2)
         rows.append((f"fig5/ddim{T}/{name}", dt * 1e6,

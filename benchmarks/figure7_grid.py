@@ -5,7 +5,7 @@ import jax
 import numpy as np
 
 from benchmarks import common
-from repro.diffusion.samplers import draw_noises
+from repro.sampling import draw_noises
 
 
 def run(T: int = 50, n_seeds: int = 2):

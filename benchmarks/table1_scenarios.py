@@ -10,7 +10,7 @@ import jax
 import numpy as np
 
 from benchmarks import common
-from repro.diffusion.samplers import draw_noises, sequential_sample
+from repro.sampling import draw_noises, sequential_sample
 
 
 def run(scenarios=(("ddim", 25), ("ddim", 50), ("ddim", 100), ("ddpm", 100)),

@@ -9,11 +9,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.registry import ARCHS, ASSIGNED
-from repro.core import ParaTAAConfig, ddim_coeffs, sample
+from repro.core import ddim_coeffs
 from repro.diffusion import dit
-from repro.diffusion.samplers import draw_noises, sequential_sample
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 from repro.diffusion.schedules import make_schedule
+from repro.sampling import draw_noises, get_sampler, run, sequential_sample
 
 
 def main():
@@ -54,10 +54,9 @@ def main():
         return dit.wrapper_apply(params, cfg, xw, taus)
 
     x_seq = sequential_sample(eps_fn, coeffs, xi)
-    traj, info = sample(eps_fn, coeffs,
-                        ParaTAAConfig(order_k=8, history_m=3, mode="taa"), xi)
-    err = float(jnp.linalg.norm(traj[0] - x_seq) / (jnp.linalg.norm(x_seq) + 1e-9))
-    print(f"{args.arch}: sequential 50 evals -> ParaTAA {int(info['iters'])} "
+    res = run(get_sampler("taa"), eps_fn, coeffs, xi)
+    err = float(jnp.linalg.norm(res.x0 - x_seq) / (jnp.linalg.norm(x_seq) + 1e-9))
+    print(f"{args.arch}: sequential 50 evals -> ParaTAA {int(res.iters)} "
           f"parallel steps, rel err {err:.2e}")
 
 

@@ -1,5 +1,15 @@
-"""Quickstart: train a tiny DiT on synthetic latents, then sample with
-ParaTAA and verify it reproduces sequential DDIM sampling in ~3x fewer steps.
+"""Quickstart for the unified `repro.sampling` API — the canonical entry
+point for every sampler in this repo.
+
+Train a tiny DiT on synthetic latents, then:
+
+  1. resolve sampler strategies from the registry (`get_sampler("seq")`,
+     `get_sampler("taa")`) instead of hand-building config objects;
+  2. draw one sample functionally with `repro.sampling.run`;
+  3. serve a batch of typed `SampleRequest`s through a `SamplingEngine`,
+     which compiles ONE program per (arch, T, solver) and vmaps ParaTAA over
+     the request axis — verifying ParaTAA reproduces sequential DDIM in ~3x
+     fewer parallel steps, for the whole batch at once.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,12 +17,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.registry import ARCHS
-from repro.core import ParaTAAConfig, ddim_coeffs, sample
+from repro.core import ddim_coeffs
 from repro.data.pipeline import LatentPipeline
 from repro.diffusion import dit
-from repro.diffusion.samplers import draw_noises, sequential_sample
 from repro.launch import steps as S
 from repro.optim import adamw_init
+from repro.sampling import (SampleRequest, SamplingEngine, draw_noises,
+                            get_sampler, run)
 
 
 def main():
@@ -29,7 +40,7 @@ def main():
         params, opt, m = step(params, opt, batch, jnp.asarray(i, jnp.int32))
     print(f"  final loss {float(m['loss']):.4f}")
 
-    # --- 2. sequential DDIM-50 (the baseline ParaTAA must reproduce) --------
+    # --- 2. functional API: one request, seq vs ParaTAA ---------------------
     coeffs = ddim_coeffs(50)
     xi = draw_noises(jax.random.PRNGKey(42), coeffs, (16, cfg.latent_dim))
 
@@ -37,16 +48,29 @@ def main():
         y = jnp.full((xw.shape[0],), 3, jnp.int32)
         return dit.dit_apply(params, cfg, xw, taus, y)
 
-    x_seq = sequential_sample(eps_fn, coeffs, xi)
-    print(f"sequential DDIM-50: 50 model evaluations")
-
-    # --- 3. ParaTAA ----------------------------------------------------------
-    solver = ParaTAAConfig(order_k=8, history_m=3, mode="taa", tau=1e-3)
-    traj, info = sample(eps_fn, coeffs, solver, xi)
-    err = float(jnp.linalg.norm(traj[0] - x_seq) / jnp.linalg.norm(x_seq))
-    print(f"ParaTAA:            {int(info['iters'])} parallel steps "
-          f"({50 / int(info['iters']):.1f}x fewer), rel err {err:.2e}")
+    seq = run(get_sampler("seq"), eps_fn, coeffs, xi)
+    print("sequential DDIM-50: 50 model evaluations")
+    par = run(get_sampler("taa"), eps_fn, coeffs, xi)
+    err = float(jnp.linalg.norm(par.x0 - seq.x0) / jnp.linalg.norm(seq.x0))
+    print(f"ParaTAA:            {int(par.iters)} parallel steps "
+          f"({50 / int(par.iters):.1f}x fewer), rel err {err:.2e}")
     assert err < 2e-2
+
+    # --- 3. batched serving: one engine, one compile, vmapped requests ------
+    def eps_apply(params, xw, taus, labels):
+        return dit.dit_apply(params, cfg, xw, taus, labels)
+
+    engine = SamplingEngine(eps_apply, params, coeffs, get_sampler("taa"),
+                            sample_shape=(16, cfg.latent_dim))
+    requests = [SampleRequest(label=i % cfg.num_classes, seed=100 + i)
+                for i in range(4)]
+    results = engine.run_batch(requests, batch_size=4)
+    iters = [r.iters for r in results]
+    print(f"engine: {len(results)} requests in {engine.stats['batches']} "
+          f"batch(es), {engine.stats['traces']} compilation(s); "
+          f"iters per request {iters}; "
+          f"throughput {engine.throughput():.2f} req/s")
+    assert engine.stats["traces"] == 1
 
 
 if __name__ == "__main__":

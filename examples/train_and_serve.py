@@ -20,6 +20,8 @@ def main():
     p = argparse.ArgumentParser()
     p.add_argument("--steps", type=int, default=200)
     p.add_argument("--requests", type=int, default=4)
+    p.add_argument("--batch-size", type=int, default=4,
+                   help="requests per SamplingEngine dispatch")
     args = p.parse_args()
 
     with tempfile.TemporaryDirectory() as ckdir:
@@ -29,6 +31,7 @@ def main():
                     "--log-every", "25"])
         print("\n=== serving with ParaTAA (restored from checkpoint) ===")
         serve_main(["--smoke", "--requests", str(args.requests),
+                    "--batch-size", str(args.batch_size),
                     "--steps-T", "50", "--solver", "taa", "--ckpt", ckdir])
         print("\n=== reference: sequential sampling ===")
         serve_main(["--smoke", "--requests", "1", "--steps-T", "50",

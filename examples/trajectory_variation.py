@@ -1,5 +1,6 @@
 """Sec 5.3 / Fig 5: smooth image variation by initializing ParaTAA from an
-existing trajectory of a similar condition.
+existing trajectory of a similar condition — warm starts are first-class
+`init=` options on the unified `repro.sampling` API.
 
 Generates a sample for condition P1, then re-samples for condition P2 three
 ways: cold (noise init), warm with T_init=50, warm with T_init=35 — and
@@ -13,12 +14,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import ARCHS
-from repro.core import ParaTAAConfig, ddim_coeffs, sample, sample_recording
+from repro.core import ddim_coeffs
 from repro.data.pipeline import LatentPipeline
 from repro.diffusion import dit
-from repro.diffusion.samplers import draw_noises, sequential_sample
 from repro.launch import steps as S
 from repro.optim import adamw_init
+from repro.sampling import (WarmStart, draw_noises, get_sampler, run,
+                            sequential_sample)
 
 
 def main():
@@ -48,20 +50,18 @@ def main():
     print(f"|x1 - x2| = {float(jnp.linalg.norm(x1 - x2)):.3f} "
           "(the two conditions' sequential samples)")
 
-    traj1, info1 = sample(eps_for(2), coeffs,
-                          ParaTAAConfig(order_k=8, history_m=3, mode='taa'), xi)
-    print(f"P1 sampled in {int(info1['iters'])} parallel steps")
+    taa = get_sampler("taa", s_max=2 * T)
+    res1 = run(taa, eps1, coeffs, xi)
+    print(f"P1 sampled in {int(res1.iters)} parallel steps")
 
-    for name, t_init, x_init in [("cold", 0, None),
-                                 ("warm T_init=50", 50, traj1),
-                                 ("warm T_init=35", 35, traj1)]:
-        solver = ParaTAAConfig(order_k=8, history_m=3, mode="taa",
-                               t_init=t_init, s_max=2 * T)
-        _, info = sample_recording(eps2, coeffs, solver, xi, x_init=x_init)
-        hist = np.asarray(info["x0_history"])
+    for name, init in [("cold", None),
+                       ("warm T_init=50", WarmStart(res1.trajectory, 50)),
+                       ("warm T_init=35", WarmStart(res1.trajectory, 35))]:
+        res = run(taa, eps2, coeffs, xi, init=init, diagnostics=True)
+        hist = np.asarray(res.diagnostics["x0_history"])
         d1 = np.linalg.norm(hist - np.asarray(x1).reshape(1, -1), axis=1)
         d2 = np.linalg.norm(hist - np.asarray(x2).reshape(1, -1), axis=1)
-        n = int(info["iters"])
+        n = int(res.iters)
         path = " ".join(f"({a:.2f},{b:.2f})" for a, b in
                         zip(d1[:min(n, 6)], d2[:min(n, 6)]))
         print(f"{name:16s}: {n:3d} steps; (|.-x1|, |.-x2|) per iter: {path}")

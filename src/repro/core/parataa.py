@@ -142,10 +142,11 @@ def _iterate(carry, static, cfg: ParaTAAConfig, eps_fn, xi, noise_k, thresh):
     )
 
 
-def _init_carry(coeffs, cfg, static, xi, x_init, dtype):
+def _init_carry(coeffs, cfg, static, xi, x_init, dtype, t_init=None):
     T, w = static["T"], static["w"]
     D = xi.shape[1]
-    t_init = cfg.t_init if cfg.t_init else T
+    if t_init is None:
+        t_init = cfg.t_init if cfg.t_init else T
     if x_init is None:
         x_init = xi  # standard Gaussian init (paper Sec. 5 setting)
     x = x_init.astype(dtype)
@@ -158,7 +159,7 @@ def _init_carry(coeffs, cfg, static, xi, x_init, dtype):
         R_prev=jnp.zeros((T, D), jnp.float32),
         dX=jnp.zeros((m, T, D), dtype),
         dF=jnp.zeros((m, T, D), dtype),
-        t2=jnp.asarray(t_init - 1, jnp.int32),
+        t2=jnp.asarray(t_init, jnp.int32) - 1,
         it=jnp.asarray(0, jnp.int32),
         done=jnp.asarray(False),
         r_last=jnp.full((T,), jnp.inf, jnp.float32),
@@ -167,12 +168,15 @@ def _init_carry(coeffs, cfg, static, xi, x_init, dtype):
 
 
 def sample(eps_fn: Callable, coeffs: SolverCoeffs, cfg: ParaTAAConfig, xi,
-           x_init: Optional[jax.Array] = None, dtype=jnp.float32):
+           x_init: Optional[jax.Array] = None, dtype=jnp.float32,
+           t_init=None):
     """Run ParaTAA to convergence (or s_max).
 
     eps_fn: (x (w, *shape), taus (w,)) -> eps (w, *shape)
     xi:     (T+1, *shape) noise draws (xi[T] = x_T)
     x_init: optional (T+1, *shape) initialization trajectory (Sec. 4.2)
+    t_init: optional runtime override of cfg.t_init; may be a traced int32
+            scalar, so a vmapped batch can mix warm-start depths per sample
     Returns (trajectory (T+1, *shape), info dict).
     """
     shape = xi.shape[1:]
@@ -188,7 +192,7 @@ def sample(eps_fn: Callable, coeffs: SolverCoeffs, cfg: ParaTAAConfig, xi,
     noise_k = static["wxi_k"] @ xi_f.astype(jnp.float32)
     thresh = (cfg.tau ** 2) * static["thresh_scale"] * D
 
-    carry0 = _init_carry(coeffs, cfg, static, xi_f, x0_f, dtype)
+    carry0 = _init_carry(coeffs, cfg, static, xi_f, x0_f, dtype, t_init)
 
     def cond(c):
         return (~c["done"]) & (c["it"] < cfg.s_max)
@@ -203,7 +207,8 @@ def sample(eps_fn: Callable, coeffs: SolverCoeffs, cfg: ParaTAAConfig, xi,
 
 
 def sample_recording(eps_fn, coeffs: SolverCoeffs, cfg: ParaTAAConfig, xi,
-                     x_init: Optional[jax.Array] = None, dtype=jnp.float32):
+                     x_init: Optional[jax.Array] = None, dtype=jnp.float32,
+                     t_init=None):
     """Fixed-s_max scan variant that records per-iteration diagnostics:
     residual vectors (s_max, T) and x_0 iterates (s_max, D) — used by the
     benchmark reproductions of Figures 1, 2, 4, 6 and the early-stopping
@@ -220,7 +225,7 @@ def sample_recording(eps_fn, coeffs: SolverCoeffs, cfg: ParaTAAConfig, xi,
     noise_k = static["wxi_k"] @ xi_f.astype(jnp.float32)
     thresh = (cfg.tau ** 2) * static["thresh_scale"] * D
 
-    carry0 = _init_carry(coeffs, cfg, static, xi_f, x0_f, dtype)
+    carry0 = _init_carry(coeffs, cfg, static, xi_f, x0_f, dtype, t_init)
 
     def step(c, _):
         c2 = jax.lax.cond(

@@ -2,8 +2,14 @@
 
 These are the ground truth that parallel sampling must reproduce (Thm 2.2:
 the triangular system's unique solution IS this trajectory).
+
+The canonical public entry point is ``repro.sampling`` (which re-exports
+``sequential_sample`` / ``draw_noises``); the module-level ``sequential_sample``
+here is kept as a deprecation shim for pre-`repro.sampling` callers.
 """
 from __future__ import annotations
+
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +23,8 @@ def draw_noises(key, coeffs: SolverCoeffs, shape):
     return jax.random.normal(key, (coeffs.T + 1,) + tuple(shape), jnp.float32)
 
 
-def sequential_sample(eps_fn, coeffs: SolverCoeffs, xi, *, return_traj: bool = False):
+def _sequential_sample(eps_fn, coeffs: SolverCoeffs, xi, *,
+                       return_traj: bool = False):
     """Runs eq. (6) exactly: T sequential eps evaluations.
 
     eps_fn: (x (1,*shape), tau (1,)) -> (1,*shape)   [batched over timesteps]
@@ -33,7 +40,6 @@ def sequential_sample(eps_fn, coeffs: SolverCoeffs, xi, *, return_traj: bool = F
     def body(x_t, t):
         # t runs T..1
         e = eps_fn(x_t[None], taus[t][None])[0]
-        bc = (1,) * (x_t.ndim)
         x_prev = a[t] * x_t + b[t] * e + c[t - 1] * xi[t - 1]
         return x_prev, x_prev
 
@@ -44,3 +50,14 @@ def sequential_sample(eps_fn, coeffs: SolverCoeffs, xi, *, return_traj: bool = F
     # traj_rev holds x_{T-1}, ..., x_0; assemble (T+1, *shape) in index order
     traj = jnp.concatenate([traj_rev[::-1], xi[T][None]], axis=0)
     return traj
+
+
+def sequential_sample(eps_fn, coeffs: SolverCoeffs, xi, *,
+                      return_traj: bool = False):
+    """Deprecated alias — use ``repro.sampling.sequential_sample`` or
+    ``repro.sampling.run(get_sampler("seq"), ...)``."""
+    warnings.warn(
+        "repro.diffusion.samplers.sequential_sample is deprecated; use "
+        "repro.sampling.sequential_sample (or repro.sampling.run with the "
+        "'seq' sampler spec)", DeprecationWarning, stacklevel=2)
+    return _sequential_sample(eps_fn, coeffs, xi, return_traj=return_traj)

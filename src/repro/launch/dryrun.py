@@ -68,7 +68,7 @@ def _loss_cost(cfg, shape, mesh):
 
 
 def _cost_of(compiled):
-    cost = compiled.cost_analysis()
+    cost = RA.normalize_cost_analysis(compiled.cost_analysis())
     coll = RA.parse_collective_bytes(compiled.as_text())
     return (float(cost.get("flops", 0.0)),
             float(cost.get("bytes accessed", 0.0)),
@@ -254,7 +254,8 @@ def run_parataa_cell(multi_pod: bool, *, T: int = 100, window: int = 64,
     """
     import numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
-    from repro.core import ParaTAAConfig, ddim_coeffs, sample
+    from repro.core import ddim_coeffs
+    from repro.core.parataa import ParaTAAConfig, sample
     from repro.core.coeffs import system_matrices
     from repro.core.anderson import anderson_update
     from repro.core.system import first_order_residuals

@@ -1,62 +1,60 @@
 """Serving driver: batched ParaTAA diffusion sampling (the paper's workload).
 
-Each request is (class label | conditioning, seed).  Requests are batched;
-for every batch the driver runs ParaTAA with the window-of-timesteps folded
-into the denoiser batch — that axis (+ the request batch) is what shards over
-the `data` mesh axis on a real pod, while the denoiser is TP-sharded over
-`model`.  Sequential DDIM/DDPM is available as the reference/--mode seq
-baseline, and straggler mitigation duplicates the slowest window shard on
-spare capacity (value-deterministic, first-finisher-wins).
+Each request is (class label | conditioning, seed, optional warm start).
+Requests run through one ``repro.sampling.SamplingEngine`` per
+(arch, T, solver) configuration: the engine vmaps ParaTAA over the request
+axis, so every solver iteration evaluates the denoiser on a single
+(requests x window) batch — the axis that shards over the `data` mesh
+dimension on a real pod, while the denoiser is TP-sharded over `model`.
+Sequential DDIM/DDPM is the same engine with the "seq" spec.  Straggler
+mitigation duplicates the slowest window shard on spare capacity
+(value-deterministic, first-finisher-wins).
 
-    PYTHONPATH=src python -m repro.launch.serve --smoke --requests 4 \
-        --solver taa --steps-T 50
+    PYTHONPATH=src python -m repro.launch.serve --smoke --requests 8 \
+        --solver taa --steps-T 50 --batch-size 4
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_arch
-from repro.core import ParaTAAConfig, ddim_coeffs, ddpm_coeffs, sample
+from repro.core import ddim_coeffs, ddpm_coeffs
 from repro.diffusion import dit as dit_mod
-from repro.diffusion.samplers import draw_noises, sequential_sample
 from repro.runtime import StragglerMitigator
+from repro.sampling import SampleRequest, SamplingEngine, get_sampler
 
 
-def make_eps_fn(params, cfg, label):
-    def eps_fn(xw, taus_w):
-        n = xw.shape[0]
-        y = jnp.full((n,), label, jnp.int32)
-        return dit_mod.dit_apply(params, cfg, xw, taus_w, y)
-    return eps_fn
+def make_eps_apply(cfg):
+    """Engine-shaped denoiser adapter: (params, x, taus, labels) -> eps."""
+    def eps_apply(params, xw, taus_w, labels):
+        return dit_mod.dit_apply(params, cfg, xw, taus_w, labels)
+    return eps_apply
 
 
-def serve_batch(params, cfg, requests, *, coeffs, solver_cfg, num_tokens=16,
-                mode="parataa"):
-    """requests: list of (label, seed).  Returns stacked x0 latents + stats."""
-    outs, stats = [], []
+def make_engine(params, cfg, coeffs, spec, *, num_tokens=16):
+    return SamplingEngine(make_eps_apply(cfg), params, coeffs, spec,
+                          sample_shape=(num_tokens, cfg.latent_dim))
+
+
+def serve_batch(engine: SamplingEngine, requests, *, batch_size=None):
+    """Run requests through the engine ``batch_size`` at a time.
+
+    requests: list of SampleRequest, or legacy (label, seed) tuples.
+    Returns (stacked x0 latents, per-request stats, straggler mitigator).
+    """
+    requests = [r if isinstance(r, SampleRequest) else SampleRequest(*r)
+                for r in requests]
     straggler = StragglerMitigator()
-    for label, seed in requests:
-        t0 = time.time()
-        xi = draw_noises(jax.random.PRNGKey(seed), coeffs,
-                         (num_tokens, cfg.latent_dim))
-        eps_fn = make_eps_fn(params, cfg, label)
-        if mode == "seq":
-            x0 = sequential_sample(eps_fn, coeffs, xi)
-            info = {"iters": coeffs.T, "nfe": coeffs.T}
-        else:
-            traj, info = sample(eps_fn, coeffs, solver_cfg, xi)
-            x0 = traj[0]
-        dt = time.time() - t0
-        straggler.record(dt)
-        outs.append(x0)
-        stats.append({"label": label, "iters": int(info["iters"]),
-                      "nfe": int(info["nfe"]), "wall_s": dt})
-    return jnp.stack(outs), stats, straggler
+    results = engine.run_batch(requests, batch_size=batch_size)
+    for wall in engine.last_batch_walls:  # one latency sample per dispatch
+        straggler.record(wall)
+    stats = [{"label": res.request.label, "iters": res.iters, "nfe": res.nfe,
+              "wall_s": res.wall_s} for res in results]
+    return jnp.stack([res.x0 for res in results]), stats, straggler
 
 
 def main(argv=None):
@@ -64,6 +62,8 @@ def main(argv=None):
     p.add_argument("--arch", default="dit-xl")
     p.add_argument("--smoke", action="store_true")
     p.add_argument("--requests", type=int, default=4)
+    p.add_argument("--batch-size", type=int, default=0,
+                   help="requests per engine dispatch (0 = all in one batch)")
     p.add_argument("--steps-T", type=int, default=50)
     p.add_argument("--solver", default="taa", choices=["fp", "aa", "taa", "seq"])
     p.add_argument("--sampler", default="ddim", choices=["ddim", "ddpm"])
@@ -89,24 +89,33 @@ def main(argv=None):
             print(f"restored checkpoint step {tree['step']}")
 
     coeffs = (ddim_coeffs if args.sampler == "ddim" else ddpm_coeffs)(args.steps_T)
-    solver_cfg = ParaTAAConfig(order_k=args.order_k, history_m=args.history_m,
-                               window=args.window,
-                               mode="taa" if args.solver == "taa" else args.solver,
-                               s_max=2 * args.steps_T)
+    if args.solver == "seq":
+        spec = get_sampler("seq")
+    else:
+        spec = get_sampler(args.solver, order_k=args.order_k,
+                           history_m=args.history_m, window=args.window)
+    engine = make_engine(params, cfg, coeffs, spec)
+
     rng = np.random.default_rng(args.seed)
-    requests = [(int(rng.integers(0, cfg.num_classes)), int(rng.integers(1 << 30)))
+    requests = [SampleRequest(label=int(rng.integers(0, cfg.num_classes)),
+                              seed=int(rng.integers(1 << 30)))
                 for _ in range(args.requests)]
     outs, stats, straggler = serve_batch(
-        params, cfg, requests, coeffs=coeffs, solver_cfg=solver_cfg,
-        mode="seq" if args.solver == "seq" else "parataa")
+        engine, requests, batch_size=args.batch_size or None)
     for st in stats:
+        # wall_s is the wall time of the DISPATCH the request rode in (its
+        # latency), not exclusive per-request compute — batch members share it
         print(f"label={st['label']:4d} iters={st['iters']:3d} "
-              f"nfe={st['nfe']:5d} wall={st['wall_s']:.2f}s")
+              f"nfe={st['nfe']:5d} batch_wall={st['wall_s']:.2f}s")
     seq_steps = coeffs.T
     mean_iters = np.mean([s["iters"] for s in stats])
     print(f"mean parallel steps {mean_iters:.1f} vs sequential {seq_steps} "
           f"=> {seq_steps/mean_iters:.1f}x step reduction; "
           f"p50 deadline {straggler.deadline()}")
+    print(f"batched throughput {engine.throughput():.2f} req/s "
+          f"({engine.stats['requests']} requests / "
+          f"{engine.stats['batches']} batches, "
+          f"{engine.stats['traces']} compilation(s))")
     return outs, stats
 
 

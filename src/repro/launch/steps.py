@@ -92,7 +92,7 @@ def make_decode_step(cfg: ArchConfig):
 def make_parataa_serve_step(cfg: ArchConfig, solver_cfg, coeffs):
     """One full ParaTAA sampling run as a single jit-able program (DiT arch);
     the window batch inside is the sharded parallel axis."""
-    from repro.core import sample as parataa_sample
+    from repro.core.parataa import sample as parataa_sample
 
     def serve_step(params, xi, labels):
         def eps_fn(xw, taus_w):

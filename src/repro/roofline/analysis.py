@@ -52,6 +52,15 @@ def _shape_bytes(shape_str: str) -> int:
     return total
 
 
+def normalize_cost_analysis(cost) -> Dict[str, float]:
+    """Normalize Compiled.cost_analysis() across JAX versions: older releases
+    return a list with one properties-dict per program, newer ones return the
+    dict directly.  Always yields a (possibly empty) flat dict."""
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost) if cost else {}
+
+
 def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
     """Per-collective-kind operand bytes (per device) from partitioned HLO.
 

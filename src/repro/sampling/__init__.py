@@ -1,0 +1,30 @@
+"""repro.sampling — the unified sampling API (canonical entry point).
+
+One typed surface for every way this repo draws samples:
+
+  * ``SamplerSpec`` / ``get_sampler`` — strategy registry unifying
+    seq | fp | fp+ | aa | aa+ | taa (the old mode-string + s_max heuristics).
+  * ``run(spec, eps_fn, coeffs, xi, init=..., diagnostics=...)`` — one
+    request, functional; recording is a flag, warm starts are first-class.
+  * ``SamplingEngine`` — compile-once, vmap-batched execution of
+    ``SampleRequest`` batches for serving (per-request labels, seeds, warm
+    starts as data to a single jitted program).
+  * ``sequential_sample`` / ``draw_noises`` — the eq. (6) reference sampler
+    and noise convention, re-exported here as their canonical home.
+
+``repro.core.sample`` / ``sample_recording`` and
+``repro.diffusion.samplers.sequential_sample`` remain as deprecation shims.
+"""
+from repro.sampling.api import run, sequential_sample, draw_noises
+from repro.sampling.engine import SamplingEngine
+from repro.sampling.specs import (FULL_ORDER, SamplerSpec, get_sampler,
+                                  register_sampler, sampler_names)
+from repro.sampling.types import SampleRequest, SampleResult, WarmStart
+
+__all__ = [
+    "run", "sequential_sample", "draw_noises",
+    "SamplingEngine",
+    "FULL_ORDER", "SamplerSpec", "get_sampler", "register_sampler",
+    "sampler_names",
+    "SampleRequest", "SampleResult", "WarmStart",
+]

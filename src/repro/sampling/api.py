@@ -1,0 +1,61 @@
+"""Functional single-request entry point of the unified sampling API.
+
+``run(spec, eps_fn, coeffs, xi)`` executes one sampling request with any
+registered strategy — sequential DDIM/DDPM or any ParaTAA variant — and
+returns a typed :class:`SampleResult`.  Recording (the old
+``sample_recording``) is the ``diagnostics=True`` flag; warm starts (Sec 4.2)
+are the ``init=`` option.  For batched serving use
+:class:`repro.sampling.SamplingEngine`, which vmaps this same path over the
+request axis.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+
+from repro.core.coeffs import SolverCoeffs
+from repro.core import parataa as _parataa
+from repro.diffusion.samplers import _sequential_sample, draw_noises  # noqa: F401
+from repro.sampling.specs import SamplerSpec
+from repro.sampling.types import (DIAG_KEYS, SampleRequest, SampleResult,
+                                  WarmStart)
+
+#: canonical (non-deprecated) sequential reference sampler
+sequential_sample = _sequential_sample
+
+
+def run(spec: SamplerSpec, eps_fn: Callable, coeffs: SolverCoeffs, xi, *,
+        init: Optional[WarmStart] = None, diagnostics: bool = False,
+        request: Optional[SampleRequest] = None,
+        dtype=jnp.float32) -> SampleResult:
+    """Execute one sampling request.
+
+    eps_fn: (x (w, *shape), taus (w,)) -> eps (w, *shape)
+    xi:     (T+1, *shape) noise draws (xi[T] = x_T), e.g. from draw_noises
+    init:   optional WarmStart (trajectory + restart depth T_init)
+    diagnostics: record per-iteration residuals / x0 iterates (scan variant)
+    """
+    T = coeffs.T
+    spec.check_request_flags(diagnostics=diagnostics,
+                             warm_start=init is not None)
+    if spec.is_sequential:
+        traj = sequential_sample(eps_fn, coeffs, xi, return_traj=True)
+        return SampleResult(x0=traj[0], trajectory=traj, iters=T, nfe=T,
+                            converged=True, request=request)
+
+    solver = spec.solver_config(T)
+    x_init = t_init = None
+    if init is not None:
+        x_init = init.trajectory
+        t_init = init.t_init if init.t_init else None  # 0 => full restart
+    fn = _parataa.sample_recording if diagnostics else _parataa.sample
+    traj, info = fn(eps_fn, coeffs, solver, xi, x_init=x_init, dtype=dtype,
+                    t_init=t_init)
+    diag = None
+    if diagnostics:
+        diag = {k: info[k] for k in DIAG_KEYS}
+    return SampleResult(x0=traj[0], trajectory=traj, iters=info["iters"],
+                        nfe=info["nfe"], converged=info["converged"],
+                        residuals=info["residuals"] if not diagnostics else None,
+                        diagnostics=diag, request=request)

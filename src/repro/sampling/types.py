@@ -1,0 +1,73 @@
+"""Typed request/result surface of the unified sampling API.
+
+A ``SampleRequest`` is everything the serving layer knows about one sample:
+conditioning label, RNG seed, and an optional warm start (Sec 4.2 trajectory
+initialization).  A ``SampleResult`` is everything a caller may want back:
+the x0 latent, the full trajectory, solver statistics, and (when requested)
+per-iteration diagnostics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+#: per-iteration recordings produced by a diagnostics=True run, in the order
+#: they appear in SampleResult.diagnostics (single source for api + engine)
+DIAG_KEYS = ("res_history", "x0_history", "t2_history", "done_history")
+
+
+@dataclasses.dataclass(frozen=True)
+class WarmStart:
+    """Trajectory initialization (paper Sec 4.2): start the solver from a
+    previously solved trajectory of a similar condition.
+
+    trajectory: (T+1, *sample_shape) solved trajectory to initialize from.
+    t_init:     restart depth T_init — rows above t_init are treated as
+                already-converged; 0 means "full restart" (the trajectory is
+                only used as the initial iterate, all rows active).
+    """
+    trajectory: Any
+    t_init: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class SampleRequest:
+    """One sampling request: (conditioning, seed, optional warm start)."""
+    label: int = 0
+    seed: int = 0
+    init: Optional[WarmStart] = None
+
+
+@dataclasses.dataclass
+class SampleResult:
+    """Outcome of one request.
+
+    x0:          the generated latent, shape ``sample_shape``.
+    trajectory:  full (T+1, *sample_shape) trajectory.
+    iters:       parallelizable solver iterations executed (== T for seq).
+    nfe:         number of eps evaluations issued (== T for seq).
+    converged:   solver reached its tolerance (always True for seq).
+    residuals:   final per-timestep first-order residuals (parallel only).
+    diagnostics: per-iteration recordings (res_history, x0_history, ...)
+                 when the run was issued with diagnostics=True.
+    request:     the originating request (label/seed round-trip).
+    wall_s:      caller-observed wall time of the batch the request ran in.
+    """
+    x0: Any
+    trajectory: Any
+    iters: int
+    nfe: int
+    converged: bool
+    residuals: Optional[Any] = None
+    diagnostics: Optional[Dict[str, Any]] = None
+    request: Optional[SampleRequest] = None
+    wall_s: float = 0.0
+
+    @property
+    def info(self) -> Dict[str, Any]:
+        """Legacy-shaped info dict (the old ``sample`` second return value)."""
+        d = dict(iters=self.iters, nfe=self.nfe, converged=self.converged,
+                 residuals=self.residuals)
+        if self.diagnostics:
+            d.update(self.diagnostics)
+        return d

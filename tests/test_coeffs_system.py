@@ -6,7 +6,7 @@ import pytest
 
 from repro.core.coeffs import ddim_coeffs, ddpm_coeffs, system_matrices, abar_prod
 from repro.core.system import apply_F_literal, first_order_residuals, noise_term
-from repro.diffusion.samplers import sequential_sample, draw_noises
+from repro.sampling import sequential_sample, draw_noises
 from tests.helpers import make_oracle_denoiser
 
 D = 48

@@ -29,7 +29,7 @@ with use_mesh(mesh):
     lowered = jax.jit(fn, donate_argnums=(0, 1)).lower(
         params, opt, inputs, jax.ShapeDtypeStruct((), jnp.int32))
     compiled = lowered.compile()
-    cost = compiled.cost_analysis()
+    cost = RA.normalize_cost_analysis(compiled.cost_analysis())
     coll = RA.parse_collective_bytes(compiled.as_text())
     mem = compiled.memory_analysis()
     out = dict(flops=float(cost.get("flops", 0)),

@@ -6,12 +6,12 @@ import numpy as np
 import pytest
 
 from repro.configs.registry import ARCHS
-from repro.core import ParaTAAConfig, ddim_coeffs, ddpm_coeffs, sample
+from repro.core import ddim_coeffs, ddpm_coeffs
 from repro.diffusion import dit as dit_mod
-from repro.diffusion.samplers import draw_noises, sequential_sample
 from repro.launch import steps as S
 from repro.data.pipeline import LatentPipeline
 from repro.optim import adamw_init
+from repro.sampling import draw_noises, get_sampler, run, sequential_sample
 
 
 @pytest.fixture(scope="module")
@@ -45,11 +45,10 @@ def test_parataa_reproduces_sequential_trained_dit(trained_dit, mk):
         return dit_mod.dit_apply(params, cfg, xw, taus, y)
 
     x_seq = sequential_sample(eps_fn, coeffs, xi)
-    solver = ParaTAAConfig(order_k=8, history_m=3, mode="taa", tau=1e-3, s_max=100)
-    traj, info = sample(eps_fn, coeffs, solver, xi)
-    assert bool(info["converged"])
-    assert int(info["iters"]) < coeffs.T  # fewer parallel steps than sequential
-    err = float(jnp.max(jnp.abs(traj[0] - x_seq)))
+    res = run(get_sampler("taa", s_max=100), eps_fn, coeffs, xi)
+    assert bool(res.converged)
+    assert int(res.iters) < coeffs.T  # fewer parallel steps than sequential
+    err = float(jnp.max(jnp.abs(res.x0 - x_seq)))
     scale = float(jnp.max(jnp.abs(x_seq))) + 1e-9
     assert err / scale < 2e-2, (err, scale)
 
@@ -78,9 +77,9 @@ def test_train_driver_restart_continues(tmp_path):
 
 def test_serve_driver_smoke():
     from repro.launch.serve import main
-    outs, stats = main(["--smoke", "--requests", "2", "--steps-T", "20",
-                        "--solver", "taa"])
-    assert outs.shape[0] == 2
+    outs, stats = main(["--smoke", "--requests", "4", "--steps-T", "20",
+                        "--solver", "taa", "--batch-size", "2"])
+    assert outs.shape[0] == 4
     assert all(s["iters"] < 20 for s in stats)
 
 

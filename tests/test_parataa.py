@@ -5,9 +5,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import ParaTAAConfig, ddim_coeffs, ddpm_coeffs, sample, sample_recording
+from repro.core import ddim_coeffs, ddpm_coeffs
+from repro.core.parataa import ParaTAAConfig, sample, sample_recording
 from repro.core.anderson import anderson_update, taa_update_literal
-from repro.diffusion.samplers import sequential_sample, draw_noises
+from repro.sampling import sequential_sample, draw_noises
 from tests.helpers import make_oracle_denoiser
 
 D = 48

@@ -1,0 +1,236 @@
+"""Unified `repro.sampling` API tests: spec registry resolution, engine
+batched execution ≡ the per-request loop, warm-start `init=`, compile-once
+behaviour, diagnostics flag, and the deprecation shims."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as core_shim
+import repro.diffusion.samplers as samplers_shim
+from repro.core import ddim_coeffs
+from repro.core.parataa import sample as parataa_sample
+from repro.diffusion.schedules import make_schedule
+from repro.sampling import (SampleRequest, SamplerSpec, SamplingEngine,
+                            WarmStart, draw_noises, get_sampler,
+                            register_sampler, run, sequential_sample)
+from tests.helpers import make_oracle_denoiser
+
+D = 32
+N_LABELS = 4
+
+
+def make_label_denoiser(dim=D, n_labels=N_LABELS, nonlin=0.3, seed=0):
+    """Engine-shaped oracle denoiser: the conditioning label selects the
+    data point the model denoises toward."""
+    key = jax.random.PRNGKey(seed)
+    abar = jnp.asarray(make_schedule("linear", 1000)[0], jnp.float32)
+    xstars = jax.random.normal(key, (n_labels, dim))
+    W = jax.random.normal(jax.random.fold_in(key, 3), (dim, dim)) / np.sqrt(dim)
+
+    def eps_apply(params, x, taus, y):
+        ab = abar[jnp.clip(taus.astype(jnp.int32), 0, 999)][:, None]
+        xs = xstars[jnp.clip(y, 0, n_labels - 1)]
+        lin = (x - jnp.sqrt(ab) * xs) / jnp.sqrt(1.0 - ab + 1e-8)
+        return lin + nonlin * jnp.tanh(x @ W)
+
+    return eps_apply
+
+
+def make_engine(coeffs, spec, **kw):
+    return SamplingEngine(make_label_denoiser(**kw), params=None,
+                          coeffs=coeffs, spec=spec, sample_shape=(D,))
+
+
+# --- spec registry ---------------------------------------------------------
+
+def test_registry_resolution_and_overrides():
+    taa = get_sampler("taa")
+    assert taa.solver == "taa" and not taa.is_sequential
+    fp = get_sampler("fp")
+    assert fp.solver_config(30).order_k == 30      # FULL_ORDER resolves to T
+    assert fp.solver_config(30).history_m == 1
+    tuned = get_sampler("taa", order_k=4, s_max=7)
+    assert tuned.solver_config(50).order_k == 4
+    assert tuned.solver_config(50).s_max == 7
+    assert get_sampler("taa").solver_config(50).s_max == 100  # 2*T heuristic
+    with pytest.raises(KeyError):
+        get_sampler("nope")
+    with pytest.raises(ValueError):
+        get_sampler("seq").solver_config(10)
+
+
+def test_register_custom_sampler():
+    register_sampler(SamplerSpec(name="taa-tight", solver="taa", tau=1e-4))
+    assert get_sampler("taa-tight").tau == 1e-4
+
+
+# --- engine ≡ per-request loop --------------------------------------------
+
+def test_engine_batched_equals_per_request_loop():
+    """Acceptance: a vmap-batched engine dispatch reproduces the old
+    one-request-at-a-time loop bitwise on CPU."""
+    T = 15
+    coeffs = ddim_coeffs(T)
+    spec = get_sampler("taa")
+    eng = make_engine(coeffs, spec)
+    reqs = [SampleRequest(label=i % N_LABELS, seed=50 + i) for i in range(4)]
+    results = eng.run_batch(reqs, batch_size=4)
+
+    eps_apply = make_label_denoiser()
+    solver = spec.solver_config(T)
+    for req, res in zip(reqs, results):
+        xi = draw_noises(jax.random.PRNGKey(req.seed), coeffs, (D,))
+
+        def eps_fn(xw, taus, label=req.label):
+            return eps_apply(None, xw, taus,
+                             jnp.full((xw.shape[0],), label, jnp.int32))
+
+        traj, info = parataa_sample(eps_fn, coeffs, solver, xi)
+        assert np.array_equal(np.asarray(res.trajectory), np.asarray(traj)), \
+            f"request {req} diverged from the per-request loop"
+        assert res.iters == int(info["iters"])
+        assert res.nfe == int(info["nfe"])
+        assert res.converged
+
+
+def test_engine_seq_spec_matches_reference():
+    T = 12
+    coeffs = ddim_coeffs(T)
+    eng = make_engine(coeffs, get_sampler("seq"))
+    reqs = [SampleRequest(label=i, seed=7 + i) for i in range(3)]
+    results = eng.run_batch(reqs)
+    eps_apply = make_label_denoiser()
+    for req, res in zip(reqs, results):
+        xi = draw_noises(jax.random.PRNGKey(req.seed), coeffs, (D,))
+
+        def eps_fn(xw, taus, label=req.label):
+            return eps_apply(None, xw, taus,
+                             jnp.full((xw.shape[0],), label, jnp.int32))
+
+        x_ref = sequential_sample(eps_fn, coeffs, xi)
+        assert res.iters == T and res.nfe == T
+        np.testing.assert_array_equal(np.asarray(res.x0), np.asarray(x_ref))
+
+
+# --- warm starts -----------------------------------------------------------
+
+def test_warm_start_init_converges_faster():
+    """Sec 4.2 via the functional API: trajectory init + T_init beats cold."""
+    coeffs = ddim_coeffs(50)
+    eps1 = make_oracle_denoiser(D, seed=0)
+    eps2 = make_oracle_denoiser(D, seed=0, nonlin=0.35)  # "similar prompt"
+    xi = draw_noises(jax.random.PRNGKey(6), coeffs, (D,))
+    spec = get_sampler("taa", s_max=300)
+    res1 = run(spec, eps1, coeffs, xi)
+    assert bool(res1.converged)
+    cold = run(spec, eps2, coeffs, xi)
+    warm = run(spec, eps2, coeffs, xi, init=WarmStart(res1.trajectory, 35))
+    assert bool(warm.converged)
+    assert int(warm.iters) <= int(cold.iters)
+    assert int(warm.nfe) < int(cold.nfe)
+
+
+def test_engine_mixed_cold_and_warm_batch():
+    """Cold and warm requests share ONE compiled program (warm start is
+    data: init trajectory + t_init scalar)."""
+    T = 20
+    coeffs = ddim_coeffs(T)
+    spec = get_sampler("taa")
+    eng = make_engine(coeffs, spec)
+    seed_req = SampleRequest(label=1, seed=3)
+    [solved] = eng.run_batch([seed_req])
+    cold = SampleRequest(label=2, seed=3)
+    warm = SampleRequest(label=2, seed=3,
+                         init=WarmStart(solved.trajectory, t_init=12))
+    res_cold, res_warm = eng.run_batch([cold, warm], batch_size=2)
+    assert res_warm.converged and res_cold.converged
+    assert res_warm.iters <= res_cold.iters
+    # one trace for the B=1 seed batch, one for the B=2 mixed batch
+    assert eng.stats["traces"] == 2
+
+
+# --- compile-once + padding ------------------------------------------------
+
+def test_engine_compiles_once_across_batches():
+    coeffs = ddim_coeffs(10)
+    eng = make_engine(coeffs, get_sampler("taa"))
+    reqs = [SampleRequest(label=i % N_LABELS, seed=i) for i in range(5)]
+    # 3 dispatches (2+2+1-padded) must reuse one compiled program
+    results = eng.run_batch(reqs, batch_size=2)
+    assert len(results) == 5
+    assert eng.stats["batches"] == 3
+    assert eng.stats["traces"] == 1
+    eng.run_batch(reqs[:2], batch_size=2)
+    assert eng.stats["traces"] == 1
+    assert eng.throughput() > 0
+    # padded tail request matches its unpadded execution
+    [ref] = eng.run_batch([reqs[4]], batch_size=1)  # B=1: separate trace
+    np.testing.assert_array_equal(np.asarray(results[4].x0),
+                                  np.asarray(ref.x0))
+
+
+# --- diagnostics flag ------------------------------------------------------
+
+def test_diagnostics_flag_records_history():
+    T = 20
+    coeffs = ddim_coeffs(T)
+    eps = make_oracle_denoiser(D)
+    xi = draw_noises(jax.random.PRNGKey(8), coeffs, (D,))
+    spec = get_sampler("taa", s_max=60)
+    plain = run(spec, eps, coeffs, xi)
+    rec = run(spec, eps, coeffs, xi, diagnostics=True)
+    np.testing.assert_allclose(np.asarray(plain.trajectory),
+                               np.asarray(rec.trajectory), atol=1e-5)
+    assert int(plain.iters) == int(rec.iters)
+    assert rec.diagnostics["res_history"].shape == (60, T)
+    assert rec.diagnostics["x0_history"].shape == (60, D)
+    # legacy info-dict view keeps the old keys
+    assert "res_history" in rec.info and "iters" in rec.info
+    # the sequential sampler has no solver iterations to record or warm-start
+    with pytest.raises(ValueError):
+        run(get_sampler("seq"), eps, coeffs, xi, diagnostics=True)
+    with pytest.raises(ValueError):
+        run(get_sampler("seq"), eps, coeffs, xi,
+            init=WarmStart(plain.trajectory, 10))
+    eng = make_engine(coeffs, get_sampler("seq"))
+    with pytest.raises(ValueError):
+        eng.run_batch([SampleRequest(seed=1)], diagnostics=True)
+    with pytest.raises(ValueError):
+        eng.run_batch([SampleRequest(seed=1,
+                                     init=WarmStart(plain.trajectory, 10))])
+
+
+# --- deprecation shims -----------------------------------------------------
+
+def test_deprecated_shims_delegate():
+    T = 10
+    coeffs = ddim_coeffs(T)
+    eps = make_oracle_denoiser(D)
+    xi = draw_noises(jax.random.PRNGKey(2), coeffs, (D,))
+    spec = get_sampler("taa")
+    new = run(spec, eps, coeffs, xi)
+
+    with pytest.warns(DeprecationWarning):
+        traj, info = core_shim.sample(eps, coeffs, spec.solver_config(T), xi)
+    np.testing.assert_array_equal(np.asarray(traj), np.asarray(new.trajectory))
+    assert int(info["iters"]) == int(new.iters)
+
+    with pytest.warns(DeprecationWarning):
+        traj_r, _ = core_shim.sample_recording(
+            eps, coeffs, spec.solver_config(T), xi)
+    np.testing.assert_allclose(np.asarray(traj_r), np.asarray(new.trajectory),
+                               atol=1e-5)
+
+    with pytest.warns(DeprecationWarning):
+        x0_shim = samplers_shim.sequential_sample(eps, coeffs, xi)
+    np.testing.assert_array_equal(np.asarray(x0_shim),
+                                  np.asarray(sequential_sample(eps, coeffs, xi)))
+
+    # the canonical entry points do NOT warn
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        run(spec, eps, coeffs, xi)
+        sequential_sample(eps, coeffs, xi)

@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# CI entry point: install dev requirements (best-effort — offline images
+# already bake in jax/pytest; hypothesis enables the property suite) and run
+# the tier-1 verify command from ROADMAP.md.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pip install -q -r requirements-dev.txt || \
+    echo "WARNING: pip install failed (offline?); running with available deps"
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
