@@ -15,7 +15,8 @@ from repro.diffusion import dit as dit_mod
 from repro.data.pipeline import LatentPipeline
 from repro.launch import steps as S
 from repro.optim import adamw_init
-from repro.sampling import draw_noises, get_sampler, run as run_request
+from repro.sampling import (Placement, SamplingEngine, draw_noises,
+                            get_sampler, run as run_request)
 
 NUM_TOKENS = 16
 
@@ -43,6 +44,23 @@ def eps_fn_for(cfg, params, label: int = 3):
 
 def scenario(sampler: str, T: int):
     return (ddim_coeffs if sampler == "ddim" else ddpm_coeffs)(T)
+
+
+def serving_engine(coeffs, *, spec=None, placement=None):
+    """A SamplingEngine over the shared trained tiny DiT, built on a
+    Placement — so batched benchmarks time the SAME (mesh-aware) program the
+    serving layer dispatches, not a private unsharded clone of it.
+
+    placement: repro.sampling.Placement (default: the host placement).
+    """
+    from repro.launch.serve import make_eps_apply
+
+    cfg, params = trained_dit()
+    return SamplingEngine(make_eps_apply(cfg), params, coeffs,
+                          spec or get_sampler("taa"),
+                          sample_shape=(NUM_TOKENS, cfg.latent_dim),
+                          placement=placement or Placement.host(),
+                          param_defs=dit_mod.dit_defs(cfg))
 
 
 def solve(eps_fn, coeffs, *, mode="taa", k=8, m=3, window=0, s_max=None,

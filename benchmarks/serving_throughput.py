@@ -1,0 +1,47 @@
+"""Batched-serving throughput: the engine's dispatch path (pack -> one
+jitted vmapped program -> unpack) across batch sizes, on an explicit
+Placement.
+
+By default this measures the host placement (CPU, 1 device).  Set
+``REPRO_BENCH_MESH`` to a registered mesh name (e.g. ``debug``, with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``) to measure the
+sharded program instead — same engine, same rows, placement swapped.
+"""
+from __future__ import annotations
+
+import os
+
+from benchmarks import common
+from repro.sampling import Placement, SampleRequest
+
+
+def _placement() -> Placement:
+    name = os.environ.get("REPRO_BENCH_MESH", "")
+    if not name:
+        return Placement.host()
+    from repro.launch.mesh import make_mesh
+    return Placement(mesh=make_mesh(name))
+
+
+def run(T: int = 25, n_requests: int = 8):
+    placement = _placement()
+    coeffs = common.scenario("ddim", T)
+    rows = []
+    for batch_size in (1, 4, n_requests):
+        engine = common.serving_engine(coeffs, placement=placement)
+        requests = [SampleRequest(label=i % 10, seed=200 + i)
+                    for i in range(n_requests)]
+        engine.run_batch(requests, batch_size=batch_size)  # compile
+        engine.stats.update(batches=0, requests=0, wall_s=0.0)
+        engine.run_batch(requests, batch_size=batch_size)
+        util = min(d["slot_utilization"] for d in engine.last_dispatches)
+        rows.append((
+            f"serve/ddim{T}/bs{batch_size}/"
+            f"{'mesh' if placement.is_sharded else 'host'}",
+            engine.stats["wall_s"] / max(engine.stats["requests"], 1) * 1e6,
+            f"reqps={engine.throughput():.2f};"
+            f"dispatches={engine.stats['batches']};"
+            f"traces={engine.stats['traces']};"
+            f"min_slot_util={util:.2f};"
+            f"devices={placement.num_devices}"))
+    return rows

@@ -2,39 +2,13 @@
 models via triangular nonlinear equations + Triangular Anderson Acceleration.
 
 The solver implementation lives in ``repro.core.parataa``; the canonical
-user-facing API is ``repro.sampling``.  The module-level ``sample`` /
-``sample_recording`` here are deprecation shims kept so pre-`repro.sampling`
-callers don't break.
+user-facing API is ``repro.sampling`` (``run`` for one request,
+``SamplingEngine`` for batched serving).
 """
-import warnings
-
 from repro.core.coeffs import SolverCoeffs, ddim_coeffs, ddpm_coeffs, system_matrices
 from repro.core.parataa import ParaTAAConfig
-from repro.core.parataa import sample as _sample
-from repro.core.parataa import sample_recording as _sample_recording
-
-
-def sample(*args, **kwargs):
-    """Deprecated alias for ``repro.core.parataa.sample`` — use
-    ``repro.sampling.run`` (diagnostics=False) instead."""
-    warnings.warn(
-        "repro.core.sample is deprecated; use repro.sampling.run (or "
-        "repro.sampling.SamplingEngine for batched serving)",
-        DeprecationWarning, stacklevel=2)
-    return _sample(*args, **kwargs)
-
-
-def sample_recording(*args, **kwargs):
-    """Deprecated alias for ``repro.core.parataa.sample_recording`` — use
-    ``repro.sampling.run(..., diagnostics=True)`` instead."""
-    warnings.warn(
-        "repro.core.sample_recording is deprecated; use "
-        "repro.sampling.run(..., diagnostics=True)",
-        DeprecationWarning, stacklevel=2)
-    return _sample_recording(*args, **kwargs)
-
 
 __all__ = [
     "SolverCoeffs", "ddim_coeffs", "ddpm_coeffs", "system_matrices",
-    "ParaTAAConfig", "sample", "sample_recording",
+    "ParaTAAConfig",
 ]

@@ -3,13 +3,10 @@
 These are the ground truth that parallel sampling must reproduce (Thm 2.2:
 the triangular system's unique solution IS this trajectory).
 
-The canonical public entry point is ``repro.sampling`` (which re-exports
-``sequential_sample`` / ``draw_noises``); the module-level ``sequential_sample``
-here is kept as a deprecation shim for pre-`repro.sampling` callers.
+The canonical public entry point is ``repro.sampling``, which re-exports
+``sequential_sample`` / ``draw_noises`` as their public names.
 """
 from __future__ import annotations
-
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -50,14 +47,3 @@ def _sequential_sample(eps_fn, coeffs: SolverCoeffs, xi, *,
     # traj_rev holds x_{T-1}, ..., x_0; assemble (T+1, *shape) in index order
     traj = jnp.concatenate([traj_rev[::-1], xi[T][None]], axis=0)
     return traj
-
-
-def sequential_sample(eps_fn, coeffs: SolverCoeffs, xi, *,
-                      return_traj: bool = False):
-    """Deprecated alias — use ``repro.sampling.sequential_sample`` or
-    ``repro.sampling.run(get_sampler("seq"), ...)``."""
-    warnings.warn(
-        "repro.diffusion.samplers.sequential_sample is deprecated; use "
-        "repro.sampling.sequential_sample (or repro.sampling.run with the "
-        "'seq' sampler spec)", DeprecationWarning, stacklevel=2)
-    return _sequential_sample(eps_fn, coeffs, xi, return_traj=return_traj)

@@ -1,7 +1,11 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# The two lines above MUST run before any other import (jax locks the device
-# count at first init).  This module is the multi-pod dry-run: it lowers +
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=512"
+                               ).strip()
+# The lines above MUST run before any other import (jax locks the device
+# count at first init); unrelated pre-set XLA_FLAGS are preserved, and a
+# pre-set device count (e.g. 8 forced devices + a debug mesh in tests) wins.  This module is the multi-pod dry-run: it lowers +
 # compiles every (architecture x input-shape x mesh) cell against the
 # production meshes and extracts memory / cost / collective analysis for the
 # roofline tables (EXPERIMENTS.md SS Dry-run / Roofline).
@@ -240,79 +244,76 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
 
 
 def run_parataa_cell(multi_pod: bool, *, T: int = 100, window: int = 64,
-                     n_samples: int = 8, history_m: int = 3,
-                     shard_samples: bool = False, dp_full: bool = False,
+                     n_samples: int = 16, history_m: int = 3,
+                     mesh=None, reduced: bool = False,
                      verbose: bool = True) -> dict:
     """The paper's own workload as a mesh cell: batched ParaTAA sampling with
-    the full DiT-XL denoiser.  The window-of-timesteps x samples batch
-    (n_samples * window DiT forwards per iteration) folds into the denoiser
-    batch and shards over `data`; DiT is TP-sharded over `model`.
+    the full DiT-XL denoiser, measured through the SAME program the serving
+    engine dispatches — a ``SamplingEngine`` built on a ``Placement`` over
+    this mesh (request axis sharded over `data`, DiT TP-sharded over
+    `model`) — not a private unsharded clone of it.
 
-    Memory: full while-loop program.  Cost: one solver iteration compiled
-    standalone (eps window eval + residuals + TAA update) — multiply by the
+    Memory: the engine's full while-loop program (``engine.lower_batch``).
+    Cost: one solver iteration compiled standalone (eps window eval +
+    residuals + TAA update) under the same placement — multiply by the
     measured iteration count (benchmarks: ~7-20) for end-to-end cost.
+
+    mesh/reduced: test overrides (debug mesh + reduced arch); production
+    cells use the registry meshes and the full arch.
     """
     import numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.core import ddim_coeffs
-    from repro.core.parataa import ParaTAAConfig, sample
+    from repro.core.parataa import ParaTAAConfig
     from repro.core.coeffs import system_matrices
     from repro.core.anderson import anderson_update
     from repro.core.system import first_order_residuals
     from repro.diffusion import dit as dit_mod
+    from repro.launch.serve import make_eps_apply
     from repro.models import pdefs
+    from repro.sampling import Placement, SamplingEngine, get_sampler
 
     cfg = get_arch("dit-xl")
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    if reduced:
+        cfg = cfg.reduced()
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    placement = Placement.for_mesh(mesh)  # multi-pod: requests over (pod, data)
     chips = mesh.devices.size
+    n_samples = placement.round_batch(n_samples)
     rec = {"arch": "dit-xl", "shape": "parataa_serve",
            "mesh": "multi" if multi_pod else "single", "chips": chips,
-           "status": "error", "T": T, "window": window, "n_samples": n_samples}
+           "status": "error", "T": T, "window": window, "n_samples": n_samples,
+           "placement": placement.describe()}
     coeffs = ddim_coeffs(T)
-    n_tok, latent = 256, cfg.latent_dim
+    n_tok = 32 if reduced else 256
+    latent = cfg.latent_dim
     D = n_tok * latent
 
     with use_mesh(mesh):
-        if dp_full:
-            # hillclimb C2: serving a 675M-param denoiser does not need TP —
-            # replicate params (1.35 GB bf16), shard the window-batch over
-            # ALL mesh axes => zero per-layer collectives
-            defs = dit_mod.dit_defs(cfg)
-            params = jax.tree.map(
-                lambda d: jax.ShapeDtypeStruct(
-                    d.shape, jnp.dtype(d.dtype) if d.dtype else S.PARAM_DTYPE,
-                    sharding=NamedSharding(mesh, P())),
-                defs, is_leaf=pdefs.is_def)
-        else:
-            params = pdefs.abstract_params(dit_mod.dit_defs(cfg), mesh,
-                                           dtype=S.PARAM_DTYPE)
+        params = pdefs.abstract_params(dit_mod.dit_defs(cfg), mesh,
+                                       dtype=S.PARAM_DTYPE)
+        spec = get_sampler("taa", order_k=8, history_m=history_m,
+                           window=window, s_max=2 * T)
         solver = ParaTAAConfig(order_k=8, history_m=history_m, window=window,
                                mode="taa", s_max=2 * T)
 
-        # --- memory: the full batched sampling program (rolled while loop)
+        # --- memory: the engine's own batched sampling program (rolled
+        # while loop), request axis sharded over `data` by the placement
         runconfig.set_unroll_scans(False)
-        # optimized sharding (hillclimb C1): sample axis over `data` makes
-        # the solver state chip-local; baseline replicates it
-        samp_ax = "data" if (shard_samples and n_samples % 16 == 0) else None
-        xi_sds = jax.ShapeDtypeStruct(
-            (n_samples, T + 1, n_tok, latent), jnp.float32,
-            sharding=NamedSharding(mesh, P(samp_ax, None, None, None)))
-        lab_sds = jax.ShapeDtypeStruct((n_samples,), jnp.int32,
-                                       sharding=NamedSharding(mesh, P(samp_ax)))
-
-        def serve(params, xis, labels):
-            def one(xi, label):
-                def eps_fn(xw, taus):
-                    y = jnp.full((xw.shape[0],), label, jnp.int32)
-                    return dit_mod.dit_apply(params, cfg, xw, taus, y)
-                traj, info = sample(eps_fn, coeffs, solver, xi)
-                return traj[0], info["iters"]
-            return jax.vmap(one)(xis, labels)
-
+        engine = SamplingEngine(make_eps_apply(cfg), params, coeffs, spec,
+                                sample_shape=(n_tok, latent),
+                                placement=placement)
         t0 = time.time()
-        compiled = jax.jit(serve).lower(params, xi_sds, lab_sds).compile()
+        compiled = engine.lower_batch(n_samples).compile()
         t_compile = time.time() - t0
         mem = compiled.memory_analysis()
+
+        # per-iteration cost below uses the engine's request-axis sharding
+        # (n_samples was rounded up to whole data shards above)
+        samp_ax = placement.data_axis
+        lab_sds = jax.ShapeDtypeStruct((n_samples,), jnp.int32,
+                                       sharding=NamedSharding(mesh, P(samp_ax)))
 
         # --- cost: one solver iteration standalone (window eval + update)
         mats = system_matrices(coeffs, solver.order_k)
@@ -329,9 +330,6 @@ def run_parataa_cell(multi_pod: bool, *, T: int = 100, window: int = 64,
                 xv, (t + 1, 0), (window, D)))(x, t1)
             taus_w = jax.lax.dynamic_slice(taus, (t1[0] + 1,), (window,))
             xw = xs.reshape(n_samples * window, n_tok, latent)
-            if dp_full:  # window-batch over every chip (C2)
-                xw = jax.lax.with_sharding_constraint(
-                    xw, NamedSharding(mesh, P(tuple(mesh.axis_names), None, None)))
             y = jnp.repeat(labels, window)
             eps = dit_mod.dit_apply(params, cfg, xw,
                                     jnp.tile(taus_w, n_samples), y)
@@ -353,11 +351,7 @@ def run_parataa_cell(multi_pod: bool, *, T: int = 100, window: int = 64,
         sds = lambda shp: jax.ShapeDtypeStruct(
             shp, jnp.float32, sharding=NamedSharding(mesh, P(samp_ax, *([None] * (len(shp) - 1)))))
         runconfig.set_unroll_scans(True)
-        import contextlib
-        from repro.models.shardctx import batch_axes
-        ctx = (batch_axes(mesh.axis_names) if dp_full else contextlib.nullcontext())
-        with ctx:
-            it_lowered = jax.jit(iteration).lower(
+        it_lowered = jax.jit(iteration).lower(
             params, sds((n_samples, T + 1, D)), sds((n_samples, T + 1, D)),
             sds((n_samples, history_m, T, D)), sds((n_samples, history_m, T, D)),
             sds((n_samples, T + 1, D)), lab_sds,

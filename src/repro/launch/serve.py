@@ -2,20 +2,57 @@
 
 Each request is (class label | conditioning, seed, optional warm start).
 Requests run through one ``repro.sampling.SamplingEngine`` per
-(arch, T, solver) configuration: the engine vmaps ParaTAA over the request
-axis, so every solver iteration evaluates the denoiser on a single
-(requests x window) batch — the axis that shards over the `data` mesh
-dimension on a real pod, while the denoiser is TP-sharded over `model`.
-Sequential DDIM/DDPM is the same engine with the "seq" spec.  Straggler
-mitigation duplicates the slowest window shard on spare capacity
+(arch, T, solver) configuration, and the engine owns its device placement:
+``--mesh`` resolves a named mesh from ``repro.launch.mesh`` (with
+``--data-parallel`` / ``--model-parallel`` axis overrides) into a
+``Placement`` that shards the request axis over `data` and TP-shards the
+denoiser over `model`; without ``--mesh`` the engine runs the bitwise-
+identical host placement.  Sequential DDIM/DDPM is the same engine with the
+"seq" spec.  Every dispatch reports device utilization (request slots filled
+x devices engaged) without retracing — one compilation per engine.
+Straggler mitigation duplicates the slowest window shard on spare capacity
 (value-deterministic, first-finisher-wins).
 
     PYTHONPATH=src python -m repro.launch.serve --smoke --requests 8 \
-        --solver taa --steps-T 50 --batch-size 4
+        --solver taa --steps-T 50 --batch-size 4 \
+        --mesh debug --data-parallel 4 --model-parallel 2
 """
 from __future__ import annotations
 
 import argparse
+import os
+import sys
+
+
+def _force_host_devices(argv):
+    """Grow the forced host-platform device count to fit --mesh BEFORE jax
+    initializes its backend (the count is locked at first device query).
+    Only takes effect for the CLI entry point; no-op when the flag is
+    already set or no mesh was requested."""
+    p = argparse.ArgumentParser(add_help=False)
+    p.add_argument("--mesh", default="none")
+    p.add_argument("--data-parallel", type=int, default=0)
+    p.add_argument("--model-parallel", type=int, default=0)
+    args, _ = p.parse_known_args(argv)
+    if args.mesh == "none":
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" in flags:
+        return
+    from repro.launch.mesh import get_mesh_spec
+    try:
+        spec = get_mesh_spec(args.mesh).with_sizes(
+            data_parallel=args.data_parallel or None,
+            model_parallel=args.model_parallel or None)
+    except (KeyError, ValueError):
+        return  # let main() raise the informative registry error
+    os.environ["XLA_FLAGS"] = (
+        f"{flags} --xla_force_host_platform_device_count="
+        f"{spec.num_devices}").strip()
+
+
+if __name__ == "__main__":  # must precede the jax import below
+    _force_host_devices(sys.argv[1:])
 
 import jax
 import jax.numpy as jnp
@@ -24,8 +61,10 @@ import numpy as np
 from repro.configs.registry import get_arch
 from repro.core import ddim_coeffs, ddpm_coeffs
 from repro.diffusion import dit as dit_mod
+from repro.launch.mesh import make_mesh, mesh_names
 from repro.runtime import StragglerMitigator
-from repro.sampling import SampleRequest, SamplingEngine, get_sampler
+from repro.sampling import (Placement, SampleRequest, SamplingEngine,
+                            get_sampler)
 
 
 def make_eps_apply(cfg):
@@ -35,9 +74,22 @@ def make_eps_apply(cfg):
     return eps_apply
 
 
-def make_engine(params, cfg, coeffs, spec, *, num_tokens=16):
+def make_placement(mesh_name: str = "none", *, data_parallel: int = 0,
+                   model_parallel: int = 0, donate: bool = False) -> Placement:
+    """Resolve serving CLI placement flags into a Placement."""
+    if mesh_name == "none":
+        return Placement.host()
+    mesh = make_mesh(mesh_name, data_parallel=data_parallel or None,
+                     model_parallel=model_parallel or None)
+    return Placement.for_mesh(mesh, donate=donate)
+
+
+def make_engine(params, cfg, coeffs, spec, *, num_tokens=16,
+                placement: Placement = None):
     return SamplingEngine(make_eps_apply(cfg), params, coeffs, spec,
-                          sample_shape=(num_tokens, cfg.latent_dim))
+                          sample_shape=(num_tokens, cfg.latent_dim),
+                          placement=placement,
+                          param_defs=dit_mod.dit_defs(cfg))
 
 
 def serve_batch(engine: SamplingEngine, requests, *, batch_size=None):
@@ -57,6 +109,15 @@ def serve_batch(engine: SamplingEngine, requests, *, batch_size=None):
     return jnp.stack([res.x0 for res in results]), stats, straggler
 
 
+def report_dispatches(engine: SamplingEngine, *, out=print):
+    """Per-dispatch device-utilization report (one line per dispatch)."""
+    for i, d in enumerate(engine.last_dispatches):
+        out(f"dispatch {i}: {d['requests']}/{d['slots']} request slots "
+            f"({d['slot_utilization']:.0%}) on {d['devices']} device(s) "
+            f"[data={d['data_shards']} x model={d['model_shards']}], "
+            f"wall {d['wall_s']:.2f}s")
+
+
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--arch", default="dit-xl")
@@ -70,9 +131,26 @@ def main(argv=None):
     p.add_argument("--order-k", type=int, default=8)
     p.add_argument("--history-m", type=int, default=3)
     p.add_argument("--window", type=int, default=0)
+    p.add_argument("--mesh", default="none", choices=["none"] + mesh_names(),
+                   help="registered mesh to place the engine on "
+                        "(none = single-device host placement)")
+    p.add_argument("--data-parallel", type=int, default=0,
+                   help="override the mesh's `data` axis size "
+                        "(request-axis shards; 0 = registry default)")
+    p.add_argument("--model-parallel", type=int, default=0,
+                   help="override the mesh's `model` axis size "
+                        "(denoiser TP shards; 0 = registry default)")
+    p.add_argument("--donate", action="store_true",
+                   help="donate packed input buffers to the compiled "
+                        "program (pods; CPU ignores donation)")
     p.add_argument("--ckpt", default=None, help="trained DiT checkpoint dir")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
+
+    placement = make_placement(args.mesh, data_parallel=args.data_parallel,
+                               model_parallel=args.model_parallel,
+                               donate=args.donate)
+    print(f"placement: {placement.describe()}")
 
     cfg = get_arch(args.arch)
     if args.smoke:
@@ -94,7 +172,7 @@ def main(argv=None):
     else:
         spec = get_sampler(args.solver, order_k=args.order_k,
                            history_m=args.history_m, window=args.window)
-    engine = make_engine(params, cfg, coeffs, spec)
+    engine = make_engine(params, cfg, coeffs, spec, placement=placement)
 
     rng = np.random.default_rng(args.seed)
     requests = [SampleRequest(label=int(rng.integers(0, cfg.num_classes)),
@@ -107,6 +185,7 @@ def main(argv=None):
         # latency), not exclusive per-request compute — batch members share it
         print(f"label={st['label']:4d} iters={st['iters']:3d} "
               f"nfe={st['nfe']:5d} batch_wall={st['wall_s']:.2f}s")
+    report_dispatches(engine)
     seq_steps = coeffs.T
     mean_iters = np.mean([s["iters"] for s in stats])
     print(f"mean parallel steps {mean_iters:.1f} vs sequential {seq_steps} "

@@ -48,6 +48,21 @@ def current_mesh():
     return _MESH.get()
 
 
+@contextlib.contextmanager
+def serving_mesh(mesh):
+    """Engine-serving activation context (see repro.sampling.Placement).
+
+    Under a SamplingEngine the REQUEST axis owns the `data` mesh dimension
+    (the engine constrains the vmapped batch axis via spmd_axis_name), so
+    denoiser-internal "batch" constraints — whose dim is the per-request
+    window of timesteps — must not claim `data` a second time.  This context
+    sets the ambient mesh for `model`-axis TP constraints while resolving
+    the "batch" logical axis to replicated.
+    """
+    with use_mesh(mesh) as m, batch_axes(()):
+        yield m
+
+
 def _resolve(logical: Optional[str], dim: int, mesh):
     if logical is None:
         return None

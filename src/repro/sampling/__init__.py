@@ -9,21 +9,24 @@ One typed surface for every way this repo draws samples:
   * ``SamplingEngine`` — compile-once, vmap-batched execution of
     ``SampleRequest`` batches for serving (per-request labels, seeds, warm
     starts as data to a single jitted program).
+  * ``Placement`` — where that program runs: mesh + request-axis/model-axis
+    shardings + donation.  ``Placement.host()`` is the no-mesh identity;
+    a sharded placement puts the request axis on ``data`` and TP-shards the
+    denoiser over ``model`` (see ``repro.launch.mesh`` for the registry of
+    named meshes).
   * ``sequential_sample`` / ``draw_noises`` — the eq. (6) reference sampler
     and noise convention, re-exported here as their canonical home.
-
-``repro.core.sample`` / ``sample_recording`` and
-``repro.diffusion.samplers.sequential_sample`` remain as deprecation shims.
 """
 from repro.sampling.api import run, sequential_sample, draw_noises
 from repro.sampling.engine import SamplingEngine
+from repro.sampling.placement import Placement
 from repro.sampling.specs import (FULL_ORDER, SamplerSpec, get_sampler,
                                   register_sampler, sampler_names)
 from repro.sampling.types import SampleRequest, SampleResult, WarmStart
 
 __all__ = [
     "run", "sequential_sample", "draw_noises",
-    "SamplingEngine",
+    "SamplingEngine", "Placement",
     "FULL_ORDER", "SamplerSpec", "get_sampler", "register_sampler",
     "sampler_names",
     "SampleRequest", "SampleResult", "WarmStart",

@@ -48,7 +48,7 @@ def run(spec: SamplerSpec, eps_fn: Callable, coeffs: SolverCoeffs, xi, *,
     x_init = t_init = None
     if init is not None:
         x_init = init.trajectory
-        t_init = init.t_init if init.t_init else None  # 0 => full restart
+        t_init = init.t_init  # None => full restart (T); 0 => fully solved
     fn = _parataa.sample_recording if diagnostics else _parataa.sample
     traj, info = fn(eps_fn, coeffs, solver, xi, x_init=x_init, dtype=dtype,
                     t_init=t_init)

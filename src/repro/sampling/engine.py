@@ -1,30 +1,39 @@
-"""SamplingEngine: compile-once, vmap-batched execution of SampleRequests.
+"""SamplingEngine: compile-once, vmap-batched, mesh-aware execution of
+SampleRequests.
 
 The engine owns (denoiser apply fn, params, solver coefficients, sampler
-spec, sample shape) and runs whole batches of requests through one jitted
-program: the request axis is vmapped over the ParaTAA solver, so every
-solver iteration evaluates the denoiser on a single (requests x window)
-batch — the axis that shards over the `data` mesh dimension on a real pod.
+spec, sample shape) AND its device placement: it runs whole batches of
+requests through one jitted program whose request axis is vmapped over the
+ParaTAA solver, so every solver iteration evaluates the denoiser on a single
+(requests x window) batch.  Under a sharded :class:`Placement` the packed
+request arrays carry ``NamedSharding(mesh, P("data", ...))``, the vmapped
+batch axis is constrained to ``data`` via ``spmd_axis_name``, denoiser
+params are placed by their logical-axis rules, and the denoiser traces under
+the ambient ``models.shardctx`` mesh so its activations TP-shard over
+``model``.  With ``Placement.host()`` (the default) every placement hook is
+an identity and the program is bitwise-identical to the unsharded engine.
 
 Per-request labels, seeds, and warm starts (Sec 4.2) are all data to that
 one program: cold and warm starts share a single compilation because a cold
 start is just ``init = (xi, T_init=T)``.  Batches are padded to a fixed
-``batch_size`` so the engine compiles exactly once per
-(denoiser, T, sampler-spec, batch-size, diagnostics) configuration; the
-``stats["traces"]`` counter records actual retraces.
+``batch_size`` — rounded up to a multiple of the placement's data shards so
+every device holds the same number of request slots — so the engine compiles
+exactly once per (denoiser, T, sampler-spec, batch-size, diagnostics)
+configuration; the ``stats["traces"]`` counter records actual retraces and
+``last_dispatches`` reports per-dispatch device utilization.
 """
 from __future__ import annotations
 
 import time
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.coeffs import SolverCoeffs
 from repro.core import parataa as _parataa
 from repro.diffusion.samplers import _sequential_sample, draw_noises
+from repro.sampling.placement import Placement
 from repro.sampling.specs import SamplerSpec
 from repro.sampling.types import DIAG_KEYS, SampleRequest, SampleResult
 
@@ -33,29 +42,41 @@ class SamplingEngine:
     """Batched sampling executor for one (denoiser, T, solver) configuration.
 
     eps_apply:    (params, x (n, *sample_shape), taus (n,), labels (n,)) -> eps
-    params:       denoiser parameters (closed over by the jitted program)
+    params:       denoiser parameters (closed over by the jitted program);
+                  placed onto the mesh at construction when sharded
     coeffs:       SolverCoeffs (fixes T and the DDIM/DDPM schedule)
     spec:         SamplerSpec strategy ("seq" or any ParaTAA variant)
     sample_shape: per-sample latent shape, e.g. (num_tokens, latent_dim)
+    placement:    Placement (mesh + shardings + donation); default host
+    param_defs:   optional ParamDef tree matching ``params`` — when given
+                  (and sharded), params are placed by their logical-axis
+                  rules (TP over `model`, FSDP over `data`) instead of
+                  replicated
     """
 
     def __init__(self, eps_apply: Callable, params, coeffs: SolverCoeffs,
                  spec: SamplerSpec, *, sample_shape: Sequence[int],
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, placement: Optional[Placement] = None,
+                 param_defs=None):
         self.eps_apply = eps_apply
-        self.params = params
         self.coeffs = coeffs
         self.spec = spec
         self.sample_shape = tuple(sample_shape)
         self.dtype = dtype
+        self.placement = placement or Placement.host()
+        if self.placement.is_sharded and params is not None \
+                and not _is_abstract(params):
+            params = self.placement.shard_params(params, param_defs)
+        self.params = params
         self._jitted = {}   # diagnostics flag -> jitted batched program
         self.stats = {"traces": 0, "batches": 0, "requests": 0, "wall_s": 0.0}
         self.last_batch_walls = []  # per-dispatch walls of the last run_batch
+        self.last_dispatches: List[Dict] = []  # per-dispatch reports
 
     # -- program construction ------------------------------------------------
 
     def _batched_fn(self, diagnostics: bool):
-        coeffs, spec, shape = self.coeffs, self.spec, self.sample_shape
+        coeffs, spec, plc = self.coeffs, self.spec, self.placement
         T = coeffs.T
         eps_apply = self.eps_apply
 
@@ -76,14 +97,54 @@ class SamplingEngine:
                 (DIAG_KEYS if diagnostics else ())
             return traj, {k: info[k] for k in keep if k in info}
 
+        vmap_kw = {}
+        if plc.is_sharded:
+            # pin the vmapped request axis to the data mesh dimension: every
+            # sharding constraint inside the solver gets `data` prepended
+            vmap_kw["spmd_axis_name"] = plc.spmd_axes()
+
         def batched(params, xis, labels, x0s, t_inits):
             # executes at trace time only: one increment per compilation
             self.stats["traces"] += 1
+            xis = plc.constrain_batch(xis)
+            labels = plc.constrain_batch(labels)
+            x0s = plc.constrain_batch(x0s)
+            t_inits = plc.constrain_batch(t_inits)
             return jax.vmap(
-                lambda xi, lab, x0, ti: one(params, xi, lab, x0, ti)
-            )(xis, labels, x0s, t_inits)
+                lambda xi, lab, x0, ti: one(params, xi, lab, x0, ti),
+                **vmap_kw)(xis, labels, x0s, t_inits)
 
-        return jax.jit(batched)
+        donate = (1, 3) if plc.donate else ()  # xis, x0s: fresh per dispatch
+        return jax.jit(batched, donate_argnums=donate)
+
+    def _program(self, diagnostics: bool):
+        fn = self._jitted.get(diagnostics)
+        if fn is None:
+            fn = self._jitted[diagnostics] = self._batched_fn(diagnostics)
+        return fn
+
+    def lower_batch(self, batch_size: int, *, params=None,
+                    diagnostics: bool = False):
+        """Lower the batched program for allocation-free compile analysis
+        (dry-run memory / cost / collective tables).  ``params`` may be an
+        abstract (ShapeDtypeStruct) tree carrying its own shardings."""
+        B = self.placement.round_batch(batch_size)
+        T = self.coeffs.T
+        plc = self.placement
+
+        def sds(shape, dt):
+            kw = {}
+            if plc.is_sharded:
+                kw["sharding"] = plc.batch_sharding(len(shape))
+            return jax.ShapeDtypeStruct(shape, dt, **kw)
+
+        xis = sds((B, T + 1) + self.sample_shape, jnp.float32)
+        labels = sds((B,), jnp.int32)
+        t_inits = sds((B,), jnp.int32)
+        with plc.activations():
+            return self._program(diagnostics).lower(
+                params if params is not None else self.params,
+                xis, labels, xis, t_inits)
 
     # -- request packing -----------------------------------------------------
 
@@ -103,9 +164,17 @@ class SamplingEngine:
                 t_inits.append(T)
             else:
                 x0s.append(jnp.asarray(req.init.trajectory).reshape(xi.shape))
-                t_inits.append(req.init.t_init if req.init.t_init else T)
+                # None => full restart (all T rows active); an explicit 0 is
+                # a fully-solved warm start the solver merely verifies
+                t_inits.append(T if req.init.t_init is None
+                               else req.init.t_init)
         return (jnp.stack(xis), jnp.asarray(labels, jnp.int32),
                 jnp.stack(x0s), jnp.asarray(t_inits, jnp.int32))
+
+    def pack(self, requests: Sequence[SampleRequest]):
+        """Pack requests into the program's (xis, labels, x0s, t_inits)
+        arrays, placed onto the request-axis sharding when meshed."""
+        return self.placement.place_batch(*self._pack(requests))
 
     # -- execution -----------------------------------------------------------
 
@@ -117,8 +186,10 @@ class SamplingEngine:
                   diagnostics: bool = False) -> List[SampleResult]:
         """Run all requests, ``batch_size`` at a time (default: one batch).
 
-        The final partial batch is padded by repeating its last request (and
-        the padding discarded) so every dispatch reuses one compiled program.
+        The dispatch size is rounded up to a multiple of the placement's
+        data shards, and the final partial batch is padded by repeating its
+        last request (padding discarded) so every dispatch reuses one
+        compiled program with one request-slot count per device.
         """
         if not requests:
             return []
@@ -127,25 +198,32 @@ class SamplingEngine:
         self.spec.check_request_flags(
             diagnostics=diagnostics,
             warm_start=any(r.init is not None for r in requests))
-        B = batch_size or len(requests)
+        plc = self.placement
+        B = plc.round_batch(batch_size or len(requests))
         self.last_batch_walls = []
-        fn = self._jitted.get(diagnostics)
-        if fn is None:
-            fn = self._jitted[diagnostics] = self._batched_fn(diagnostics)
+        self.last_dispatches = []
+        fn = self._program(diagnostics)
 
         results: List[SampleResult] = []
-        for lo in range(0, len(requests), B):
+        for lo in range(0, len(requests), B):  # step by SLOTS, not batch_size:
+            # a rounded-up dispatch takes B real requests when available
             chunk = list(requests[lo:lo + B])
             n_real = len(chunk)
             chunk += [chunk[-1]] * (B - n_real)       # pad to fixed shape
             t0 = time.time()
-            trajs, info = fn(self.params, *self._pack(chunk))
+            with plc.activations():
+                trajs, info = fn(self.params, *self.pack(chunk))
             jax.block_until_ready(trajs)
             wall = time.time() - t0
             self.stats["batches"] += 1
             self.stats["requests"] += n_real
             self.stats["wall_s"] += wall
             self.last_batch_walls.append(wall)
+            self.last_dispatches.append(dict(
+                wall_s=wall, requests=n_real, slots=B,
+                slot_utilization=plc.slot_utilization(n_real, B),
+                devices=plc.num_devices, data_shards=plc.data_shards,
+                model_shards=plc.model_shards))
             for i in range(n_real):
                 diag = None
                 if diagnostics:
@@ -162,3 +240,8 @@ class SamplingEngine:
     def throughput(self) -> float:
         """Requests per second over every batch this engine has run."""
         return self.stats["requests"] / max(self.stats["wall_s"], 1e-9)
+
+
+def _is_abstract(params) -> bool:
+    leaves = jax.tree.leaves(params)
+    return bool(leaves) and isinstance(leaves[0], jax.ShapeDtypeStruct)

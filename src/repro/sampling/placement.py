@@ -1,0 +1,201 @@
+"""Device placement as a first-class engine concern.
+
+A :class:`Placement` pins down everything about WHERE a sampling program
+runs: the mesh, which mesh axes the request (batch) dimension shards over,
+which axis the denoiser TP-shards over, and whether packed input buffers are
+donated to the compiled program.  Engines receive a Placement at
+construction and compile mesh-aware programs against it; the rest of the
+stack (serve driver, dry-run, benchmarks) builds Placements instead of
+hand-rolling shardings per call site.
+
+The contract:
+
+  * request axis  -> ``data_axis`` (``NamedSharding(mesh, P("data", ...))``
+    on packed inputs, ``spmd_axis_name`` on the vmapped batch dimension);
+  * denoiser activations -> the ambient :mod:`repro.models.shardctx` mesh,
+    so ``seq``/``heads`` constraints TP-shard over ``model_axis`` while the
+    engine-owned batch axis is suppressed (see ``shardctx.serving_mesh``);
+  * denoiser params -> logical-axis shardings from their ``ParamDef`` tree
+    (``pdefs.resolve_specs``), or fully replicated when no defs are given.
+
+``Placement.host()`` is the no-mesh placement: every method degrades to an
+identity, so an engine built with it is bitwise-identical to a
+placement-blind one.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisName = Union[str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """Mesh + in/out shardings + donation policy for a sampling engine.
+
+    mesh:       jax Mesh, or None for the single-device/host placement.
+    data_axis:  mesh axis (or tuple of axes) the request dimension shards
+                over.
+    model_axis: mesh axis the denoiser TP-shards over (via shardctx rules).
+    donate:     donate packed input buffers to the compiled program (saves
+                one batch of HBM on real pods; leave False on CPU, whose
+                backend ignores donation).
+    """
+    mesh: Optional[Mesh] = None
+    data_axis: AxisName = "data"
+    model_axis: str = "model"
+    donate: bool = False
+
+    def __post_init__(self):
+        if self.mesh is None:
+            return
+        names = set(self.mesh.axis_names)
+        missing = [a for a in self.data_axes if a not in names]
+        if missing:
+            raise ValueError(
+                f"data_axis {missing} not in mesh axes {sorted(names)}")
+        if self.model_axis not in names:
+            raise ValueError(
+                f"model_axis {self.model_axis!r} not in mesh axes "
+                f"{sorted(names)}")
+
+    # -- constructors --------------------------------------------------------
+
+    @classmethod
+    def host(cls) -> "Placement":
+        """The no-mesh placement: every method is an identity."""
+        return cls(mesh=None)
+
+    @classmethod
+    def for_mesh(cls, mesh, *, donate: bool = False) -> "Placement":
+        """Canonical placement for a registry mesh: the request axis spans
+        every data-parallel dimension — ``("pod", "data")`` on multi-pod
+        meshes, plain ``"data"`` otherwise."""
+        data_axis = ("pod", "data") if "pod" in mesh.axis_names else "data"
+        return cls(mesh=mesh, data_axis=data_axis, donate=donate)
+
+    # -- topology ------------------------------------------------------------
+
+    @property
+    def is_sharded(self) -> bool:
+        return self.mesh is not None
+
+    @property
+    def data_axes(self) -> Tuple[str, ...]:
+        if isinstance(self.data_axis, str):
+            return (self.data_axis,)
+        return tuple(self.data_axis)
+
+    def _axis_sizes(self) -> dict:
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+
+    @property
+    def data_shards(self) -> int:
+        """Number of shards the request axis is split into."""
+        if not self.is_sharded:
+            return 1
+        sizes = self._axis_sizes()
+        n = 1
+        for a in self.data_axes:
+            n *= sizes[a]
+        return n
+
+    @property
+    def model_shards(self) -> int:
+        if not self.is_sharded:
+            return 1
+        return self._axis_sizes().get(self.model_axis, 1)
+
+    @property
+    def num_devices(self) -> int:
+        return self.mesh.devices.size if self.is_sharded else 1
+
+    # -- shardings -----------------------------------------------------------
+
+    def batch_spec(self, ndim: int) -> P:
+        """PartitionSpec putting the leading (request) axis on data."""
+        ax = self.data_axis if isinstance(self.data_axis, str) \
+            else tuple(self.data_axis)
+        return P(ax, *([None] * (ndim - 1)))
+
+    def batch_sharding(self, ndim: int) -> NamedSharding:
+        assert self.is_sharded, "host placement has no shardings"
+        return NamedSharding(self.mesh, self.batch_spec(ndim))
+
+    def replicated(self) -> NamedSharding:
+        assert self.is_sharded, "host placement has no shardings"
+        return NamedSharding(self.mesh, P())
+
+    def spmd_axes(self) -> AxisName:
+        """`spmd_axis_name` for jax.vmap over the request axis."""
+        return self.data_axis
+
+    # -- batch geometry ------------------------------------------------------
+
+    def round_batch(self, n: int) -> int:
+        """Smallest request-slot count >= n divisible by data_shards."""
+        d = self.data_shards
+        return max(-(-n // d), 1) * d
+
+    def slot_utilization(self, n_real: int, slots: int) -> float:
+        return n_real / max(slots, 1)
+
+    # -- data movement -------------------------------------------------------
+
+    def place_batch(self, *arrays):
+        """device_put packed request arrays onto their batch shardings."""
+        if not self.is_sharded:
+            return arrays
+        return tuple(jax.device_put(a, self.batch_sharding(a.ndim))
+                     for a in arrays)
+
+    def constrain_batch(self, x):
+        """with_sharding_constraint of the request axis (inside jit)."""
+        if not self.is_sharded:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, self.batch_sharding(x.ndim))
+
+    def shard_params(self, params, param_defs=None):
+        """Place denoiser params: logical-axis shardings when a ParamDef
+        tree is given, fully replicated otherwise.  Identity off-mesh."""
+        if not self.is_sharded:
+            return params
+        if param_defs is None:
+            rep = self.replicated()
+            return jax.tree.map(lambda x: jax.device_put(x, rep), params)
+        from repro.models import pdefs
+        specs = pdefs.resolve_specs(param_defs, self.mesh)
+        return jax.tree.map(
+            lambda x, s: jax.device_put(x, NamedSharding(self.mesh, s)),
+            params, specs)
+
+    # -- activation context ---------------------------------------------------
+
+    @contextlib.contextmanager
+    def activations(self):
+        """Ambient-mesh context for tracing/running engine programs: model
+        TP constraints resolve against the mesh while denoiser-internal
+        "batch" constraints stand down (the engine owns the batch axis)."""
+        if not self.is_sharded:
+            yield None
+            return
+        from repro.models.shardctx import serving_mesh
+        with serving_mesh(self.mesh) as m:
+            yield m
+
+    # -- reporting -----------------------------------------------------------
+
+    def describe(self) -> str:
+        if not self.is_sharded:
+            return "host (no mesh, 1 program replica)"
+        sizes = self._axis_sizes()
+        axes = " x ".join(f"{a}={n}" for a, n in sizes.items())
+        return (f"mesh[{axes}] ({self.num_devices} devices; requests over "
+                f"{'/'.join(self.data_axes)}, denoiser over "
+                f"{self.model_axis})")

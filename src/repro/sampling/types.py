@@ -23,11 +23,14 @@ class WarmStart:
 
     trajectory: (T+1, *sample_shape) solved trajectory to initialize from.
     t_init:     restart depth T_init — rows above t_init are treated as
-                already-converged; 0 means "full restart" (the trajectory is
-                only used as the initial iterate, all rows active).
+                already-converged.  ``None`` (default) means "full restart":
+                the trajectory is only used as the initial iterate, all T
+                rows active.  An explicit ``0`` is the opposite extreme — a
+                fully-solved trajectory whose convergence the solver only
+                verifies (one window pass).
     """
     trajectory: Any
-    t_init: int = 0
+    t_init: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)

@@ -7,3 +7,10 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax  # noqa: E402
 
 jax.config.update("jax_threefry_partitionable", True)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "mesh: sharded-path tests (subprocesses force an 8-device host "
+        "platform; tools/ci.sh runs these as a second, sharded pass)")

@@ -6,6 +6,8 @@ import subprocess
 import sys
 from pathlib import Path
 
+import pytest
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -45,6 +47,7 @@ print("RESULT " + json.dumps(out))
 """
 
 
+@pytest.mark.mesh
 def test_mini_dryrun_on_debug_mesh():
     proc = subprocess.run(
         [sys.executable, "-c", SCRIPT], capture_output=True, text=True,

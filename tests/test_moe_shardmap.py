@@ -5,6 +5,8 @@ import subprocess
 import sys
 from pathlib import Path
 
+import pytest
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -29,6 +31,7 @@ print("RESULT " + json.dumps({"err": err}))
 """
 
 
+@pytest.mark.mesh
 def test_moe_shard_map_matches_local():
     proc = subprocess.run(
         [sys.executable, "-c", SCRIPT], capture_output=True, text=True,

@@ -1,0 +1,234 @@
+"""Placement / mesh-registry coverage.
+
+In-process: registry resolution + device-count validation + the host
+placement's identity behaviour.  In a subprocess (8 forced host devices, the
+``test_moe_shardmap`` pattern): the engine under a debug mesh produces
+results equal to the unsharded engine, the packed batch carries a
+``NamedSharding`` with the request axis on ``data``, and partial-batch
+padding + stats counters behave under a mesh."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.launch.mesh import MeshSpec, get_mesh_spec, make_mesh, mesh_names
+from repro.sampling import Placement
+
+# --- mesh registry (no devices needed) --------------------------------------
+
+def test_registry_names_and_specs():
+    assert {"debug", "single-host", "pod", "multi-pod"} <= set(mesh_names())
+    spec = get_mesh_spec("multi-pod")
+    assert spec.axes == ("pod", "data", "model")
+    assert spec.num_devices == 512
+    small = get_mesh_spec("pod").with_sizes(data_parallel=2, model_parallel=2)
+    assert small.shape == (2, 2) and small.num_devices == 4
+    with pytest.raises(KeyError, match="registered"):
+        make_mesh("nope")
+
+
+def test_mesh_validated_against_device_count():
+    # single CPU device in this process: every real mesh must refuse, with
+    # the forced-host-device hint in the message
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        make_mesh("debug")
+    with pytest.raises(ValueError, match="needs 256 devices"):
+        make_mesh("pod")
+    # explicit devices override (host-count override for tests)
+    import jax
+    with pytest.raises(ValueError, match="were given"):
+        make_mesh("debug", devices=jax.devices())  # 1 device < 4
+    mesh = make_mesh("debug", data_parallel=1, model_parallel=1,
+                     devices=jax.devices())
+    assert mesh.devices.size == 1 and mesh.axis_names == ("data", "model")
+
+
+def test_mesh_override_requires_axis():
+    spec = MeshSpec("flat", (4,), ("data",))
+    with pytest.raises(ValueError, match="no 'model' axis"):
+        spec.with_sizes(model_parallel=2)
+
+
+# --- host placement is the identity -----------------------------------------
+
+def test_host_placement_identity():
+    plc = Placement.host()
+    assert not plc.is_sharded
+    assert plc.data_shards == plc.model_shards == plc.num_devices == 1
+    assert plc.round_batch(5) == 5 and plc.round_batch(0) == 1
+    x = np.arange(6.0)
+    (y,) = plc.place_batch(x)
+    assert y is x
+    assert plc.constrain_batch(x) is x
+    params = {"w": x}
+    assert plc.shard_params(params) is params
+    with plc.activations() as mesh:
+        assert mesh is None
+    assert "host" in plc.describe()
+
+
+def test_placement_rejects_missing_data_axis():
+    import jax
+    mesh = make_mesh("debug", data_parallel=1, model_parallel=1,
+                     devices=jax.devices())
+    with pytest.raises(ValueError, match="not in mesh axes"):
+        Placement(mesh=mesh, data_axis="replica")
+    with pytest.raises(ValueError, match="model_axis"):
+        Placement(mesh=mesh, model_axis="tp")
+    plc = Placement(mesh=mesh)
+    assert plc.is_sharded and plc.round_batch(3) == 3
+
+
+def test_placement_for_mesh_spans_pod_axis():
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+    devs = np.asarray(jax.devices()[:1]).reshape(1, 1, 1)
+    multi = Placement.for_mesh(Mesh(devs, ("pod", "data", "model")))
+    assert multi.data_axes == ("pod", "data")
+    assert multi.batch_spec(2)[0] == ("pod", "data")
+    single = Placement.for_mesh(make_mesh(
+        "debug", data_parallel=1, model_parallel=1, devices=jax.devices()))
+    assert single.data_axes == ("data",)
+
+
+# --- sharded engine == unsharded engine (subprocess, 8 host devices) --------
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import ddim_coeffs
+from repro.diffusion.schedules import make_schedule
+from repro.launch.mesh import make_mesh
+from repro.sampling import (Placement, SampleRequest, SamplingEngine,
+                            WarmStart, get_sampler)
+
+D, N_LABELS = 16, 4
+abar = jnp.asarray(make_schedule("linear", 1000)[0], jnp.float32)
+key = jax.random.PRNGKey(0)
+xstars = jax.random.normal(key, (N_LABELS, D))
+W = jax.random.normal(jax.random.fold_in(key, 3), (D, D)) / np.sqrt(D)
+
+def eps_apply(params, x, taus, y):
+    ab = abar[jnp.clip(taus.astype(jnp.int32), 0, 999)][:, None]
+    xs = xstars[jnp.clip(y, 0, N_LABELS - 1)]
+    lin = (x - jnp.sqrt(ab) * xs) / jnp.sqrt(1.0 - ab + 1e-8)
+    return lin + 0.3 * jnp.tanh(x @ W)
+
+coeffs = ddim_coeffs(12)
+spec = get_sampler("taa")
+reqs = [SampleRequest(label=i % N_LABELS, seed=50 + i) for i in range(6)]
+
+host = SamplingEngine(eps_apply, None, coeffs, spec, sample_shape=(D,))
+ref = host.run_batch(reqs, batch_size=4)
+
+mesh = make_mesh("debug", data_parallel=4, model_parallel=2)
+plc = Placement(mesh=mesh)
+eng = SamplingEngine(eps_apply, None, coeffs, spec, sample_shape=(D,),
+                     placement=plc)
+out = {}
+
+# packed batch carries the request axis on `data`
+packed = eng.pack(reqs[:4])
+shd = packed[0].sharding
+out["packed_named"] = type(shd).__name__
+out["packed_spec"] = [str(a) for a in shd.spec]
+out["scalar_spec"] = [str(a) for a in packed[1].sharding.spec]
+
+# results equal the unsharded engine, incl. the padded partial batch (6 = 4+2)
+res = eng.run_batch(reqs, batch_size=4)
+out["equal"] = all(
+    np.array_equal(np.asarray(r.trajectory), np.asarray(h.trajectory))
+    and r.iters == h.iters and r.nfe == h.nfe and r.converged == h.converged
+    for r, h in zip(res, ref))
+
+# stats counters + per-dispatch utilization under the mesh
+out["stats"] = {k: eng.stats[k] for k in ("traces", "batches", "requests")}
+out["utils"] = [d["slot_utilization"] for d in eng.last_dispatches]
+out["devices"] = [d["devices"] for d in eng.last_dispatches]
+
+# non-divisible batch_size rounds up to whole data shards (3 -> 4 slots)
+eng2 = SamplingEngine(eps_apply, None, coeffs, spec, sample_shape=(D,),
+                      placement=plc)
+res3 = eng2.run_batch(reqs[:3], batch_size=3)
+out["rounded_slots"] = eng2.last_dispatches[0]["slots"]
+out["rounded_equal"] = all(
+    np.array_equal(np.asarray(r.x0), np.asarray(h.x0))
+    for r, h in zip(res3, ref[:3]))
+
+# warm starts + diagnostics recording under the mesh (scan variant, spmd vmap)
+warm = [SampleRequest(label=0, seed=50,
+                      init=WarmStart(ref[0].trajectory, t_init=6)),
+        SampleRequest(label=1, seed=51)]
+host_d = host.run_batch(warm, diagnostics=True)
+mesh_d = eng.run_batch(warm, diagnostics=True)
+out["diag_equal"] = all(
+    np.allclose(np.asarray(m.diagnostics["x0_history"]),
+                np.asarray(h.diagnostics["x0_history"]), atol=1e-5)
+    and m.iters == h.iters
+    for m, h in zip(mesh_d, host_d))
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.mark.mesh
+def test_sharded_engine_matches_unsharded():
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+             "JAX_PLATFORMS": "cpu"},
+        cwd=Path(__file__).resolve().parent.parent, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][0]
+    out = json.loads(line[7:])
+    assert out["packed_named"] == "NamedSharding"
+    assert out["packed_spec"][0] == "data"          # request axis on `data`
+    assert out["scalar_spec"] == ["data"]           # labels too
+    assert out["equal"], "sharded engine diverged from unsharded engine"
+    assert out["stats"] == {"traces": 1, "batches": 2, "requests": 6}
+    assert out["utils"] == [1.0, 0.5]               # 4/4 then 2/4 slots
+    assert out["devices"] == [8, 8]
+    assert out["rounded_slots"] == 4                # 3 rounded to 4 shards
+    assert out["rounded_equal"]
+    assert out["diag_equal"]
+
+
+# --- dry-run parataa cell measures the engine's sharded program -------------
+
+DRYRUN_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+from repro.launch.mesh import make_debug_mesh
+from repro.launch.dryrun import run_parataa_cell
+
+rec = run_parataa_cell(False, T=12, window=6, n_samples=4, history_m=2,
+                       mesh=make_debug_mesh(4, 2), reduced=True,
+                       verbose=False)
+print("RESULT " + json.dumps({k: rec[k] for k in
+      ("status", "chips", "n_samples", "placement",
+       "collective_bytes_per_chip")}))
+"""
+
+
+@pytest.mark.mesh
+def test_dryrun_parataa_cell_uses_engine_placement():
+    proc = subprocess.run(
+        [sys.executable, "-c", DRYRUN_SCRIPT], capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+             "JAX_PLATFORMS": "cpu"},
+        cwd=Path(__file__).resolve().parent.parent, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][0]
+    rec = json.loads(line[7:])
+    assert rec["status"] == "ok"
+    assert rec["chips"] == 8
+    assert rec["n_samples"] == 4        # already a multiple of data shards
+    assert "requests over data" in rec["placement"]
+    # TP over `model` must produce per-layer collectives in the iteration
+    assert rec["collective_bytes_per_chip"] > 0

@@ -1,6 +1,7 @@
 """Unified `repro.sampling` API tests: spec registry resolution, engine
 batched execution ≡ the per-request loop, warm-start `init=`, compile-once
-behaviour, diagnostics flag, and the deprecation shims."""
+behaviour, and the diagnostics flag.  (The sharded-placement path is covered
+by tests/test_placement_mesh.py.)"""
 import warnings
 
 import jax
@@ -8,8 +9,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-import repro.core as core_shim
-import repro.diffusion.samplers as samplers_shim
 from repro.core import ddim_coeffs
 from repro.core.parataa import sample as parataa_sample
 from repro.diffusion.schedules import make_schedule
@@ -203,34 +202,47 @@ def test_diagnostics_flag_records_history():
                                      init=WarmStart(plain.trajectory, 10))])
 
 
-# --- deprecation shims -----------------------------------------------------
+# --- warm-start restart-depth semantics ------------------------------------
 
-def test_deprecated_shims_delegate():
-    T = 10
+def test_warm_start_explicit_t_init_zero_is_fully_solved():
+    """Regression: an explicit ``t_init=0`` (fully-solved warm start) must
+    reach the solver as 0 — not be falsy-coerced into a cold start (T)."""
+    T = 20
     coeffs = ddim_coeffs(T)
+    eng = make_engine(coeffs, get_sampler("taa"))
+    [solved] = eng.run_batch([SampleRequest(label=1, seed=5)])
+    assert solved.converged and solved.iters > 1
+    [verify] = eng.run_batch(
+        [SampleRequest(label=1, seed=5,
+                       init=WarmStart(solved.trajectory, t_init=0))])
+    # the solver only verifies convergence of the already-solved trajectory:
+    # one window pass, not a cold-start solve
+    assert verify.converged
+    assert verify.iters == 1
+    np.testing.assert_allclose(np.asarray(verify.x0), np.asarray(solved.x0),
+                               atol=1e-5)
+    # default (t_init=None) stays a full restart with the trajectory as the
+    # initial iterate — equivalent to the old cold-depth behaviour
+    [full] = eng.run_batch(
+        [SampleRequest(label=1, seed=5, init=WarmStart(solved.trajectory))])
+    assert full.converged and full.iters >= verify.iters
+
+
+# --- deprecation shims are gone --------------------------------------------
+
+def test_pr1_shims_removed():
+    """The PR-1 deprecation shims were dropped once no caller remained; the
+    canonical entry points are warning-free."""
+    import repro.core as core
+    import repro.diffusion.samplers as samplers
+    assert not hasattr(core, "sample")
+    assert not hasattr(core, "sample_recording")
+    assert not hasattr(samplers, "sequential_sample")
+
+    coeffs = ddim_coeffs(10)
     eps = make_oracle_denoiser(D)
     xi = draw_noises(jax.random.PRNGKey(2), coeffs, (D,))
-    spec = get_sampler("taa")
-    new = run(spec, eps, coeffs, xi)
-
-    with pytest.warns(DeprecationWarning):
-        traj, info = core_shim.sample(eps, coeffs, spec.solver_config(T), xi)
-    np.testing.assert_array_equal(np.asarray(traj), np.asarray(new.trajectory))
-    assert int(info["iters"]) == int(new.iters)
-
-    with pytest.warns(DeprecationWarning):
-        traj_r, _ = core_shim.sample_recording(
-            eps, coeffs, spec.solver_config(T), xi)
-    np.testing.assert_allclose(np.asarray(traj_r), np.asarray(new.trajectory),
-                               atol=1e-5)
-
-    with pytest.warns(DeprecationWarning):
-        x0_shim = samplers_shim.sequential_sample(eps, coeffs, xi)
-    np.testing.assert_array_equal(np.asarray(x0_shim),
-                                  np.asarray(sequential_sample(eps, coeffs, xi)))
-
-    # the canonical entry points do NOT warn
     with warnings.catch_warnings():
         warnings.simplefilter("error", DeprecationWarning)
-        run(spec, eps, coeffs, xi)
+        run(get_sampler("taa"), eps, coeffs, xi)
         sequential_sample(eps, coeffs, xi)

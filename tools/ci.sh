@@ -1,11 +1,22 @@
 #!/usr/bin/env bash
 # CI entry point: install dev requirements (best-effort — offline images
-# already bake in jax/pytest; hypothesis enables the property suite) and run
-# the tier-1 verify command from ROADMAP.md.
+# already bake in jax/pytest; hypothesis enables the property suite), then
+# run the suite twice: the tier-1 verify command from ROADMAP.md over the
+# default (non-mesh) tests, and a second, sharded pass selecting the
+# mesh-marked tests — the engine's data/model-sharded execution path —
+# under an 8-device forced host platform.  Extra args ("$@", e.g. a test
+# file) are forwarded to both passes; a pass whose marker selects nothing
+# in that target (pytest exit 5) is not a failure.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 python -m pip install -q -r requirements-dev.txt || \
     echo "WARNING: pip install failed (offline?); running with available deps"
 
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -x -q -m "not mesh" "$@" || [ $? -eq 5 ]
+
+echo "--- sharded pass (mesh-marked tests, 8 forced host devices) ---"
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -x -q -m mesh "$@" || [ $? -eq 5 ]
