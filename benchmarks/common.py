@@ -3,7 +3,10 @@ denoiser dynamics on CPU) + timing / convergence measurement helpers."""
 from __future__ import annotations
 
 import functools
+import json
+import os
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -61,6 +64,49 @@ def serving_engine(coeffs, *, spec=None, placement=None):
                           sample_shape=(NUM_TOKENS, cfg.latent_dim),
                           placement=placement or Placement.host(),
                           param_defs=dit_mod.dit_defs(cfg))
+
+
+def bench_placement():
+    """The placement serving benchmarks measure on: ``REPRO_BENCH_MESH``
+    names a registered mesh (e.g. ``debug`` under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``), with
+    ``REPRO_BENCH_DATA_PARALLEL`` / ``REPRO_BENCH_MODEL_PARALLEL`` axis-size
+    overrides (``debug`` + 4/2 spans all 8 forced host devices); unset means
+    the single-device host placement."""
+    name = os.environ.get("REPRO_BENCH_MESH", "")
+    if not name:
+        return Placement.host()
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh(
+        name,
+        data_parallel=int(os.environ.get("REPRO_BENCH_DATA_PARALLEL", 0))
+        or None,
+        model_parallel=int(os.environ.get("REPRO_BENCH_MODEL_PARALLEL", 0))
+        or None)
+    # for_mesh: the canonical serving placement (spans ("pod", "data") on
+    # multi-pod meshes), so benches time the program serve.py dispatches
+    return Placement.for_mesh(mesh)
+
+
+#: machine-readable serving-benchmark results, tracked across PRs
+BENCH_SERVING_JSON = Path(__file__).resolve().parent.parent \
+    / "BENCH_serving.json"
+
+
+def write_bench_json(section: str, payload: dict, path: Path = None) -> Path:
+    """Merge one benchmark's results into ``BENCH_serving.json`` at the repo
+    root under ``section`` (each serving benchmark owns one section, so the
+    file accumulates the full serving trajectory per run)."""
+    path = Path(path or BENCH_SERVING_JSON)
+    data = {}
+    if path.exists():
+        try:
+            data = json.loads(path.read_text())
+        except json.JSONDecodeError:
+            data = {}
+    data[section] = payload
+    path.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
+    return path
 
 
 def solve(eps_fn, coeffs, *, mode="taa", k=8, m=3, window=0, s_max=None,

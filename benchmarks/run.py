@@ -15,7 +15,7 @@ def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--only", default=None,
                    help="comma-separated subset (fig1,fig2,table1,fig4,fig5,"
-                        "fig6,fig7,serve,roofline)")
+                        "fig6,fig7,serve,serve_async,roofline)")
     p.add_argument("--full", action="store_true",
                    help="paper-scale step counts (T=100 everywhere)")
     args = p.parse_args()
@@ -23,7 +23,7 @@ def main() -> None:
     from benchmarks import (figure1_order_k, figure2_taa, table1_scenarios,
                             figure4_window, figure5_traj_init,
                             figure6_safeguard, figure7_grid, roofline_table,
-                            serving_throughput)
+                            serving_async, serving_throughput)
 
     suites = {
         "fig1": lambda: figure1_order_k.run(T=100 if args.full else 50),
@@ -36,6 +36,7 @@ def main() -> None:
         "fig6": lambda: figure6_safeguard.run(T=50),
         "fig7": lambda: figure7_grid.run(T=50),
         "serve": lambda: serving_throughput.run(T=25),
+        "serve_async": lambda: serving_async.run(T=25),
         "roofline": roofline_table.run,
     }
     chosen = args.only.split(",") if args.only else list(suites)

@@ -6,33 +6,29 @@ By default this measures the host placement (CPU, 1 device).  Set
 ``REPRO_BENCH_MESH`` to a registered mesh name (e.g. ``debug``, with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=4``) to measure the
 sharded program instead — same engine, same rows, placement swapped.
+Results also land in ``BENCH_serving.json`` (section ``"throughput"``) so
+the bench trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
-import os
-
 from benchmarks import common
-from repro.sampling import Placement, SampleRequest
-
-
-def _placement() -> Placement:
-    name = os.environ.get("REPRO_BENCH_MESH", "")
-    if not name:
-        return Placement.host()
-    from repro.launch.mesh import make_mesh
-    return Placement(mesh=make_mesh(name))
+from repro.sampling import SampleRequest
 
 
 def run(T: int = 25, n_requests: int = 8):
-    placement = _placement()
+    placement = common.bench_placement()
+    rows, series = [], {}
     coeffs = common.scenario("ddim", T)
-    rows = []
-    for batch_size in (1, 4, n_requests):
+    # sweep EFFECTIVE slot counts: round_batch collapses small batch sizes
+    # onto the placement's data-shard multiple, and measuring the same
+    # geometry twice would record one program as two curve points
+    sweep = sorted({placement.round_batch(b) for b in (1, 4, n_requests)})
+    for batch_size in sweep:
         engine = common.serving_engine(coeffs, placement=placement)
         requests = [SampleRequest(label=i % 10, seed=200 + i)
                     for i in range(n_requests)]
         engine.run_batch(requests, batch_size=batch_size)  # compile
-        engine.stats.update(batches=0, requests=0, wall_s=0.0)
+        engine.reset_stats()
         engine.run_batch(requests, batch_size=batch_size)
         util = min(d["slot_utilization"] for d in engine.last_dispatches)
         rows.append((
@@ -44,4 +40,13 @@ def run(T: int = 25, n_requests: int = 8):
             f"traces={engine.stats['traces']};"
             f"min_slot_util={util:.2f};"
             f"devices={placement.num_devices}"))
+        series[f"bs{batch_size}"] = dict(
+            reqps=engine.throughput(),
+            dispatches=engine.stats["batches"],
+            wall_s=engine.stats["wall_s"],
+            pack_s=engine.stats["pack_s"],
+            min_slot_utilization=util)
+    common.write_bench_json("throughput", dict(
+        T=T, n_requests=n_requests, placement=placement.describe(),
+        devices=placement.num_devices, **series))
     return rows

@@ -12,7 +12,12 @@ Train a tiny DiT on synthetic latents, then:
      fewer parallel steps, for the whole batch at once;
   4. give that engine an explicit device `Placement` — on a multi-device
      host the request axis shards over the mesh's `data` dimension and the
-     denoiser TP-shards over `model`, with zero engine-code changes.
+     denoiser TP-shards over `model`, with zero engine-code changes;
+  5. serve the same requests through the `repro.serving` async layer —
+     clients submit to a `RequestQueue` under an `EngineKey` and get
+     `Ticket` futures back while a double-buffered `ServingLoop` drains
+     the queue as fixed-slot continuous batches, bitwise-equal to
+     `run_batch`.
 
     PYTHONPATH=src python examples/quickstart.py
     # multi-device placement demo on CPU:
@@ -106,6 +111,34 @@ def main():
     else:
         print("placement: single device (rerun with XLA_FLAGS="
               "--xla_force_host_platform_device_count=8 for the mesh demo)")
+
+    # --- 5. async client: continuous batching over an engine registry -------
+    # Live traffic goes through repro.serving: the registry lazily builds
+    # one engine per EngineKey(arch, T, solver), the batcher drains the
+    # queue into fixed-slot dispatches, and the loop packs the next batch
+    # while the previous one computes.  `loop.drain()` pumps synchronously;
+    # `loop.start()/stop()` (or `with loop:`) runs it on a background
+    # thread for real clients — see `serve.py --serve-async`.
+    from repro.serving import (Batcher, BatchingPolicy, EngineKey,
+                               EngineRegistry, RequestQueue, ServingLoop)
+
+    registry = EngineRegistry(lambda key: SamplingEngine(
+        eps_apply, params, ddim_coeffs(key.T), get_sampler(key.solver),
+        sample_shape=(16, cfg.latent_dim)))
+    queue = RequestQueue()
+    loop = ServingLoop(registry, queue,
+                       Batcher(BatchingPolicy(max_batch=4, max_wait_s=0.02)))
+    tickets = [queue.submit(r, EngineKey("dit-xl", 50, "taa"))
+               for r in requests]
+    loop.drain()
+    served = [t.result() for t in tickets]
+    same = all(bool(jnp.all(jnp.asarray(a.x0) == jnp.asarray(b.x0)))
+               for a, b in zip(served, results))
+    print(f"async serving: {loop.stats['completed']} requests in "
+          f"{loop.stats['dispatches']} dispatch(es); latencies "
+          f"{[f'{t.latency_s:.2f}s' for t in tickets]}; "
+          f"bitwise-equal to run_batch: {same}")
+    assert same
 
 
 if __name__ == "__main__":

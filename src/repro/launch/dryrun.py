@@ -264,7 +264,6 @@ def run_parataa_cell(multi_pod: bool, *, T: int = 100, window: int = 64,
     import numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.core import ddim_coeffs
-    from repro.core.parataa import ParaTAAConfig
     from repro.core.coeffs import system_matrices
     from repro.core.anderson import anderson_update
     from repro.core.system import first_order_residuals
@@ -295,8 +294,9 @@ def run_parataa_cell(multi_pod: bool, *, T: int = 100, window: int = 64,
                                        dtype=S.PARAM_DTYPE)
         spec = get_sampler("taa", order_k=8, history_m=history_m,
                            window=window, s_max=2 * T)
-        solver = ParaTAAConfig(order_k=8, history_m=history_m, window=window,
-                               mode="taa", s_max=2 * T)
+        # derive the standalone per-iteration solver config from the SAME
+        # spec the engine program is measured with, so the two cannot drift
+        solver = spec.solver_config(T)
 
         # --- memory: the engine's own batched sampling program (rolled
         # while loop), request axis sharded over `data` by the placement

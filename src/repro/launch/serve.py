@@ -16,6 +16,18 @@ Straggler mitigation duplicates the slowest window shard on spare capacity
     PYTHONPATH=src python -m repro.launch.serve --smoke --requests 8 \
         --solver taa --steps-T 50 --batch-size 4 \
         --mesh debug --data-parallel 4 --model-parallel 2
+
+``--serve-async`` swaps the blocking loop for the ``repro.serving``
+continuous-batching layer: a Poisson (``--arrival-rate``) or closed-loop
+(rate 0) request stream over mixed (T, solver) ``EngineKey``s is submitted
+to a ``RequestQueue``, an ``EngineRegistry`` lazily builds one engine per
+key on the shared placement, and a double-buffered ``ServingLoop`` packs
+the next dispatch while the previous one computes, reporting p50/p95
+latency, throughput, and per-key slot utilization:
+
+    PYTHONPATH=src python -m repro.launch.serve --serve-async --smoke \
+        --requests 12 --steps-T 8 --batch-size 4 --arrival-rate 100 \
+        --mesh debug --data-parallel 4 --model-parallel 2
 """
 from __future__ import annotations
 
@@ -54,6 +66,8 @@ def _force_host_devices(argv):
 if __name__ == "__main__":  # must precede the jax import below
     _force_host_devices(sys.argv[1:])
 
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -65,6 +79,8 @@ from repro.launch.mesh import make_mesh, mesh_names
 from repro.runtime import StragglerMitigator
 from repro.sampling import (Placement, SampleRequest, SamplingEngine,
                             get_sampler)
+from repro.serving import (Batcher, BatchingPolicy, EngineKey, EngineRegistry,
+                           RequestQueue, ServingLoop)
 
 
 def make_eps_apply(cfg):
@@ -109,6 +125,107 @@ def serve_batch(engine: SamplingEngine, requests, *, batch_size=None):
     return jnp.stack([res.x0 for res in results]), stats, straggler
 
 
+def resolve_coeffs(args, T: int):
+    """CLI schedule flag -> SolverCoeffs at step count ``T``."""
+    return (ddim_coeffs if args.sampler == "ddim" else ddpm_coeffs)(T)
+
+
+def resolve_spec(args, solver: str):
+    """CLI solver flags -> SamplerSpec — ONE resolution shared by the sync
+    and async paths, so the same flags always mean the same solver."""
+    if solver == "seq":
+        return get_sampler("seq")
+    return get_sampler(solver, order_k=args.order_k,
+                       history_m=args.history_m, window=args.window)
+
+
+def make_engine_factory(cfg, params, args, placement: Placement):
+    """EngineKey -> SamplingEngine factory: one shared denoiser + placement,
+    per-key step count and solver (the registry caches the instances)."""
+    def factory(key: EngineKey):
+        return make_engine(params, cfg, resolve_coeffs(args, key.T),
+                           resolve_spec(args, key.solver),
+                           placement=placement)
+    return factory
+
+
+def mixed_engine_keys(args):
+    """The (arch, T, solver) key set the async simulator routes over: the
+    CLI configuration itself, a half-depth variant, and an alternate
+    solver — ``--mixed-keys N`` keeps the first N."""
+    base = EngineKey(args.arch, args.steps_T, args.solver)
+    alt_solver = "fp" if args.solver != "fp" else "taa"
+    variants = [base,
+                EngineKey(args.arch, max(args.steps_T // 2, 4), args.solver),
+                EngineKey(args.arch, args.steps_T, alt_solver)]
+    # tiny --steps-T makes the half-depth variant collide with base
+    return list(dict.fromkeys(variants))[:max(args.mixed_keys, 1)]
+
+
+def simulate_arrivals(rng, n: int, rate_hz: float):
+    """Poisson inter-arrival gaps in seconds (all zero when ``rate_hz`` is 0:
+    a closed-loop burst)."""
+    if rate_hz <= 0:
+        return np.zeros(n)
+    return rng.exponential(1.0 / rate_hz, size=n)
+
+
+def serve_async(args, cfg, params, placement: Placement):
+    """Drive the ``repro.serving`` stack with a simulated request stream."""
+    keys = mixed_engine_keys(args)
+    registry = EngineRegistry(make_engine_factory(cfg, params, args,
+                                                  placement))
+    policy = BatchingPolicy(max_batch=args.batch_size or 8,
+                            max_wait_s=args.max_wait_ms / 1e3)
+    loop = ServingLoop(registry, RequestQueue(), Batcher(policy),
+                       depth=args.async_depth)
+    for key in keys:  # compile ahead of traffic so p95 is not a jit compile
+        engine = registry.get(key)
+        registry.warmup(key, slots=loop.batcher.slots_for(engine))
+        print(f"warmed {key.describe()}: {engine.placement.describe()}")
+
+    rng = np.random.default_rng(args.seed)
+    gaps = simulate_arrivals(rng, args.requests, args.arrival_rate)
+    tickets = []
+    loop.start()
+    try:
+        for gap in gaps:
+            if gap:
+                time.sleep(float(gap))
+            request = SampleRequest(
+                label=int(rng.integers(0, cfg.num_classes)),
+                seed=int(rng.integers(1 << 30)))
+            tickets.append(loop.queue.submit(
+                request, keys[int(rng.integers(len(keys)))]))
+        results = [t.result(timeout=600) for t in tickets]
+    finally:
+        loop.stop()
+
+    latencies = np.asarray([t.latency_s for t in tickets])
+    span = max(t.completed_time for t in tickets) \
+        - min(t.request.arrival_time for t in tickets)
+    stats = []
+    for ticket, res in zip(tickets, results):
+        stats.append({"key": ticket.key.describe(), "label": res.request.label,
+                      "iters": res.iters, "nfe": res.nfe,
+                      "latency_s": ticket.latency_s})
+        print(f"{ticket.key.describe():>24s} label={res.request.label:4d} "
+              f"iters={res.iters:3d} latency={ticket.latency_s:.2f}s")
+    for key, engine in sorted(registry.engines().items()):
+        observed = loop.batcher.observed(key) or {}
+        print(f"{key.describe()}: {engine.stats['batches']} dispatch(es), "
+              f"{engine.stats['traces']} compilation(s), "
+              f"slot util {observed.get('slot_utilization', 0):.0%}, "
+              f"mean wall {observed.get('wall_s', 0):.2f}s "
+              f"(pack {observed.get('pack_s', 0) * 1e3:.0f}ms overlapped)")
+    print(f"async served {len(tickets)} requests over {len(keys)} key(s) in "
+          f"{span:.2f}s => {len(tickets) / max(span, 1e-9):.2f} req/s; "
+          f"latency p50 {np.percentile(latencies, 50):.2f}s "
+          f"p95 {np.percentile(latencies, 95):.2f}s; "
+          f"loop stats {loop.stats}")
+    return jnp.stack([res.x0 for res in results]), stats
+
+
 def report_dispatches(engine: SamplingEngine, *, out=print):
     """Per-dispatch device-utilization report (one line per dispatch)."""
     for i, d in enumerate(engine.last_dispatches):
@@ -124,7 +241,9 @@ def main(argv=None):
     p.add_argument("--smoke", action="store_true")
     p.add_argument("--requests", type=int, default=4)
     p.add_argument("--batch-size", type=int, default=0,
-                   help="requests per engine dispatch (0 = all in one batch)")
+                   help="requests per engine dispatch (0 = all in one "
+                        "batch; with --serve-async, 0 = the default "
+                        "8-slot continuous batches)")
     p.add_argument("--steps-T", type=int, default=50)
     p.add_argument("--solver", default="taa", choices=["fp", "aa", "taa", "seq"])
     p.add_argument("--sampler", default="ddim", choices=["ddim", "ddpm"])
@@ -143,6 +262,22 @@ def main(argv=None):
     p.add_argument("--donate", action="store_true",
                    help="donate packed input buffers to the compiled "
                         "program (pods; CPU ignores donation)")
+    p.add_argument("--serve-async", action="store_true",
+                   help="serve a simulated request stream through the "
+                        "repro.serving continuous-batching layer instead "
+                        "of one blocking run_batch call")
+    p.add_argument("--arrival-rate", type=float, default=0.0,
+                   help="Poisson arrival rate in requests/s for "
+                        "--serve-async (0 = closed-loop burst)")
+    p.add_argument("--max-wait-ms", type=float, default=50.0,
+                   help="batching deadline: max time a request may wait "
+                        "for its dispatch to fill (--serve-async)")
+    p.add_argument("--async-depth", type=int, default=2,
+                   help="dispatches kept in flight by the serving loop "
+                        "(2 = double-buffered pack/compute overlap)")
+    p.add_argument("--mixed-keys", type=int, default=2,
+                   help="number of distinct (T, solver) EngineKeys the "
+                        "--serve-async simulator routes over")
     p.add_argument("--ckpt", default=None, help="trained DiT checkpoint dir")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
@@ -166,13 +301,12 @@ def main(argv=None):
             params = tree["params"]
             print(f"restored checkpoint step {tree['step']}")
 
-    coeffs = (ddim_coeffs if args.sampler == "ddim" else ddpm_coeffs)(args.steps_T)
-    if args.solver == "seq":
-        spec = get_sampler("seq")
-    else:
-        spec = get_sampler(args.solver, order_k=args.order_k,
-                           history_m=args.history_m, window=args.window)
-    engine = make_engine(params, cfg, coeffs, spec, placement=placement)
+    if args.serve_async:
+        return serve_async(args, cfg, params, placement)
+
+    coeffs = resolve_coeffs(args, args.steps_T)
+    engine = make_engine(params, cfg, coeffs,
+                         resolve_spec(args, args.solver), placement=placement)
 
     rng = np.random.default_rng(args.seed)
     requests = [SampleRequest(label=int(rng.integers(0, cfg.num_classes)),

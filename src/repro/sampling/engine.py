@@ -20,15 +20,24 @@ start is just ``init = (xi, T_init=T)``.  Batches are padded to a fixed
 every device holds the same number of request slots — so the engine compiles
 exactly once per (denoiser, T, sampler-spec, batch-size, diagnostics)
 configuration; the ``stats["traces"]`` counter records actual retraces and
-``last_dispatches`` reports per-dispatch device utilization.
+``last_dispatches`` reports per-dispatch device utilization (with host
+packing, ``pack_s``, timed separately from device wall time).
+
+``run_batch`` is the blocking path.  Its two halves are public —
+non-blocking ``dispatch`` (pack + enqueue; JAX async dispatch returns
+immediately) and blocking ``collect`` — so a serving loop can pack batch
+N+1 on the host while batch N computes on the device (see
+:mod:`repro.serving`).
 """
 from __future__ import annotations
 
+import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.coeffs import SolverCoeffs
 from repro.core import parataa as _parataa
@@ -36,6 +45,24 @@ from repro.diffusion.samplers import _sequential_sample, draw_noises
 from repro.sampling.placement import Placement
 from repro.sampling.specs import SamplerSpec
 from repro.sampling.types import DIAG_KEYS, SampleRequest, SampleResult
+
+
+@dataclasses.dataclass
+class PendingBatch:
+    """One in-flight engine dispatch.
+
+    ``trajs``/``info`` are the compiled program's outputs: thanks to JAX
+    async dispatch they are futures-backed arrays the moment ``dispatch``
+    returns, so the host is free to pack the next batch while the device
+    computes this one.  Only ``collect`` blocks on them.
+    """
+    trajs: Any
+    info: Dict
+    requests: List[SampleRequest]   # the real (unpadded) requests
+    slots: int                      # padded request-slot count dispatched
+    diagnostics: bool
+    pack_s: float                   # host-side packing/PRNG wall time
+    t_dispatch: float               # clock reading when the program launched
 
 
 class SamplingEngine:
@@ -54,6 +81,11 @@ class SamplingEngine:
                   replicated
     """
 
+    #: ``last_dispatches`` cap — ``run_batch`` resets the list per call, but
+    #: the continuous-serving path appends via ``collect`` indefinitely, so
+    #: long soaks keep only the most recent reports.
+    MAX_DISPATCH_REPORTS = 256
+
     def __init__(self, eps_apply: Callable, params, coeffs: SolverCoeffs,
                  spec: SamplerSpec, *, sample_shape: Sequence[int],
                  dtype=jnp.float32, placement: Optional[Placement] = None,
@@ -69,7 +101,8 @@ class SamplingEngine:
             params = self.placement.shard_params(params, param_defs)
         self.params = params
         self._jitted = {}   # diagnostics flag -> jitted batched program
-        self.stats = {"traces": 0, "batches": 0, "requests": 0, "wall_s": 0.0}
+        self.stats = {"traces": 0, "batches": 0, "requests": 0,
+                      "wall_s": 0.0, "pack_s": 0.0}
         self.last_batch_walls = []  # per-dispatch walls of the last run_batch
         self.last_dispatches: List[Dict] = []  # per-dispatch reports
 
@@ -181,6 +214,88 @@ class SamplingEngine:
     def run(self, request: SampleRequest, **kw) -> SampleResult:
         return self.run_batch([request], **kw)[0]
 
+    def dispatch(self, requests: Sequence[SampleRequest], *,
+                 slots: Optional[int] = None,
+                 diagnostics: bool = False) -> PendingBatch:
+        """Pack ``requests`` and launch ONE non-blocking dispatch.
+
+        Pads to ``slots`` request slots (default: the request count, rounded
+        up to a multiple of the placement's data shards) by repeating the
+        last request; padding is discarded at ``collect``.  Returns as soon
+        as the compiled program is enqueued — JAX async dispatch runs it in
+        the background, so callers may pack the NEXT batch on the host while
+        this one computes (``repro.serving.ServingLoop`` double-buffers on
+        exactly this property).  Packing is timed separately (``pack_s``) so
+        the reported device wall time excludes host-side packing/PRNG work.
+        """
+        requests = list(requests)
+        if not requests:
+            raise ValueError("dispatch needs at least one request")
+        self.spec.check_request_flags(
+            diagnostics=diagnostics,
+            warm_start=any(r.init is not None for r in requests))
+        B = self.placement.round_batch(slots or len(requests))
+        if len(requests) > B:
+            raise ValueError(
+                f"{len(requests)} requests exceed {B} request slots")
+        chunk = requests + [requests[-1]] * (B - len(requests))
+        fn = self._program(diagnostics)
+        t0 = time.time()
+        packed = self.pack(chunk)
+        t1 = time.time()
+        with self.placement.activations():
+            trajs, info = fn(self.params, *packed)
+        return PendingBatch(trajs=trajs, info=info, requests=requests,
+                            slots=B, diagnostics=diagnostics,
+                            pack_s=t1 - t0, t_dispatch=t1)
+
+    def collect(self, pending: PendingBatch) -> List[SampleResult]:
+        """Block on one in-flight dispatch, record its stats, unpack results.
+
+        ``wall_s`` spans program launch -> outputs ready: when collect runs
+        right after dispatch (the sync ``run_batch`` path) that is pure
+        device wall time; when other work was interleaved it is the device
+        occupancy window of this batch.  ``pack_s`` is reported separately
+        in ``last_dispatches``.
+        """
+        jax.block_until_ready(pending.trajs)
+        wall = time.time() - pending.t_dispatch
+        plc = self.placement
+        n_real = len(pending.requests)
+        self.stats["batches"] += 1
+        self.stats["requests"] += n_real
+        self.stats["wall_s"] += wall
+        self.stats["pack_s"] += pending.pack_s
+        self.last_batch_walls.append(wall)
+        del self.last_batch_walls[:-self.MAX_DISPATCH_REPORTS]
+        self.last_dispatches.append(dict(
+            wall_s=wall, pack_s=pending.pack_s,
+            requests=n_real, slots=pending.slots,
+            slot_utilization=plc.slot_utilization(n_real, pending.slots),
+            devices=plc.num_devices, data_shards=plc.data_shards,
+            model_shards=plc.model_shards))
+        del self.last_dispatches[:-self.MAX_DISPATCH_REPORTS]
+
+        # fetch each output ONCE as a host array and slice per request in
+        # numpy: per-request jnp slicing would enqueue fresh device ops that
+        # queue behind whatever batch is in flight (the double-buffered loop
+        # always has one), serializing unpack against the next dispatch
+        trajs = np.asarray(pending.trajs)
+        info = {k: np.asarray(v) for k, v in pending.info.items()}
+        results: List[SampleResult] = []
+        for i in range(n_real):
+            diag = None
+            if pending.diagnostics:
+                diag = {k: info[k][i] for k in DIAG_KEYS}
+            res = info.get("residuals")
+            results.append(SampleResult(
+                x0=trajs[i, 0], trajectory=trajs[i],
+                iters=int(info["iters"][i]), nfe=int(info["nfe"][i]),
+                converged=bool(info["converged"][i]),
+                residuals=None if res is None else res[i],
+                diagnostics=diag, request=pending.requests[i], wall_s=wall))
+        return results
+
     def run_batch(self, requests: Sequence[SampleRequest], *,
                   batch_size: Optional[int] = None,
                   diagnostics: bool = False) -> List[SampleResult]:
@@ -189,53 +304,36 @@ class SamplingEngine:
         The dispatch size is rounded up to a multiple of the placement's
         data shards, and the final partial batch is padded by repeating its
         last request (padding discarded) so every dispatch reuses one
-        compiled program with one request-slot count per device.
+        compiled program with one request-slot count per device.  This is
+        the synchronous path — each dispatch is collected before the next
+        one is packed; ``repro.serving`` drives ``dispatch``/``collect``
+        directly to overlap the two.
         """
         if not requests:
             return []
         if batch_size is not None and batch_size < 1:
             raise ValueError(f"batch_size must be >= 1, got {batch_size}")
-        self.spec.check_request_flags(
-            diagnostics=diagnostics,
-            warm_start=any(r.init is not None for r in requests))
-        plc = self.placement
-        B = plc.round_batch(batch_size or len(requests))
+        B = self.placement.round_batch(batch_size or len(requests))
         self.last_batch_walls = []
         self.last_dispatches = []
-        fn = self._program(diagnostics)
-
         results: List[SampleResult] = []
         for lo in range(0, len(requests), B):  # step by SLOTS, not batch_size:
             # a rounded-up dispatch takes B real requests when available
-            chunk = list(requests[lo:lo + B])
-            n_real = len(chunk)
-            chunk += [chunk[-1]] * (B - n_real)       # pad to fixed shape
-            t0 = time.time()
-            with plc.activations():
-                trajs, info = fn(self.params, *self.pack(chunk))
-            jax.block_until_ready(trajs)
-            wall = time.time() - t0
-            self.stats["batches"] += 1
-            self.stats["requests"] += n_real
-            self.stats["wall_s"] += wall
-            self.last_batch_walls.append(wall)
-            self.last_dispatches.append(dict(
-                wall_s=wall, requests=n_real, slots=B,
-                slot_utilization=plc.slot_utilization(n_real, B),
-                devices=plc.num_devices, data_shards=plc.data_shards,
-                model_shards=plc.model_shards))
-            for i in range(n_real):
-                diag = None
-                if diagnostics:
-                    diag = {k: info[k][i] for k in DIAG_KEYS}
-                res = info.get("residuals")
-                results.append(SampleResult(
-                    x0=trajs[i, 0], trajectory=trajs[i],
-                    iters=int(info["iters"][i]), nfe=int(info["nfe"][i]),
-                    converged=bool(info["converged"][i]),
-                    residuals=None if res is None else res[i],
-                    diagnostics=diag, request=chunk[i], wall_s=wall))
+            pending = self.dispatch(requests[lo:lo + B], slots=B,
+                                    diagnostics=diagnostics)
+            results.extend(self.collect(pending))
         return results
+
+    def reset_stats(self) -> None:
+        """Rewind the serving counters and dispatch reports — e.g. after a
+        warmup or compile-only pass — keeping ``traces``: compilations are
+        a property of the program cache, not of traffic.  Owns the key
+        list, so callers never enumerate stats fields by hand."""
+        traces = self.stats["traces"]
+        self.stats = {"traces": traces, "batches": 0, "requests": 0,
+                      "wall_s": 0.0, "pack_s": 0.0}
+        self.last_batch_walls = []
+        self.last_dispatches = []
 
     def throughput(self) -> float:
         """Requests per second over every batch this engine has run."""

@@ -35,10 +35,20 @@ class WarmStart:
 
 @dataclasses.dataclass(frozen=True)
 class SampleRequest:
-    """One sampling request: (conditioning, seed, optional warm start)."""
+    """One sampling request: (conditioning, seed, optional warm start).
+
+    ``arrival_time`` and ``priority`` are serving metadata carried on the
+    request itself so batching layers never need a side-channel dict keyed
+    by request identity: the engine ignores both.  ``arrival_time`` is the
+    queue clock reading at submission (``repro.serving.RequestQueue.submit``
+    stamps it when unset); ``priority`` orders requests within one engine
+    key — higher dispatches first, FIFO among equals.
+    """
     label: int = 0
     seed: int = 0
     init: Optional[WarmStart] = None
+    arrival_time: Optional[float] = None
+    priority: int = 0
 
 
 @dataclasses.dataclass

@@ -1,0 +1,40 @@
+"""repro.serving — continuous-batching async serving over SamplingEngines.
+
+The blocking path (``engine.run_batch``) packs, dispatches, and waits one
+batch at a time.  This package turns that into a continuously-batched
+serving layer for live traffic:
+
+  * :class:`EngineKey` / :class:`RequestQueue` — clients submit
+    ``SampleRequest``s under an (arch, T, solver) key and get a
+    :class:`Ticket` future back; priority and arrival time ride ON the
+    request, never in side-channel state.
+  * :class:`EngineRegistry` — lazily constructs and caches ONE
+    ``SamplingEngine`` (with its ``Placement``) per key, so the rest of the
+    layer only routes requests and never touches meshes or shardings.
+  * :class:`Batcher` / :class:`BatchingPolicy` — drains queue buckets into
+    FIXED-slot dispatches (``Placement.round_batch(max_batch)``: one
+    compile per key) under a fill-or-deadline policy, mixing warm and cold
+    starts freely, and folds ``engine.last_dispatches`` reports into
+    per-key observed utilization.
+  * :class:`ServingLoop` — a double-buffered pump: packs dispatch N+1 on
+    the host while dispatch N computes on the device (JAX async dispatch;
+    only ``collect`` blocks), driven synchronously (``drain()``) or as a
+    background thread (``start()``/``stop()``).
+
+Results are bitwise-identical to ``engine.run_batch`` over the same
+requests at the same slot geometry — batching is a scheduling concern, not
+a numerics one.  See ``launch/serve.py --serve-async`` for the live driver
+and ``benchmarks/serving_async.py`` for throughput/latency measurements
+against the blocking loop.
+"""
+from repro.serving.batcher import Batcher, BatchingPolicy, Dispatch
+from repro.serving.loop import ServingLoop
+from repro.serving.queue import EngineKey, RequestQueue, Ticket
+from repro.serving.registry import EngineRegistry
+
+__all__ = [
+    "Batcher", "BatchingPolicy", "Dispatch",
+    "ServingLoop",
+    "EngineKey", "RequestQueue", "Ticket",
+    "EngineRegistry",
+]

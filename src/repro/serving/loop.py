@@ -1,0 +1,208 @@
+"""Double-buffered dispatch loop: the pump between queue and engines.
+
+The loop keeps up to ``depth`` engine dispatches in flight.  Because
+``SamplingEngine.dispatch`` only ENQUEUES the compiled program (JAX async
+dispatch), the loop packs dispatch N+1 on the host — per-request PRNG,
+stacking, device placement — while dispatch N computes on the device; only
+``collect`` blocks.  With ``depth=2`` (the default double buffer) the device
+pipeline never drains between consecutive batches as long as packing is
+faster than solving.
+
+The loop can be driven two ways:
+
+  * synchronously — ``pump()`` one scheduling round at a time, or
+    ``drain()`` until queue and pipeline are empty (tests, benchmarks,
+    closed-loop replay);
+  * as a background thread — ``start()`` / ``stop()`` around client threads
+    that ``queue.submit(...)`` and block on their tickets (live serving,
+    the ``serve.py --serve-async`` driver).
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Deque, Optional, Tuple
+
+import jax
+
+from repro.serving.batcher import Batcher, Dispatch
+from repro.serving.queue import RequestQueue
+from repro.serving.registry import EngineRegistry
+
+
+class ServingLoop:
+    """Continuous-batching executor over an :class:`EngineRegistry`.
+
+    registry: EngineKey -> engine resolution (lazily constructed).
+    queue:    request intake; the loop is its only consumer.
+    batcher:  drain policy (default :class:`Batcher` defaults).
+    depth:    max dispatches in flight (1 = no overlap, 2 = double buffer).
+    """
+
+    def __init__(self, registry: EngineRegistry, queue: RequestQueue,
+                 batcher: Optional[Batcher] = None, *, depth: int = 2):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        self.registry = registry
+        self.queue = queue
+        self.batcher = batcher or Batcher()
+        self.depth = depth
+        self.stats = {"dispatches": 0, "completed": 0, "failed": 0}
+        self.error: Optional[BaseException] = None
+        self._inflight: Deque[Tuple[Dispatch, object]] = collections.deque()
+        self._stop_event = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # -- one scheduling round ------------------------------------------------
+
+    def pump(self, *, flush: bool = False) -> int:
+        """Plan ready dispatches and launch them, collecting the oldest
+        in-flight batch whenever the pipeline is at ``depth``.  Returns the
+        number of requests dispatched this round."""
+        self._assert_not_threaded()
+        plans = self.batcher.plan(
+            self.queue, self.registry, now=self.queue.clock(),
+            flush=flush, idle=not self._inflight)
+        dispatched = 0
+        for plan in plans:
+            while len(self._inflight) >= self.depth:
+                # free a slot: prefer a batch that already finished, fall
+                # back to blocking on the oldest
+                ready = self._first_ready_index()
+                self._collect_at(ready if ready is not None else 0)
+            self._dispatch(plan)
+            dispatched += len(plan.tickets)
+        return dispatched
+
+    def drain(self) -> None:
+        """Dispatch everything queued and collect every in-flight batch."""
+        self._assert_not_threaded()
+        while len(self.queue):
+            self.pump(flush=True)
+        while self._inflight:
+            self._collect_oldest()
+
+    @property
+    def inflight(self) -> int:
+        return len(self._inflight)
+
+    def _assert_not_threaded(self) -> None:
+        """The pipeline state (``_inflight``) is single-consumer: while the
+        background thread owns it, foreign threads must submit and wait on
+        tickets, not pump."""
+        if self._thread is not None \
+                and threading.current_thread() is not self._thread:
+            raise RuntimeError(
+                "serving loop is running in a background thread; submit "
+                "requests and wait on their tickets instead of pumping")
+
+    def _dispatch(self, plan: Dispatch) -> None:
+        engine = self.registry.get(plan.key)
+        try:
+            pending = engine.dispatch(
+                [t.request for t in plan.tickets], slots=plan.slots)
+        except Exception as error:  # noqa: BLE001 — fail the batch, not the loop
+            for ticket in plan.tickets:
+                ticket.fail(error)
+            self.stats["failed"] += len(plan.tickets)
+            return
+        self._inflight.append((plan, pending))
+        self.stats["dispatches"] += 1
+
+    def _first_ready_index(self) -> Optional[int]:
+        """Index of the first in-flight batch whose outputs are already
+        computed (collecting it will not block), or None.  The background
+        thread uses this to avoid head-of-line blocking: batches are
+        independent, so a short batch that finished behind a long one can
+        be collected — and its tickets resolved — out of order, while the
+        free pipeline depth keeps absorbing new arrivals."""
+        for index, (_, pending) in enumerate(self._inflight):
+            if all(leaf.is_ready()
+                   for leaf in jax.tree.leaves((pending.trajs, pending.info))
+                   if hasattr(leaf, "is_ready")):
+                return index
+        return None
+
+    def _collect_oldest(self) -> None:
+        self._collect_at(0)
+
+    def _collect_at(self, index: int) -> None:
+        plan, pending = self._inflight[index]
+        del self._inflight[index]
+        engine = self.registry.get(plan.key)
+        try:
+            results = engine.collect(pending)
+        except Exception as error:  # noqa: BLE001
+            for ticket in plan.tickets:
+                ticket.fail(error)
+            self.stats["failed"] += len(plan.tickets)
+            return
+        if engine.last_dispatches:
+            self.batcher.note(plan.key, engine.last_dispatches[-1])
+        for ticket, result in zip(plan.tickets, results):
+            ticket.resolve(result)
+        self.stats["completed"] += len(results)
+
+    def _abort(self, error: BaseException) -> None:
+        """Fail every in-flight, queued, and FUTURE ticket with ``error``
+        (the loop died; clients must not block until their timeouts)."""
+        self.error = error
+        self.queue.close(error)
+        while self._inflight:
+            plan, _ = self._inflight.popleft()
+            for ticket in plan.tickets:
+                ticket.fail(error)
+            self.stats["failed"] += len(plan.tickets)
+        for key in self.queue.keys():
+            for ticket in self.queue.pop(key, self.queue.pending(key)):
+                ticket.fail(error)
+                self.stats["failed"] += 1
+
+    # -- background-thread mode ----------------------------------------------
+
+    def start(self, poll_s: float = 0.002) -> "ServingLoop":
+        """Run the pump on a daemon thread until :meth:`stop`."""
+        if self._thread is not None:
+            raise RuntimeError("serving loop already started")
+        self._stop_event.clear()
+
+        def run():
+            try:
+                while not self._stop_event.is_set():
+                    if self.pump() == 0:
+                        # never park in a blocking collect here: collect
+                        # any batch that already finished on device (out of
+                        # order — batches are independent), otherwise poll
+                        # so new arrivals keep dispatching into free depth
+                        # and a short batch resolves the moment it is ready
+                        ready = self._first_ready_index()
+                        if ready is not None:
+                            self._collect_at(ready)
+                        else:
+                            self._stop_event.wait(poll_s)
+            except BaseException as error:  # noqa: BLE001 — a dead loop
+                # must not strand clients in ticket.result(): fail
+                # everything in flight and queued, record the error
+                self._abort(error)
+
+        self._thread = threading.Thread(target=run, name="serving-loop",
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self, *, drain: bool = True) -> None:
+        """Stop the background thread; by default drain what remains (on the
+        caller's thread, after the worker has exited)."""
+        if self._thread is None:
+            return
+        self._stop_event.set()
+        self._thread.join()
+        self._thread = None
+        if drain:
+            self.drain()
+
+    def __enter__(self) -> "ServingLoop":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

@@ -1,0 +1,184 @@
+"""Request intake for continuous-batching serving.
+
+Clients ``submit(SampleRequest, key=EngineKey(...))`` and get a
+:class:`Ticket` back — a thread-safe future that resolves to the request's
+:class:`~repro.sampling.SampleResult` once a dispatch containing it is
+collected.  The queue itself never touches engines: it only buckets tickets
+per :class:`EngineKey` so the batcher can drain each bucket into fixed-slot
+engine dispatches.
+
+Ordering within a key is (priority desc, submission order): both live ON the
+request (``SampleRequest.priority`` / ``SampleRequest.arrival_time``), so no
+side-channel state keyed by request identity exists anywhere in the serving
+layer.  ``submit`` stamps ``arrival_time`` with the queue clock when the
+caller left it unset; simulators may pre-stamp it to replay a trace.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import itertools
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+
+from repro.sampling.types import SampleRequest, SampleResult
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class EngineKey:
+    """Routing key: one engine — one compiled program — per key.
+
+    Requests under the same key share (architecture, step count T, solver),
+    which is exactly the configuration a :class:`~repro.sampling
+    .SamplingEngine` compiles once; everything else (label, seed, warm
+    start, priority) is data to that program.
+    """
+    arch: str
+    T: int
+    solver: str
+
+    def describe(self) -> str:
+        return f"{self.arch}/T{self.T}/{self.solver}"
+
+
+class Ticket:
+    """Future for one submitted request (thread-safe).
+
+    ``result()`` blocks until a serving loop collects the dispatch carrying
+    the request (or fails it); ``latency_s`` is completion time minus the
+    request's ``arrival_time``, on the queue's clock.
+    """
+
+    def __init__(self, key: EngineKey, request: SampleRequest, seqno: int,
+                 clock: Callable[[], float]):
+        self.key = key
+        self.request = request
+        self.seqno = seqno
+        self.completed_time: Optional[float] = None
+        self._clock = clock
+        self._event = threading.Event()
+        self._result: Optional[SampleResult] = None
+        self._error: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> SampleResult:
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"request {self.key.describe()}#{self.seqno} not served "
+                f"within {timeout}s")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        """Queue-clock latency (arrival -> completion); None while pending."""
+        if self.completed_time is None or self.request.arrival_time is None:
+            return None
+        return self.completed_time - self.request.arrival_time
+
+    # resolution (serving-loop side) -----------------------------------------
+
+    def resolve(self, result: SampleResult) -> None:
+        self._result = result
+        self.completed_time = self._clock()
+        self._event.set()
+
+    def fail(self, error: BaseException) -> None:
+        self._error = error
+        self.completed_time = self._clock()
+        self._event.set()
+
+
+class RequestQueue:
+    """Thread-safe, multi-key request queue.
+
+    clock: timestamp source for arrival stamping and latency accounting
+           (``time.monotonic`` by default; tests inject a fake clock to
+           exercise deadline policies deterministically).
+    """
+
+    def __init__(self, clock: Callable[[], float] = time.monotonic):
+        self.clock = clock
+        self._lock = threading.Lock()
+        self._buckets: Dict[EngineKey, List[Ticket]] = {}
+        self._seq = itertools.count()
+        self._closed: Optional[BaseException] = None
+
+    def submit(self, request: SampleRequest, key: EngineKey) -> Ticket:
+        """Enqueue one request under ``key``; returns its Ticket future.
+
+        On a closed queue (the serving loop died — see
+        ``ServingLoop._abort``) the ticket comes back already failed with
+        the loop's error, so clients surface it immediately instead of
+        blocking out their ``result`` timeout on a request nobody will
+        ever serve."""
+        if request.arrival_time is None:
+            request = dataclasses.replace(request,
+                                          arrival_time=self.clock())
+        with self._lock:
+            ticket = Ticket(key, request, next(self._seq), self.clock)
+            if self._closed is not None:
+                ticket.fail(self._closed)
+                return ticket
+            # (priority desc, seqno asc): FIFO-fair among equal priorities;
+            # the sort key is immutable after submit, so one insertion
+            # keeps the bucket ordered
+            bisect.insort(self._buckets.setdefault(key, []), ticket,
+                          key=lambda t: (-t.request.priority, t.seqno))
+        return ticket
+
+    def close(self, error: BaseException) -> None:
+        """Mark the queue dead: every future submit fails with ``error``."""
+        with self._lock:
+            self._closed = error
+
+    def pop(self, key: EngineKey, n: int, *,
+            promote_before: Optional[float] = None) -> List[Ticket]:
+        """Dequeue up to ``n`` tickets for ``key`` in dispatch order.
+
+        ``promote_before``: arrival-time cutoff for deadline promotion —
+        tickets that have waited past the batching deadline jump the
+        priority order (oldest first).  Without it, sustained high-priority
+        traffic could starve an old low-priority request forever: every
+        deadline-triggered dispatch would fill with newer, higher-priority
+        tickets and never include the one whose deadline fired.
+        """
+        with self._lock:
+            bucket = self._buckets.get(key, [])
+            if promote_before is not None:
+                bucket = sorted(bucket, key=lambda t: (
+                    t.request.arrival_time > promote_before,
+                    -t.request.priority, t.seqno))
+            taken, rest = bucket[:n], bucket[n:]
+            if rest:
+                # restore the submit order invariant (priority desc, seqno)
+                rest.sort(key=lambda t: (-t.request.priority, t.seqno))
+                self._buckets[key] = rest
+            else:
+                self._buckets.pop(key, None)
+        return taken
+
+    def pending(self, key: EngineKey) -> int:
+        with self._lock:
+            return len(self._buckets.get(key, ()))
+
+    def keys(self) -> List[EngineKey]:
+        """Keys with at least one pending ticket."""
+        with self._lock:
+            return list(self._buckets)
+
+    def oldest_arrival(self, key: EngineKey) -> Optional[float]:
+        """Earliest ``arrival_time`` pending under ``key`` (deadline input)."""
+        with self._lock:
+            bucket = self._buckets.get(key)
+            if not bucket:
+                return None
+            return min(t.request.arrival_time for t in bucket)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return sum(len(b) for b in self._buckets.values())

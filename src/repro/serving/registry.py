@@ -1,0 +1,75 @@
+"""Lazy, cached EngineKey -> SamplingEngine construction.
+
+The registry is the only place the serving layer touches engine
+construction: a factory callback builds one
+:class:`~repro.sampling.SamplingEngine` (with its
+:class:`~repro.sampling.Placement`) per :class:`~repro.serving.EngineKey`
+the first time traffic routes to it, and the instance is cached for the
+registry's lifetime — so the batcher and loop only ever ROUTE requests; they
+never see meshes, shardings, or denoiser parameters.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, Optional
+
+from repro.sampling.engine import SamplingEngine
+from repro.sampling.types import SampleRequest
+from repro.serving.queue import EngineKey
+
+
+class EngineRegistry:
+    """One lazily-constructed :class:`SamplingEngine` per :class:`EngineKey`.
+
+    factory: ``EngineKey -> SamplingEngine``; called at most once per key
+             (under a lock — engine construction may shard parameters onto
+             a mesh, which must not race).
+    """
+
+    def __init__(self, factory: Callable[[EngineKey], SamplingEngine]):
+        self._factory = factory
+        self._lock = threading.Lock()
+        self._engines: Dict[EngineKey, SamplingEngine] = {}
+
+    def get(self, key: EngineKey) -> SamplingEngine:
+        with self._lock:
+            engine = self._engines.get(key)
+            if engine is None:
+                engine = self._engines[key] = self._factory(key)
+            return engine
+
+    def engines(self) -> Dict[EngineKey, SamplingEngine]:
+        """Snapshot of the engines constructed so far."""
+        with self._lock:
+            return dict(self._engines)
+
+    def warmup(self, key: EngineKey, *, slots: int,
+               request: Optional[SampleRequest] = None) -> SamplingEngine:
+        """Construct + compile ``key``'s engine ahead of traffic.
+
+        Dispatches one throwaway request at ``slots`` — which must be the
+        SERVING slot geometry (``Batcher.slots_for(engine)``), since any
+        other slot count compiles a different program and the first real
+        batch would still pay the jit compile — then rewinds the engine's
+        serving counters (``traces`` is kept: it genuinely compiled).
+        """
+        engine = self.get(key)
+        pending = engine.dispatch([request or SampleRequest()], slots=slots)
+        engine.collect(pending)
+        engine.reset_stats()
+        return engine
+
+    def __contains__(self, key: EngineKey) -> bool:
+        with self._lock:
+            return key in self._engines
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._engines)
+
+    def describe(self) -> str:
+        lines = []
+        for key, engine in sorted(self.engines().items()):
+            lines.append(f"{key.describe()}: {engine.placement.describe()}, "
+                         f"{engine.stats['traces']} compilation(s)")
+        return "\n".join(lines) or "(no engines constructed)"

@@ -8,6 +8,24 @@ import numpy as np
 from repro.diffusion.schedules import make_schedule
 
 
+def make_label_denoiser(dim: int = 32, n_labels: int = 4, nonlin: float = 0.3,
+                        seed: int = 0):
+    """Engine-shaped oracle denoiser (``(params, x, taus, y) -> eps``): the
+    conditioning label selects the data point the model denoises toward."""
+    key = jax.random.PRNGKey(seed)
+    abar = jnp.asarray(make_schedule("linear", 1000)[0], jnp.float32)
+    xstars = jax.random.normal(key, (n_labels, dim))
+    W = jax.random.normal(jax.random.fold_in(key, 3), (dim, dim)) / np.sqrt(dim)
+
+    def eps_apply(params, x, taus, y):
+        ab = abar[jnp.clip(taus.astype(jnp.int32), 0, 999)][:, None]
+        xs = xstars[jnp.clip(y, 0, n_labels - 1)]
+        lin = (x - jnp.sqrt(ab) * xs) / jnp.sqrt(1.0 - ab + 1e-8)
+        return lin + nonlin * jnp.tanh(x @ W)
+
+    return eps_apply
+
+
 def make_oracle_denoiser(dim: int = 64, nonlin: float = 0.3, seed: int = 0):
     """Near-perfect denoiser toward a fixed data point + bounded nonlinear
     perturbation — magnitudes stay O(1) like a trained eps-model."""

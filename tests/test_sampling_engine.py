@@ -11,31 +11,13 @@ import pytest
 
 from repro.core import ddim_coeffs
 from repro.core.parataa import sample as parataa_sample
-from repro.diffusion.schedules import make_schedule
 from repro.sampling import (SampleRequest, SamplerSpec, SamplingEngine,
                             WarmStart, draw_noises, get_sampler,
                             register_sampler, run, sequential_sample)
-from tests.helpers import make_oracle_denoiser
+from tests.helpers import make_label_denoiser, make_oracle_denoiser
 
 D = 32
 N_LABELS = 4
-
-
-def make_label_denoiser(dim=D, n_labels=N_LABELS, nonlin=0.3, seed=0):
-    """Engine-shaped oracle denoiser: the conditioning label selects the
-    data point the model denoises toward."""
-    key = jax.random.PRNGKey(seed)
-    abar = jnp.asarray(make_schedule("linear", 1000)[0], jnp.float32)
-    xstars = jax.random.normal(key, (n_labels, dim))
-    W = jax.random.normal(jax.random.fold_in(key, 3), (dim, dim)) / np.sqrt(dim)
-
-    def eps_apply(params, x, taus, y):
-        ab = abar[jnp.clip(taus.astype(jnp.int32), 0, 999)][:, None]
-        xs = xstars[jnp.clip(y, 0, n_labels - 1)]
-        lin = (x - jnp.sqrt(ab) * xs) / jnp.sqrt(1.0 - ab + 1e-8)
-        return lin + nonlin * jnp.tanh(x @ W)
-
-    return eps_apply
 
 
 def make_engine(coeffs, spec, **kw):

@@ -1,0 +1,561 @@
+"""`repro.serving` coverage: queue/ticket semantics, lazy engine registry,
+batching policy (fill / deadline / flush / work-conserving), and the
+double-buffered serving loop — async-served results must be bitwise-equal to
+``engine.run_batch`` over the same requests (host placement here, 8-device
+mesh in the subprocess variant), with mixed-key requests routed to the right
+engine FIFO-fair per key."""
+import json
+import subprocess
+import sys
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import ddim_coeffs
+from repro.sampling import (SampleRequest, SamplingEngine, WarmStart,
+                            get_sampler)
+from repro.sampling.engine import PendingBatch
+from repro.serving import (Batcher, BatchingPolicy, EngineKey, EngineRegistry,
+                           RequestQueue, ServingLoop)
+from tests.helpers import make_label_denoiser
+
+D = 24
+N_LABELS = 4
+
+
+def make_factory(counts=None, **engine_kw):
+    eps_apply = make_label_denoiser(dim=D, n_labels=N_LABELS)
+
+    def factory(key):
+        if counts is not None:
+            counts[key] = counts.get(key, 0) + 1
+        spec = get_sampler(key.solver)
+        return SamplingEngine(eps_apply, None, ddim_coeffs(key.T), spec,
+                              sample_shape=(D,), **engine_kw)
+
+    return factory
+
+
+def reference_engine(T, solver="taa"):
+    return SamplingEngine(make_label_denoiser(dim=D, n_labels=N_LABELS),
+                          None, ddim_coeffs(T), get_sampler(solver),
+                          sample_shape=(D,))
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+# --- queue + tickets --------------------------------------------------------
+
+def test_queue_stamps_arrival_and_orders_by_priority():
+    clock = FakeClock(100.0)
+    q = RequestQueue(clock=clock)
+    key = EngineKey("oracle", 10, "taa")
+    t_lo1 = q.submit(SampleRequest(seed=1), key)
+    clock.t = 101.0
+    t_lo2 = q.submit(SampleRequest(seed=2), key)
+    t_hi = q.submit(SampleRequest(seed=3, priority=5), key)
+    # arrival stamped with the queue clock; explicit stamps are preserved
+    assert t_lo1.request.arrival_time == 100.0
+    assert t_lo2.request.arrival_time == 101.0
+    pre = q.submit(SampleRequest(seed=4, arrival_time=42.0), key)
+    assert pre.request.arrival_time == 42.0
+    assert q.oldest_arrival(key) == 42.0
+    assert len(q) == 4 and q.pending(key) == 4 and q.keys() == [key]
+    # pop order: priority desc, FIFO among equals
+    seeds = [t.request.seed for t in q.pop(key, 4)]
+    assert seeds == [3, 1, 2, 4]
+    assert q.pending(key) == 0 and q.keys() == []
+
+
+def test_deadline_promotes_starved_low_priority_requests():
+    """A low-priority ticket past the batching deadline jumps the priority
+    order — sustained high-priority traffic must not starve it forever."""
+    clock = FakeClock(0.0)
+    q = RequestQueue(clock=clock)
+    key = EngineKey("oracle", 10, "taa")
+    old_low = q.submit(SampleRequest(seed=1, priority=0), key)
+    clock.t = 100.0
+    for seed in range(2, 6):
+        q.submit(SampleRequest(seed=seed, priority=5), key)
+    # without promotion the 4 priority-5 tickets would fill a 4-slot pop
+    taken = q.pop(key, 4, promote_before=50.0)
+    assert taken[0] is old_low                 # overdue ticket leads
+    assert [t.request.seed for t in taken] == [1, 2, 3, 4]
+    # the remainder keeps the (priority desc, seqno) invariant
+    assert [t.request.seed for t in q.pop(key, 4)] == [5]
+
+
+def test_ticket_result_blocks_fails_and_reports_latency():
+    clock = FakeClock(10.0)
+    q = RequestQueue(clock=clock)
+    key = EngineKey("oracle", 10, "taa")
+    ticket = q.submit(SampleRequest(seed=1), key)
+    assert not ticket.done() and ticket.latency_s is None
+    with pytest.raises(TimeoutError):
+        ticket.result(timeout=0.01)
+    clock.t = 13.5
+    ticket.resolve("result")
+    assert ticket.done() and ticket.result() == "result"
+    assert ticket.latency_s == pytest.approx(3.5)
+    failed = q.submit(SampleRequest(seed=2), key)
+    failed.fail(RuntimeError("boom"))
+    with pytest.raises(RuntimeError, match="boom"):
+        failed.result()
+    # a closed queue (dead serving loop) fails new submits immediately
+    # instead of stranding them until their result() timeout
+    q.close(RuntimeError("loop died"))
+    stranded = q.submit(SampleRequest(seed=3), key)
+    assert stranded.done() and q.pending(key) == 2  # not enqueued
+    with pytest.raises(RuntimeError, match="loop died"):
+        stranded.result()
+
+
+# --- registry ---------------------------------------------------------------
+
+def test_registry_constructs_each_key_lazily_once():
+    counts = {}
+    registry = EngineRegistry(make_factory(counts))
+    k1 = EngineKey("oracle", 8, "taa")
+    k2 = EngineKey("oracle", 8, "fp")
+    assert len(registry) == 0 and k1 not in registry
+    engine = registry.get(k1)
+    assert registry.get(k1) is engine          # cached, not rebuilt
+    assert counts == {k1: 1}
+    registry.get(k2)
+    assert counts == {k1: 1, k2: 1} and len(registry) == 2
+    assert set(registry.engines()) == {k1, k2}
+    assert "oracle/T8/taa" in registry.describe()
+
+
+def test_registry_warmup_compiles_without_polluting_stats():
+    registry = EngineRegistry(make_factory())
+    key = EngineKey("oracle", 8, "taa")
+    engine = registry.warmup(key, slots=4)
+    assert engine.stats["traces"] == 1         # genuinely compiled
+    assert engine.stats["batches"] == 0 and engine.stats["requests"] == 0
+    assert engine.last_dispatches == []
+    engine.run_batch([SampleRequest(seed=5)] * 4, batch_size=4)
+    assert engine.stats["traces"] == 1         # warmed geometry reused
+
+
+# --- batching policy --------------------------------------------------------
+
+def test_batcher_fill_deadline_flush_and_fixed_slots():
+    clock = FakeClock(0.0)
+    q = RequestQueue(clock=clock)
+    registry = EngineRegistry(make_factory())
+    key = EngineKey("oracle", 8, "taa")
+    policy = BatchingPolicy(max_batch=4, max_wait_s=10.0,
+                            work_conserving=False)
+    batcher = Batcher(policy)
+
+    q.submit(SampleRequest(seed=1), key)
+    q.submit(SampleRequest(seed=2), key)
+    # neither full nor overdue (idle is ignored: not work-conserving)
+    assert batcher.plan(q, registry, now=1.0, idle=True) == []
+    # deadline reached -> partial dispatch at the FIXED slot geometry
+    [partial] = batcher.plan(q, registry, now=10.0)
+    assert partial.key == key and partial.slots == 4
+    assert len(partial.tickets) == 2
+
+    # fill quota reached -> dispatch immediately, fresh remainder held
+    clock.t = 10.4
+    for seed in range(3, 8):
+        q.submit(SampleRequest(seed=seed), key)
+    [full] = batcher.plan(q, registry, now=10.5)
+    assert len(full.tickets) == 4 and q.pending(key) == 1
+    # flush drains the remainder regardless of fill/deadline
+    [rest] = batcher.plan(q, registry, now=10.5, flush=True)
+    assert len(rest.tickets) == 1 and rest.slots == 4
+    assert len(q) == 0
+
+
+def test_batcher_work_conserving_and_observed_stats():
+    clock = FakeClock(0.0)
+    q = RequestQueue(clock=clock)
+    registry = EngineRegistry(make_factory())
+    key = EngineKey("oracle", 8, "taa")
+    batcher = Batcher(BatchingPolicy(max_batch=4, max_wait_s=10.0))
+    q.submit(SampleRequest(seed=1), key)
+    # work-conserving: an idle pipeline dispatches partials immediately...
+    [d] = batcher.plan(q, registry, now=0.1, idle=True)
+    assert len(d.tickets) == 1
+    # ...but a busy pipeline holds them for fill/deadline
+    q.submit(SampleRequest(seed=2), key)
+    assert batcher.plan(q, registry, now=0.2, idle=False) == []
+    assert batcher.observed(key) is None
+    batcher.note(key, dict(slot_utilization=0.5, wall_s=1.0, pack_s=0.1))
+    batcher.note(key, dict(slot_utilization=1.0, wall_s=3.0, pack_s=0.3))
+    obs = batcher.observed(key)
+    assert obs["dispatches"] == 2
+    assert obs["slot_utilization"] == pytest.approx(0.75)
+    assert obs["wall_s"] == pytest.approx(2.0)
+    assert obs["pack_s"] == pytest.approx(0.2)
+
+
+def test_batching_policy_validation():
+    with pytest.raises(ValueError, match="max_batch"):
+        BatchingPolicy(max_batch=0)
+    with pytest.raises(ValueError, match="target_util"):
+        BatchingPolicy(target_util=1.5)
+    with pytest.raises(ValueError, match="max_wait_s"):
+        BatchingPolicy(max_wait_s=-1.0)
+    with pytest.raises(ValueError, match="depth"):
+        ServingLoop(EngineRegistry(make_factory()), RequestQueue(), depth=0)
+
+
+# --- engine dispatch/collect halves ----------------------------------------
+
+def test_dispatch_collect_halves_match_run_batch():
+    T = 10
+    engine = reference_engine(T)
+    reqs = [SampleRequest(label=i % N_LABELS, seed=20 + i) for i in range(3)]
+    pending = engine.dispatch(reqs, slots=4)
+    assert isinstance(pending, PendingBatch)
+    assert pending.slots == 4 and pending.pack_s >= 0.0
+    assert not pending.diagnostics
+    results = engine.collect(pending)
+    ref = reference_engine(T).run_batch(reqs, batch_size=4)
+    for got, want in zip(results, ref):
+        assert np.array_equal(np.asarray(got.trajectory),
+                              np.asarray(want.trajectory))
+        assert (got.iters, got.nfe, got.converged) == \
+            (want.iters, want.nfe, want.converged)
+    # packing is timed separately from device wall time
+    [report] = engine.last_dispatches
+    assert report["pack_s"] >= 0.0 and report["wall_s"] > 0.0
+    assert engine.stats["pack_s"] == pytest.approx(report["pack_s"])
+    with pytest.raises(ValueError, match="at least one"):
+        engine.dispatch([])
+    with pytest.raises(ValueError, match="exceed"):
+        engine.dispatch(reqs, slots=2)
+
+
+# --- async serving == run_batch --------------------------------------------
+
+def test_async_serving_bitwise_equals_run_batch():
+    """Acceptance: async-served results are bitwise-equal to a blocking
+    ``run_batch`` over the same requests (same slot geometry), warm and
+    cold starts mixed in one dispatch."""
+    T = 12
+    key = EngineKey("oracle", T, "taa")
+    [solved] = reference_engine(T).run_batch([SampleRequest(label=1, seed=3)])
+    reqs = [SampleRequest(label=i % N_LABELS, seed=50 + i) for i in range(6)]
+    reqs[2] = SampleRequest(label=1, seed=3,
+                            init=WarmStart(solved.trajectory, t_init=6))
+
+    registry = EngineRegistry(make_factory())
+    queue = RequestQueue()
+    loop = ServingLoop(registry, queue, Batcher(BatchingPolicy(max_batch=4)))
+    tickets = [queue.submit(r, key) for r in reqs]
+    loop.drain()
+    assert loop.stats == {"dispatches": 2, "completed": 6, "failed": 0}
+
+    ref = reference_engine(T).run_batch(reqs, batch_size=4)
+    for ticket, want in zip(tickets, ref):
+        got = ticket.result()
+        assert np.array_equal(np.asarray(got.trajectory),
+                              np.asarray(want.trajectory)), \
+            f"async result diverged for {ticket.request}"
+        assert (got.iters, got.nfe, got.converged) == \
+            (want.iters, want.nfe, want.converged)
+        assert ticket.latency_s is not None and ticket.latency_s >= 0.0
+    # one fixed-slot geometry -> exactly one compilation
+    assert registry.get(key).stats["traces"] == 1
+
+
+def test_mixed_key_requests_route_to_their_engines_fifo_fair():
+    """Requests interleaved across two EngineKeys land on the right engine
+    (trajectory length proves the T), FIFO-fair per key."""
+    k1 = EngineKey("oracle", 8, "taa")
+    k2 = EngineKey("oracle", 14, "taa")
+    counts = {}
+    registry = EngineRegistry(make_factory(counts))
+
+    # FIFO-fairness of the plan itself: interleaved submissions pop per key
+    # in submission order, most-starved key first
+    probe = RequestQueue()
+    for i in range(8):
+        probe.submit(SampleRequest(label=i % N_LABELS, seed=70 + i),
+                     k1 if i % 2 == 0 else k2)
+    plans = Batcher(BatchingPolicy(max_batch=4)).plan(
+        probe, registry, flush=True)
+    assert [p.key for p in plans] == [k1, k2]
+    for plan in plans:
+        seqnos = [t.seqno for t in plan.tickets]
+        assert seqnos == sorted(seqnos) and len(seqnos) == 4
+
+    # end-to-end: every request lands on its own key's engine
+    queue = RequestQueue()
+    loop = ServingLoop(registry, queue, Batcher(BatchingPolicy(max_batch=4)))
+    tickets, keys = [], []
+    for i in range(8):
+        key = k1 if i % 2 == 0 else k2
+        tickets.append(queue.submit(
+            SampleRequest(label=i % N_LABELS, seed=70 + i), key))
+        keys.append(key)
+    loop.drain()
+    for ticket, key in zip(tickets, keys):
+        res = ticket.result()
+        assert res.trajectory.shape[0] == key.T + 1
+        assert res.request.label == ticket.request.label
+        assert res.request.seed == ticket.request.seed
+    assert counts == {k1: 1, k2: 1}            # one engine per key
+    for key in (k1, k2):
+        assert registry.get(key).stats["requests"] == 4
+        assert registry.get(key).coeffs.T == key.T
+
+
+def test_serving_loop_threaded_live_arrivals():
+    key = EngineKey("oracle", 8, "taa")
+    registry = EngineRegistry(make_factory())
+    registry.warmup(key, slots=4)
+    queue = RequestQueue()
+    loop = ServingLoop(registry, queue,
+                       Batcher(BatchingPolicy(max_batch=4, max_wait_s=0.01)))
+    with loop:
+        tickets = []
+        for i in range(6):
+            tickets.append(queue.submit(
+                SampleRequest(label=i % N_LABELS, seed=90 + i), key))
+            time.sleep(0.002)
+        results = [t.result(timeout=120) for t in tickets]
+    assert all(r.converged for r in results)
+    assert loop.stats["completed"] == 6 and loop.stats["failed"] == 0
+    assert len(queue) == 0 and loop.inflight == 0
+
+
+class _StubDevice:
+    """Stands in for a device computation: is_ready()/wait() on an event."""
+
+    def __init__(self):
+        self._event = threading.Event()
+
+    def is_ready(self):
+        return self._event.is_set()
+
+    def finish(self):
+        self._event.set()
+
+    def wait(self):
+        self._event.wait()
+
+
+class _StubEngine:
+    """Engine double: dispatch hands out a pending whose 'device' the test
+    controls, collect blocks on it — so out-of-order readiness is exact."""
+
+    def __init__(self):
+        from repro.sampling import Placement
+        self.placement = Placement.host()
+        self.last_dispatches = []
+        self.pendings = []
+
+    def dispatch(self, requests, slots=None):
+        pending = PendingBatch(trajs=_StubDevice(), info={},
+                               requests=list(requests), slots=slots or 1,
+                               diagnostics=False, pack_s=0.0, t_dispatch=0.0)
+        self.pendings.append(pending)
+        return pending
+
+    def collect(self, pending):
+        pending.trajs.wait()
+        return [f"served-{r.seed}" for r in pending.requests]
+
+
+def test_serving_loop_collects_ready_batches_out_of_order():
+    """A short batch that finishes behind a long in-flight one must resolve
+    its tickets without waiting for the long batch (no head-of-line block),
+    and new arrivals must keep dispatching into the free pipeline depth."""
+    engines = {}
+
+    class StubRegistry:
+        def get(self, key):
+            return engines.setdefault(key, _StubEngine())
+
+    slow_key = EngineKey("stub", 10, "taa")
+    fast_key = EngineKey("stub", 4, "taa")
+    queue = RequestQueue()
+    loop = ServingLoop(StubRegistry(), queue,
+                       Batcher(BatchingPolicy(max_batch=2, max_wait_s=0.001)))
+    with loop:
+        slow = [queue.submit(SampleRequest(seed=s), slow_key) for s in (1, 2)]
+        deadline = time.monotonic() + 30
+        while not engines.get(slow_key, _StubEngine()).pendings \
+                and time.monotonic() < deadline:
+            time.sleep(0.001)              # slow batch now in flight
+        fast = queue.submit(SampleRequest(seed=3), fast_key)
+        deadline = time.monotonic() + 30
+        while not engines.get(fast_key, _StubEngine()).pendings \
+                and time.monotonic() < deadline:
+            time.sleep(0.001)              # fast batch dispatched alongside
+        engines[fast_key].pendings[0].trajs.finish()
+        assert fast.result(timeout=30) == "served-3"
+        assert not slow[0].done()          # long batch still computing
+        engines[slow_key].pendings[0].trajs.finish()
+        assert [t.result(timeout=30) for t in slow] == \
+            ["served-1", "served-2"]
+    assert loop.stats["completed"] == 3
+
+
+def test_serving_loop_fails_tickets_not_the_loop():
+    """A request an engine rejects (warm start on the sequential sampler)
+    fails its own tickets; later dispatches still serve."""
+    key = EngineKey("oracle", 8, "seq")
+    registry = EngineRegistry(make_factory())
+    queue = RequestQueue()
+    loop = ServingLoop(registry, queue, Batcher(BatchingPolicy(max_batch=2)))
+    [solved] = reference_engine(8).run_batch([SampleRequest(seed=1)])
+    bad = queue.submit(
+        SampleRequest(seed=2, init=WarmStart(solved.trajectory, 4)), key)
+    loop.drain()
+    good = queue.submit(SampleRequest(seed=3), key)
+    loop.drain()
+    with pytest.raises(ValueError, match="warm start"):
+        bad.result()
+    assert good.result().converged
+    assert loop.stats["failed"] == 1 and loop.stats["completed"] == 1
+
+
+def test_poisoned_key_fails_its_tickets_and_serving_continues():
+    """A key whose engine factory raises (bad solver name) fails only its
+    own tickets; other keys keep serving through the same loop."""
+    good_key = EngineKey("oracle", 8, "taa")
+    bad_key = EngineKey("oracle", 8, "nope")
+    registry = EngineRegistry(make_factory())   # get_sampler("nope") raises
+    queue = RequestQueue()
+    loop = ServingLoop(registry, queue, Batcher(BatchingPolicy(max_batch=2)))
+    bad = queue.submit(SampleRequest(seed=1), bad_key)
+    good = queue.submit(SampleRequest(seed=2), good_key)
+    loop.drain()
+    with pytest.raises(KeyError, match="nope"):
+        bad.result()
+    assert good.result().converged
+    assert len(queue) == 0
+
+
+def test_pump_and_drain_refuse_while_background_thread_owns_the_loop():
+    registry = EngineRegistry(make_factory())
+    registry.warmup(EngineKey("oracle", 8, "taa"), slots=2)
+    loop = ServingLoop(registry, RequestQueue(),
+                       Batcher(BatchingPolicy(max_batch=2)))
+    with loop:
+        with pytest.raises(RuntimeError, match="background thread"):
+            loop.pump()
+        with pytest.raises(RuntimeError, match="background thread"):
+            loop.drain()
+    loop.drain()                               # fine again once stopped
+
+
+# --- machine-readable bench results -----------------------------------------
+
+def test_write_bench_json_merges_sections(tmp_path):
+    from benchmarks.common import write_bench_json
+    path = tmp_path / "BENCH_serving.json"
+    write_bench_json("throughput", {"reqps": 2.0}, path=path)
+    write_bench_json("async", {"speedup": 1.5}, path=path)
+    data = json.loads(path.read_text())
+    assert data == {"throughput": {"reqps": 2.0}, "async": {"speedup": 1.5}}
+    path.write_text("not json")
+    write_bench_json("async", {"speedup": 2.0}, path=path)
+    assert json.loads(path.read_text()) == {"async": {"speedup": 2.0}}
+
+
+# --- sharded variant: async == run_batch under an 8-device mesh --------------
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import ddim_coeffs
+from repro.diffusion.schedules import make_schedule
+from repro.launch.mesh import make_mesh
+from repro.sampling import (Placement, SampleRequest, SamplingEngine,
+                            get_sampler)
+from repro.serving import (Batcher, BatchingPolicy, EngineKey,
+                           EngineRegistry, RequestQueue, ServingLoop)
+
+D, N_LABELS = 16, 4
+abar = jnp.asarray(make_schedule("linear", 1000)[0], jnp.float32)
+key = jax.random.PRNGKey(0)
+xstars = jax.random.normal(key, (N_LABELS, D))
+W = jax.random.normal(jax.random.fold_in(key, 3), (D, D)) / np.sqrt(D)
+
+def eps_apply(params, x, taus, y):
+    ab = abar[jnp.clip(taus.astype(jnp.int32), 0, 999)][:, None]
+    xs = xstars[jnp.clip(y, 0, N_LABELS - 1)]
+    lin = (x - jnp.sqrt(ab) * xs) / jnp.sqrt(1.0 - ab + 1e-8)
+    return lin + 0.3 * jnp.tanh(x @ W)
+
+plc = Placement(mesh=make_mesh("debug", data_parallel=4, model_parallel=2))
+
+def factory(k):
+    return SamplingEngine(eps_apply, None, ddim_coeffs(k.T),
+                          get_sampler(k.solver), sample_shape=(D,),
+                          placement=plc)
+
+k1 = EngineKey("oracle", 10, "taa")
+k2 = EngineKey("oracle", 16, "taa")
+reqs = [SampleRequest(label=i % N_LABELS, seed=50 + i) for i in range(10)]
+keys = [k1 if i % 2 == 0 else k2 for i in range(10)]
+
+registry = EngineRegistry(factory)
+queue = RequestQueue()
+# max_batch=3 rounds up to the mesh's 4 data shards: fixed 4-slot dispatches
+loop = ServingLoop(registry, queue, Batcher(BatchingPolicy(max_batch=3)))
+tickets = [queue.submit(r, k) for r, k in zip(reqs, keys)]
+loop.drain()
+
+out = {"slots": sorted({d["slots"] for e in registry.engines().values()
+                        for d in e.last_dispatches}),
+       "devices": sorted({d["devices"] for e in registry.engines().values()
+                          for d in e.last_dispatches}),
+       "traces": sorted(e.stats["traces"]
+                        for e in registry.engines().values()),
+       "pack_reported": all("pack_s" in d
+                            for e in registry.engines().values()
+                            for d in e.last_dispatches)}
+
+equal = True
+for kk in (k1, k2):
+    mine = [(t, i) for i, (t, k) in enumerate(zip(tickets, keys)) if k == kk]
+    host = SamplingEngine(eps_apply, None, ddim_coeffs(kk.T),
+                          get_sampler(kk.solver), sample_shape=(D,))
+    ref = host.run_batch([reqs[i] for _, i in mine], batch_size=4)
+    for (t, _), r in zip(mine, ref):
+        got = t.result()
+        equal = equal and np.array_equal(np.asarray(got.trajectory),
+                                         np.asarray(r.trajectory)) \
+            and got.iters == r.iters and got.nfe == r.nfe
+out["equal"] = bool(equal)
+out["loop"] = loop.stats
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.mark.mesh
+def test_async_serving_sharded_matches_host_run_batch():
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+             "JAX_PLATFORMS": "cpu"},
+        cwd=Path(__file__).resolve().parent.parent, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][0]
+    out = json.loads(line[7:])
+    assert out["equal"], "async sharded serving diverged from host run_batch"
+    assert out["slots"] == [4]                 # 3 rounded up to 4 data shards
+    assert out["devices"] == [8]
+    assert out["traces"] == [1, 1]             # one compile per key
+    assert out["pack_reported"]
+    assert out["loop"] == {"dispatches": 4, "completed": 10, "failed": 0}

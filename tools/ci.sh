@@ -1,12 +1,15 @@
 #!/usr/bin/env bash
 # CI entry point: install dev requirements (best-effort — offline images
 # already bake in jax/pytest; hypothesis enables the property suite), then
-# run the suite twice: the tier-1 verify command from ROADMAP.md over the
-# default (non-mesh) tests, and a second, sharded pass selecting the
+# run three passes: the tier-1 verify command from ROADMAP.md over the
+# default (non-mesh) tests; a second, sharded pass selecting the
 # mesh-marked tests — the engine's data/model-sharded execution path —
-# under an 8-device forced host platform.  Extra args ("$@", e.g. a test
-# file) are forwarded to both passes; a pass whose marker selects nothing
-# in that target (pytest exit 5) is not a failure.
+# under an 8-device forced host platform; and a third async-serving soak
+# smoke that exercises the repro.serving batcher/loop end-to-end (queue ->
+# registry -> fixed-slot dispatches -> double-buffered collect) on the same
+# forced-host-device mesh.  Extra args ("$@", e.g. a test file) are
+# forwarded to both pytest passes; a pass whose marker selects nothing in
+# that target (pytest exit 5) is not a failure.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -20,3 +23,10 @@ echo "--- sharded pass (mesh-marked tests, 8 forced host devices) ---"
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m pytest -x -q -m mesh "$@" || [ $? -eq 5 ]
+
+echo "--- async serving soak (continuous batching, 8 forced host devices) ---"
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.launch.serve --serve-async --smoke \
+        --mesh debug --data-parallel 4 --model-parallel 2 \
+        --requests 12 --steps-T 8 --batch-size 4 --arrival-rate 100
