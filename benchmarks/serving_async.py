@@ -20,9 +20,19 @@ DiT, placement from ``REPRO_BENCH_MESH`` like ``serving_throughput``):
     this ratio is bounded near 1; on real accelerators the pack cost
     vanishes entirely.)
 
+  * ``earlyexit``   — iteration-level continuous batching vs run-to-slowest
+    over a MIXED-TAU population: half the requests carry a looser
+    per-request ``tau`` plus a Sec 4.1 ``quality_steps`` budget.  The
+    whole-batch baseline runs every lane of every dispatch to its slowest
+    member's convergence; the stepwise loop (``chunk_iters`` solver
+    iterations per round) retires each lane at ITS OWN budget and refills
+    the freed lane mid-solve, so the win shows up as device work reduction:
+    requests/s and device-NFE-per-request are recorded for both.
+
 Latency percentiles (p50/p95, arrival -> completion) are reported for both
 serving modes, and everything is written to ``BENCH_serving.json`` at the
-repo root (section ``"async"``) so the trajectory is tracked across PRs.
+repo root (sections ``"async"`` / ``"earlyexit"``) so the trajectory is
+tracked across PRs.
 
 Where the win comes from: small arrival groups burn whole rounded-up
 dispatches on a sharded placement (1 request still occupies
@@ -124,6 +134,78 @@ def run(T: int = 25, n_requests: int = 24, max_batch: int = 8):
         for t, r in zip(tickets2, ref))
     overlap_ratio = block_wall / overlap_wall
 
+    # -- early exit: mixed-tau traffic, iteration-level refill vs whole-batch
+    # a quarter of the population wants full quality (tight per-request
+    # tau), three quarters accept drafts (loose tau + a Sec 4.1
+    # quality-steps budget) — the whole-batch loop runs EVERY lane to its
+    # dispatch's slowest member, so draft lanes idle most of their
+    # iterations behind the tight minority; the stepwise loop retires each
+    # lane at its own budget and refills the freed slot mid-solve.
+    # chunk aligned with the draft budget: loose lanes retire after ONE
+    # chunk, and fewer host/device round-trips matter on a CPU box where
+    # every multi-device launch pays a rendezvous
+    chunk_iters = 3
+    tight = dict(tau=1e-4)
+    loose = dict(tau=1e-2, quality_steps=chunk_iters)
+    mixed = [SampleRequest(label=i % 10, seed=700 + i,
+                           **(tight if i % 4 == 0 else loose))
+             for i in range(n_requests)]
+    # derived from the population itself so the recorded JSON cannot drift
+    # from the assignment rule above
+    loose_frac = sum(r.quality_steps is not None for r in mixed) \
+        / n_requests
+
+    # baseline: the whole-batch loop (chunk 0) runs every dispatch to its
+    # slowest lane; device NFE comes from the per-dispatch reports
+    base_engine = registry.get(key)
+    base_mark = len(base_engine.last_dispatches)
+    queue3 = RequestQueue()
+    loop3 = ServingLoop(registry, queue3, batcher)
+    t0 = time.perf_counter()
+    tickets3 = [queue3.submit(r, key) for r in mixed]
+    loop3.drain()
+    base_wall = time.perf_counter() - t0
+    base_results = [t.result() for t in tickets3]
+    base_nfe = sum(d["device_nfe"]
+                   for d in base_engine.last_dispatches[base_mark:])
+    base_waste = np.mean([d["wasted_iter_frac"]
+                          for d in base_engine.last_dispatches[base_mark:]])
+    base_reqps = n_requests / base_wall
+
+    # stepwise: lanes retire at their own tau/quality_steps and refill
+    registry.warmup(key, slots=slots, chunk_iters=chunk_iters)  # compile
+    queue4 = RequestQueue()
+    loop4 = ServingLoop(registry, queue4, batcher, chunk_iters=chunk_iters)
+    t0 = time.perf_counter()
+    tickets4 = [queue4.submit(r, key) for r in mixed]
+    loop4.drain()
+    step_wall = time.perf_counter() - t0
+    step_results = [t.result() for t in tickets4]
+    report = loop4.bank_reports()[key]
+    step_nfe = report["device_nfe"]
+    step_reqps = n_requests / step_wall
+    # per-lane solves are scheduling-independent, so host placements match
+    # bitwise; under TP-sharded params the stepwise/monolithic programs are
+    # distinct XLA programs whose partial-sum fusion may differ by ulps —
+    # record the rel err like the quickstart's sharded-params check does
+    ee_bitwise = all(
+        np.array_equal(np.asarray(a.trajectory), np.asarray(b.trajectory))
+        for a, b in zip(step_results, base_results))
+    ee_rel_err = max(
+        float(np.linalg.norm(np.asarray(a.x0) - np.asarray(b.x0))
+              / (np.linalg.norm(np.asarray(b.x0)) + 1e-9))
+        for a, b in zip(step_results, base_results))
+    ee_iters_equal = all(a.iters == b.iters
+                         for a, b in zip(step_results, base_results))
+    ee_speedup = step_reqps / base_reqps
+    nfe_reduction = 1.0 - step_nfe / max(base_nfe, 1)
+    n_early = sum(1 for r in step_results if r.early_stopped)
+    # every non-draft request must actually reach full tolerance — a
+    # "tight" population that saturates s_max would inflate the baseline
+    n_tight_converged = sum(1 for r in step_results
+                            if r.request.quality_steps is None
+                            and r.converged)
+
     tag = "mesh" if placement.is_sharded else "host"
     speedup = async_reqps / sync_reqps
     rows = [
@@ -142,6 +224,14 @@ def run(T: int = 25, n_requests: int = 24, max_batch: int = 8):
          f"blocking_reqps={n_requests / block_wall:.2f};"
          f"async_reqps={n_requests / overlap_wall:.2f};"
          f"ratio={overlap_ratio:.2f}x;bitwise_equal={bitwise}"),
+        (f"serve_async/ddim{T}/earlyexit_k{chunk_iters}/{tag}",
+         step_wall / n_requests * 1e6,
+         f"reqps={step_reqps:.2f} vs whole-batch {base_reqps:.2f} "
+         f"({ee_speedup:.2f}x);"
+         f"device_nfe/req={step_nfe / n_requests:.0f} vs "
+         f"{base_nfe / n_requests:.0f} ({nfe_reduction:.0%} lower);"
+         f"early_exits={n_early};bitwise_equal={ee_bitwise};"
+         f"max_rel_err={ee_rel_err:.1e}"),
     ]
     common.write_bench_json("async", dict(
         T=T, n_requests=n_requests, slots=slots,
@@ -154,4 +244,24 @@ def run(T: int = 25, n_requests: int = 24, max_batch: int = 8):
         overlap_only_ratio=overlap_ratio,
         bitwise_equal_same_geometry=bool(bitwise),
         max_rel_err_vs_sync=rel_err))
+    common.write_bench_json("earlyexit", dict(
+        T=T, n_requests=n_requests, slots=slots, chunk_iters=chunk_iters,
+        placement=placement.describe(), devices=placement.num_devices,
+        tight_tau=tight["tau"], loose_tau=loose["tau"],
+        quality_steps=loose["quality_steps"], loose_frac=loose_frac,
+        iters_equal_vs_whole_batch=bool(ee_iters_equal),
+        whole_batch_reqps=base_reqps,
+        whole_batch_device_nfe_per_request=base_nfe / n_requests,
+        whole_batch_wasted_iter_frac=float(base_waste),
+        stepwise_reqps=step_reqps,
+        stepwise_device_nfe_per_request=step_nfe / n_requests,
+        stepwise_wasted_iter_frac=report["wasted_iter_frac"],
+        stepwise_refills=report["refills"],
+        speedup_vs_whole_batch=ee_speedup,
+        device_nfe_reduction=nfe_reduction,
+        early_exits=n_early,
+        tight_requests_converged=n_tight_converged,
+        tight_requests=sum(1 for r in mixed if r.quality_steps is None),
+        bitwise_equal_vs_whole_batch=bool(ee_bitwise),
+        max_rel_err_vs_whole_batch=ee_rel_err))
     return rows

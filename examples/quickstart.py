@@ -17,7 +17,14 @@ Train a tiny DiT on synthetic latents, then:
      clients submit to a `RequestQueue` under an `EngineKey` and get
      `Ticket` futures back while a double-buffered `ServingLoop` drains
      the queue as fixed-slot continuous batches, bitwise-equal to
-     `run_batch`.
+     `run_batch`;
+  6. early-exit serving (Sec 4.1): per-request `tau` / `quality_steps`
+     budgets ride on the `SampleRequest` (data to the same compiled
+     program), and `ServingLoop(chunk_iters=K)` upgrades to
+     iteration-level continuous batching — draft-quality requests retire
+     from the live solver state the moment THEIR budget is met, and the
+     freed lane is refilled mid-solve instead of idling until the
+     batch's slowest member converges.
 
     PYTHONPATH=src python examples/quickstart.py
     # multi-device placement demo on CPU:
@@ -139,6 +146,35 @@ def main():
           f"{[f'{t.latency_s:.2f}s' for t in tickets]}; "
           f"bitwise-equal to run_batch: {same}")
     assert same
+
+    # --- 6. early exit: per-request quality budgets, iteration-level lanes --
+    # Sec 4.1: iterates are usable well before full tolerance.  tau /
+    # quality_steps / max_iters ride ON the request (batched arrays, same
+    # compiled program), and chunk_iters=K turns the loop into
+    # iteration-level continuous batching: a draft request retires from the
+    # live solver state at ITS budget — here after 4 iterations — while
+    # full-quality neighbors keep solving, and its lane refills mid-solve.
+    key2 = EngineKey("dit-xl", 50, "taa")
+    mixed = [
+        SampleRequest(label=3, seed=100),                    # full quality
+        SampleRequest(label=4, seed=101, tau=1e-2),          # relaxed tau
+        SampleRequest(label=5, seed=102, quality_steps=4),   # draft in 4
+        SampleRequest(label=6, seed=103, quality_steps=4),
+    ]
+    queue = RequestQueue()
+    stepwise = ServingLoop(registry, queue,
+                           Batcher(BatchingPolicy(max_batch=4)),
+                           chunk_iters=2)
+    tickets = [queue.submit(r, key2) for r in mixed]
+    stepwise.drain()
+    served = [t.result() for t in tickets]
+    report = stepwise.bank_reports()[key2]
+    print(f"early exit: iters {[r.iters for r in served]}, early-stopped "
+          f"{[r.early_stopped for r in served]}; "
+          f"wasted lane-iters {report['wasted_iter_frac']:.0%} "
+          f"(whole-batch would hold every lane to the slowest)")
+    assert served[2].early_stopped and served[2].iters == 4
+    assert served[0].converged and not served[0].early_stopped
 
 
 if __name__ == "__main__":

@@ -28,6 +28,21 @@ latency, throughput, and per-key slot utilization:
     PYTHONPATH=src python -m repro.launch.serve --serve-async --smoke \
         --requests 12 --steps-T 8 --batch-size 4 --arrival-rate 100 \
         --mesh debug --data-parallel 4 --model-parallel 2
+
+``--chunk-iters K`` upgrades the async path to ITERATION-LEVEL continuous
+batching (the Sec 4.1 early-stopping serving mode): each key keeps one live
+``LaneBank`` of resumable solver state, advanced K solver iterations per
+round; a lane retires the moment ITS request converges — or early-exits at
+its own per-request ``tau`` / ``quality_steps`` / ``max_iters`` budget —
+and the freed lane is refilled from the queue mid-solve, no recompile.
+``--loose-tau-frac``/``--loose-tau``/``--quality-steps`` shape a mixed-tau
+request population where the per-batch baseline would run every lane to
+the slowest member:
+
+    PYTHONPATH=src python -m repro.launch.serve --serve-async --smoke \
+        --requests 12 --steps-T 8 --batch-size 4 --arrival-rate 100 \
+        --chunk-iters 2 --loose-tau-frac 0.5 --quality-steps 6 \
+        --mesh debug --data-parallel 4 --model-parallel 2
 """
 from __future__ import annotations
 
@@ -170,6 +185,23 @@ def simulate_arrivals(rng, n: int, rate_hz: float):
     return rng.exponential(1.0 / rate_hz, size=n)
 
 
+def simulated_request(rng, cfg, args, *,
+                      allow_overrides: bool = True) -> SampleRequest:
+    """One simulated request; with ``--loose-tau-frac`` a fraction of the
+    traffic carries per-request early-exit budgets (looser tau and/or a
+    Sec 4.1 quality-steps cap) — the mixed-tau population that makes
+    iteration-level refill measurable as work reduction.  ``allow_overrides``
+    is False for seq-routed requests (no solver iterations to budget)."""
+    kw = {}
+    if args.loose_tau_frac and rng.random() < args.loose_tau_frac \
+            and allow_overrides:
+        kw["tau"] = args.loose_tau
+        if args.quality_steps:
+            kw["quality_steps"] = args.quality_steps
+    return SampleRequest(label=int(rng.integers(0, cfg.num_classes)),
+                         seed=int(rng.integers(1 << 30)), **kw)
+
+
 def serve_async(args, cfg, params, placement: Placement):
     """Drive the ``repro.serving`` stack with a simulated request stream."""
     keys = mixed_engine_keys(args)
@@ -178,10 +210,12 @@ def serve_async(args, cfg, params, placement: Placement):
     policy = BatchingPolicy(max_batch=args.batch_size or 8,
                             max_wait_s=args.max_wait_ms / 1e3)
     loop = ServingLoop(registry, RequestQueue(), Batcher(policy),
-                       depth=args.async_depth)
+                       depth=args.async_depth,
+                       chunk_iters=args.chunk_iters)
     for key in keys:  # compile ahead of traffic so p95 is not a jit compile
         engine = registry.get(key)
-        registry.warmup(key, slots=loop.batcher.slots_for(engine))
+        registry.warmup(key, slots=loop.batcher.slots_for(engine),
+                        chunk_iters=args.chunk_iters)
         print(f"warmed {key.describe()}: {engine.placement.describe()}")
 
     rng = np.random.default_rng(args.seed)
@@ -192,11 +226,11 @@ def serve_async(args, cfg, params, placement: Placement):
         for gap in gaps:
             if gap:
                 time.sleep(float(gap))
-            request = SampleRequest(
-                label=int(rng.integers(0, cfg.num_classes)),
-                seed=int(rng.integers(1 << 30)))
+            key = keys[int(rng.integers(len(keys)))]
             tickets.append(loop.queue.submit(
-                request, keys[int(rng.integers(len(keys)))]))
+                simulated_request(rng, cfg, args,
+                                  allow_overrides=key.solver != "seq"),
+                key))
         results = [t.result(timeout=600) for t in tickets]
     finally:
         loop.stop()
@@ -208,21 +242,33 @@ def serve_async(args, cfg, params, placement: Placement):
     for ticket, res in zip(tickets, results):
         stats.append({"key": ticket.key.describe(), "label": res.request.label,
                       "iters": res.iters, "nfe": res.nfe,
+                      "early_stopped": res.early_stopped,
                       "latency_s": ticket.latency_s})
+        early = " early-exit" if res.early_stopped else ""
         print(f"{ticket.key.describe():>24s} label={res.request.label:4d} "
-              f"iters={res.iters:3d} latency={ticket.latency_s:.2f}s")
-    for key, engine in sorted(registry.engines().items()):
-        observed = loop.batcher.observed(key) or {}
-        print(f"{key.describe()}: {engine.stats['batches']} dispatch(es), "
-              f"{engine.stats['traces']} compilation(s), "
-              f"slot util {observed.get('slot_utilization', 0):.0%}, "
-              f"mean wall {observed.get('wall_s', 0):.2f}s "
-              f"(pack {observed.get('pack_s', 0) * 1e3:.0f}ms overlapped)")
+              f"iters={res.iters:3d} latency={ticket.latency_s:.2f}s{early}")
+    if args.chunk_iters:
+        for key, report in sorted(loop.bank_reports().items()):
+            print(f"{key.describe()}: {report['completed']} served over "
+                  f"{report['refills']} refill(s), device iters "
+                  f"{report['device_iters']} x {report['slots']} lanes, "
+                  f"wasted lane-iters {report['wasted_iter_frac']:.0%}, "
+                  f"device NFE {report['device_nfe']}")
+    else:
+        for key, engine in sorted(registry.engines().items()):
+            observed = loop.batcher.observed(key) or {}
+            print(f"{key.describe()}: {engine.stats['batches']} dispatch(es), "
+                  f"{engine.stats['traces']} compilation(s), "
+                  f"slot util {observed.get('slot_utilization', 0):.0%}, "
+                  f"mean wall {observed.get('wall_s', 0):.2f}s "
+                  f"(pack {observed.get('pack_s', 0) * 1e3:.0f}ms overlapped)")
+    n_early = sum(1 for r in results if r.early_stopped)
     print(f"async served {len(tickets)} requests over {len(keys)} key(s) in "
           f"{span:.2f}s => {len(tickets) / max(span, 1e-9):.2f} req/s; "
           f"latency p50 {np.percentile(latencies, 50):.2f}s "
           f"p95 {np.percentile(latencies, 95):.2f}s; "
-          f"loop stats {loop.stats}")
+          f"mean NFE/request {np.mean([r.nfe for r in results]):.0f}; "
+          f"{n_early} early-exit(s); loop stats {loop.stats}")
     return jnp.stack([res.x0 for res in results]), stats
 
 
@@ -278,6 +324,23 @@ def main(argv=None):
     p.add_argument("--mixed-keys", type=int, default=2,
                    help="number of distinct (T, solver) EngineKeys the "
                         "--serve-async simulator routes over")
+    p.add_argument("--chunk-iters", type=int, default=0,
+                   help="solver iterations per serving chunk: > 0 switches "
+                        "--serve-async to iteration-level continuous "
+                        "batching (lanes retire the moment their own "
+                        "request converges or early-exits, freed lanes "
+                        "refill mid-solve); 0 = whole-batch dispatches")
+    p.add_argument("--loose-tau-frac", type=float, default=0.0,
+                   help="fraction of simulated requests carrying a looser "
+                        "per-request tau (mixed-tau traffic; the "
+                        "early-exit serving mode's target population)")
+    p.add_argument("--loose-tau", type=float, default=1e-2,
+                   help="the looser per-request stopping tolerance for "
+                        "--loose-tau-frac traffic")
+    p.add_argument("--quality-steps", type=int, default=0,
+                   help="per-request quality-steps budget (Sec 4.1 early "
+                        "exit) attached to --loose-tau-frac traffic "
+                        "(0 = tolerance-only)")
     p.add_argument("--ckpt", default=None, help="trained DiT checkpoint dir")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)

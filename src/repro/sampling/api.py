@@ -37,8 +37,10 @@ def run(spec: SamplerSpec, eps_fn: Callable, coeffs: SolverCoeffs, xi, *,
     diagnostics: record per-iteration residuals / x0 iterates (scan variant)
     """
     T = coeffs.T
+    overrides = request is not None and request.has_solver_overrides
     spec.check_request_flags(diagnostics=diagnostics,
-                             warm_start=init is not None)
+                             warm_start=init is not None,
+                             solver_overrides=overrides)
     if spec.is_sequential:
         traj = sequential_sample(eps_fn, coeffs, xi, return_traj=True)
         return SampleResult(x0=traj[0], trajectory=traj, iters=T, nfe=T,
@@ -49,13 +51,24 @@ def run(spec: SamplerSpec, eps_fn: Callable, coeffs: SolverCoeffs, xi, *,
     if init is not None:
         x_init = init.trajectory
         t_init = init.t_init  # None => full restart (T); 0 => fully solved
+    # per-request tau/max_iters/quality_steps budgets (Sec 4.1) resolve
+    # through the SAME spec helpers the engine packs with, so both entry
+    # points of the unified API agree on every request
+    tau_sq = iter_cap = None
+    if overrides:
+        tau_sq = spec.request_tau_sq(request)
+        iter_cap = spec.request_iter_cap(request, T)
     fn = _parataa.sample_recording if diagnostics else _parataa.sample
     traj, info = fn(eps_fn, coeffs, solver, xi, x_init=x_init, dtype=dtype,
-                    t_init=t_init)
+                    t_init=t_init, tau_sq=tau_sq, iter_cap=iter_cap)
     diag = None
     if diagnostics:
         diag = {k: info[k] for k in DIAG_KEYS}
-    return SampleResult(x0=traj[0], trajectory=traj, iters=info["iters"],
-                        nfe=info["nfe"], converged=info["converged"],
+    iters, converged = int(info["iters"]), bool(info["converged"])
+    return SampleResult(x0=traj[0], trajectory=traj, iters=iters,
+                        nfe=info["nfe"], converged=converged,
+                        early_stopped=request is not None
+                        and spec.request_early_stopped(request, T, iters,
+                                                       converged),
                         residuals=info["residuals"] if not diagnostics else None,
                         diagnostics=diag, request=request)

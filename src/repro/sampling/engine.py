@@ -65,6 +65,44 @@ class PendingBatch:
     t_dispatch: float               # clock reading when the program launched
 
 
+@dataclasses.dataclass
+class LaneBank:
+    """A live, resumable batch of solver lanes (the stepwise dispatch unit).
+
+    ``state`` is the batched :class:`repro.core.parataa.SolverState` on
+    device; each of the ``slots`` lanes holds one in-flight request (or
+    ``None`` = vacant, kept permanently ``finished`` via ``iter_cap=0`` so
+    the guarded chunk passes it through).  The bank outlives any single
+    request: lanes retire the moment their own lane finishes and are
+    refilled in place — iteration-level continuous batching.
+
+    Work accounting (the refactor's visible win on a CPU-shared box):
+    ``device_iters`` counts solver iterations the device executed while the
+    bank was stepped (every step costs the full batch width, finished or
+    not — SPMD), ``useful_iters``/``harvested_nfe`` accumulate per-lane
+    progress at harvest, so ``wasted_iter_frac`` measures lane-iterations
+    burned after the owning lane already finished (or on vacant lanes).
+    """
+    state: Any
+    labels: Any                            # (slots,) device int32
+    requests: List[Optional[SampleRequest]]
+    slots: int
+    chunk_iters: int
+    device_iters: int = 0
+    useful_iters: int = 0
+    harvested_nfe: int = 0
+    completed: int = 0
+    refills: int = 0
+    pack_s: float = 0.0
+
+    def free_lanes(self) -> List[int]:
+        return [i for i, r in enumerate(self.requests) if r is None]
+
+    @property
+    def occupied(self) -> int:
+        return sum(r is not None for r in self.requests)
+
+
 class SamplingEngine:
     """Batched sampling executor for one (denoiser, T, solver) configuration.
 
@@ -101,10 +139,19 @@ class SamplingEngine:
             params = self.placement.shard_params(params, param_defs)
         self.params = params
         self._jitted = {}   # diagnostics flag -> jitted batched program
-        self.stats = {"traces": 0, "batches": 0, "requests": 0,
-                      "wall_s": 0.0, "pack_s": 0.0}
+        self._stepwise_jits = {}  # "init"/"merge"/("step", K) -> program
+        self.stats = {"traces": 0, "stepwise_traces": 0, "batches": 0,
+                      "requests": 0, "wall_s": 0.0, "pack_s": 0.0}
         self.last_batch_walls = []  # per-dispatch walls of the last run_batch
         self.last_dispatches: List[Dict] = []  # per-dispatch reports
+
+    @property
+    def window(self) -> int:
+        """eps evaluations per solver iteration per lane (1 for seq)."""
+        T = self.coeffs.T
+        if self.spec.is_sequential:
+            return 1
+        return min(self.spec.window or T, T)
 
     # -- program construction ------------------------------------------------
 
@@ -113,7 +160,7 @@ class SamplingEngine:
         T = coeffs.T
         eps_apply = self.eps_apply
 
-        def one(params, xi, label, x0, t_init):
+        def one(params, xi, label, x0, t_init, tau_sq, iter_cap):
             def eps_fn(xw, taus):
                 y = jnp.full((xw.shape[0],), label, jnp.int32)
                 return eps_apply(params, xw, taus, y)
@@ -125,7 +172,8 @@ class SamplingEngine:
             solver = spec.solver_config(T)
             fn = _parataa.sample_recording if diagnostics else _parataa.sample
             traj, info = fn(eps_fn, coeffs, solver, xi, x_init=x0,
-                            dtype=self.dtype, t_init=t_init)
+                            dtype=self.dtype, t_init=t_init,
+                            tau_sq=tau_sq, iter_cap=iter_cap)
             keep = ("iters", "nfe", "converged", "residuals") + \
                 (DIAG_KEYS if diagnostics else ())
             return traj, {k: info[k] for k in keep if k in info}
@@ -136,16 +184,19 @@ class SamplingEngine:
             # sharding constraint inside the solver gets `data` prepended
             vmap_kw["spmd_axis_name"] = plc.spmd_axes()
 
-        def batched(params, xis, labels, x0s, t_inits):
+        def batched(params, xis, labels, x0s, t_inits, tau_sqs, iter_caps):
             # executes at trace time only: one increment per compilation
             self.stats["traces"] += 1
             xis = plc.constrain_batch(xis)
             labels = plc.constrain_batch(labels)
             x0s = plc.constrain_batch(x0s)
             t_inits = plc.constrain_batch(t_inits)
+            tau_sqs = plc.constrain_batch(tau_sqs)
+            iter_caps = plc.constrain_batch(iter_caps)
             return jax.vmap(
-                lambda xi, lab, x0, ti: one(params, xi, lab, x0, ti),
-                **vmap_kw)(xis, labels, x0s, t_inits)
+                lambda xi, lab, x0, ti, tq, ic:
+                    one(params, xi, lab, x0, ti, tq, ic),
+                **vmap_kw)(xis, labels, x0s, t_inits, tau_sqs, iter_caps)
 
         donate = (1, 3) if plc.donate else ()  # xis, x0s: fresh per dispatch
         return jax.jit(batched, donate_argnums=donate)
@@ -174,10 +225,11 @@ class SamplingEngine:
         xis = sds((B, T + 1) + self.sample_shape, jnp.float32)
         labels = sds((B,), jnp.int32)
         t_inits = sds((B,), jnp.int32)
+        tau_sqs = sds((B,), jnp.float32)
         with plc.activations():
             return self._program(diagnostics).lower(
                 params if params is not None else self.params,
-                xis, labels, xis, t_inits)
+                xis, labels, xis, t_inits, tau_sqs, t_inits)
 
     # -- request packing -----------------------------------------------------
 
@@ -185,13 +237,22 @@ class SamplingEngine:
         return draw_noises(jax.random.PRNGKey(request.seed), self.coeffs,
                            self.sample_shape)
 
+    def _iter_cap(self, request: SampleRequest) -> int:
+        return self.spec.request_iter_cap(request, self.coeffs.T)
+
+    def _tau_sq(self, request: SampleRequest) -> np.float32:
+        return self.spec.request_tau_sq(request)
+
     def _pack(self, requests: Sequence[SampleRequest]):
         T = self.coeffs.T
         xis, labels, x0s, t_inits = [], [], [], []
+        tau_sqs, iter_caps = [], []
         for req in requests:
             xi = self.draw_request_noise(req)
             xis.append(xi)
             labels.append(req.label)
+            tau_sqs.append(self._tau_sq(req))
+            iter_caps.append(self._iter_cap(req))
             if req.init is None:
                 x0s.append(xi)          # cold start: noise-initialized
                 t_inits.append(T)
@@ -202,11 +263,14 @@ class SamplingEngine:
                 t_inits.append(T if req.init.t_init is None
                                else req.init.t_init)
         return (jnp.stack(xis), jnp.asarray(labels, jnp.int32),
-                jnp.stack(x0s), jnp.asarray(t_inits, jnp.int32))
+                jnp.stack(x0s), jnp.asarray(t_inits, jnp.int32),
+                jnp.asarray(tau_sqs, jnp.float32),
+                jnp.asarray(iter_caps, jnp.int32))
 
     def pack(self, requests: Sequence[SampleRequest]):
-        """Pack requests into the program's (xis, labels, x0s, t_inits)
-        arrays, placed onto the request-axis sharding when meshed."""
+        """Pack requests into the program's (xis, labels, x0s, t_inits,
+        tau_sqs, iter_caps) arrays, placed onto the request-axis sharding
+        when meshed."""
         return self.placement.place_batch(*self._pack(requests))
 
     # -- execution -----------------------------------------------------------
@@ -233,7 +297,8 @@ class SamplingEngine:
             raise ValueError("dispatch needs at least one request")
         self.spec.check_request_flags(
             diagnostics=diagnostics,
-            warm_start=any(r.init is not None for r in requests))
+            warm_start=any(r.init is not None for r in requests),
+            solver_overrides=any(r.has_solver_overrides for r in requests))
         B = self.placement.round_batch(slots or len(requests))
         if len(requests) > B:
             raise ValueError(
@@ -268,13 +333,6 @@ class SamplingEngine:
         self.stats["pack_s"] += pending.pack_s
         self.last_batch_walls.append(wall)
         del self.last_batch_walls[:-self.MAX_DISPATCH_REPORTS]
-        self.last_dispatches.append(dict(
-            wall_s=wall, pack_s=pending.pack_s,
-            requests=n_real, slots=pending.slots,
-            slot_utilization=plc.slot_utilization(n_real, pending.slots),
-            devices=plc.num_devices, data_shards=plc.data_shards,
-            model_shards=plc.model_shards))
-        del self.last_dispatches[:-self.MAX_DISPATCH_REPORTS]
 
         # fetch each output ONCE as a host array and slice per request in
         # numpy: per-request jnp slicing would enqueue fresh device ops that
@@ -282,19 +340,59 @@ class SamplingEngine:
         # always has one), serializing unpack against the next dispatch
         trajs = np.asarray(pending.trajs)
         info = {k: np.asarray(v) for k, v in pending.info.items()}
+
+        # the vmapped program runs every slot until the SLOWEST lane's
+        # iteration count: wasted_iter_frac is the fraction of lane-
+        # iterations the device executed past the owning lane's own
+        # convergence (plus padding lanes) — the work the stepwise chunked
+        # path reclaims by retiring/refilling lanes mid-solve
+        all_iters = np.asarray(info["iters"], np.int64)
+        device_iters = int(all_iters.max()) if all_iters.size else 0
+        self.last_dispatches.append(dict(
+            wall_s=wall, pack_s=pending.pack_s,
+            requests=n_real, slots=pending.slots,
+            slot_utilization=plc.slot_utilization(n_real, pending.slots),
+            devices=plc.num_devices, data_shards=plc.data_shards,
+            model_shards=plc.model_shards,
+            iters=[int(i) for i in all_iters[:n_real]],
+            nfe=[int(n) for n in info["nfe"][:n_real]],
+            **self._work_report(int(all_iters[:n_real].sum()),
+                                device_iters, pending.slots)))
+        del self.last_dispatches[:-self.MAX_DISPATCH_REPORTS]
+
+        T = self.coeffs.T
         results: List[SampleResult] = []
-        for i in range(n_real):
+        for i, req in enumerate(pending.requests):
             diag = None
             if pending.diagnostics:
                 diag = {k: info[k][i] for k in DIAG_KEYS}
             res = info.get("residuals")
+            iters = int(info["iters"][i])
+            converged = bool(info["converged"][i])
             results.append(SampleResult(
                 x0=trajs[i, 0], trajectory=trajs[i],
-                iters=int(info["iters"][i]), nfe=int(info["nfe"][i]),
-                converged=bool(info["converged"][i]),
+                iters=iters, nfe=int(info["nfe"][i]),
+                converged=converged,
+                early_stopped=self.spec.request_early_stopped(
+                    req, T, iters, converged),
                 residuals=None if res is None else res[i],
-                diagnostics=diag, request=pending.requests[i], wall_s=wall))
+                diagnostics=diag, request=req, wall_s=wall))
         return results
+
+    def _work_report(self, useful_iters: int, device_iters: int,
+                     slots: int) -> Dict:
+        """Shared device-work accounting: the device executes
+        ``device_iters`` solver iterations across ``slots`` SPMD lanes no
+        matter how many lanes still need them, so ``wasted_iter_frac`` is
+        the lane-iteration fraction burned past the owning lane's own
+        finish (or on vacant/padding lanes) and ``device_nfe`` the true
+        denoiser evaluations issued."""
+        capacity = device_iters * slots
+        return dict(
+            device_iters=device_iters,
+            device_nfe=capacity * self.window,
+            wasted_iter_frac=1.0 - useful_iters / capacity
+            if capacity else 0.0)
 
     def run_batch(self, requests: Sequence[SampleRequest], *,
                   batch_size: Optional[int] = None,
@@ -324,13 +422,249 @@ class SamplingEngine:
             results.extend(self.collect(pending))
         return results
 
+    # -- stepwise (iteration-level) execution --------------------------------
+    #
+    # The chunked serving path: one LaneBank per engine holds a live batched
+    # SolverState; `stepwise_step` advances every lane by `chunk_iters`
+    # guarded solver iterations, `stepwise_harvest` retires lanes the moment
+    # THEIR OWN solve finishes (convergence, max_iters, or a Sec 4.1
+    # quality-steps early exit), and `stepwise_refill` packs fresh requests
+    # into the vacated lanes of the SAME live state — so the compiled step
+    # program never retraces.  Four programs total per engine: open (vacant
+    # bank), init (ONE lane — refill packs/draws exactly one request's
+    # noise, not a bank-width batch), merge (broadcast the one fresh lane
+    # into the masked slot), and step; ``stats["stepwise_traces"]`` must
+    # stay at 4 across refills.
+
+    def _stepwise_cfg(self):
+        return self.spec.stepwise_config(self.coeffs.T)
+
+    def _constrain_state(self, tree):
+        plc = self.placement
+        return jax.tree.map(plc.constrain_batch, tree)
+
+    def _stepwise_program(self, kind, arg: int = 0):
+        # "step" keys on its chunk size, "open" on its slot count — each
+        # distinct geometry is its own (once-compiled) program
+        key = (kind, arg) if kind in ("step", "open") else kind
+        chunk_iters = arg
+        fn = self._stepwise_jits.get(key)
+        if fn is not None:
+            return fn
+        coeffs, plc = self.coeffs, self.placement
+        cfg = self._stepwise_cfg()
+        eps_apply = self.eps_apply
+
+        def lane_init(xi, x0, t_init, tau_sq, iter_cap):
+            return _parataa.init_state(
+                coeffs, cfg, xi, x_init=x0, dtype=self.dtype,
+                t_init=t_init, tau_sq=tau_sq, iter_cap=iter_cap)
+
+        if kind == "open":
+            B = chunk_iters  # slot count rides the cache-key int
+
+            def program(xi):
+                self.stats["stepwise_traces"] += 1  # trace time only
+                lane = lane_init(xi, xi, coeffs.T, jnp.float32(0.0),
+                                 jnp.int32(0))  # vacant: finished at birth
+                return self._constrain_state(jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, (B,) + x.shape), lane))
+
+        elif kind == "init":
+            vmap_kw = {"spmd_axis_name": plc.spmd_axes()} \
+                if plc.is_sharded else {}
+
+            def program(xis, x0s, t_inits, tau_sqs, iter_caps):
+                self.stats["stepwise_traces"] += 1
+                args = [plc.constrain_batch(a)
+                        for a in (xis, x0s, t_inits, tau_sqs, iter_caps)]
+                return jax.vmap(lane_init, **vmap_kw)(*args)
+
+        elif kind == "merge":
+            def program(state, fresh, labels, fresh_labels, mask):
+                self.stats["stepwise_traces"] += 1
+
+                def pick(old, new):
+                    m = mask.reshape((-1,) + (1,) * (old.ndim - 1))
+                    return plc.constrain_batch(jnp.where(m, new, old))
+
+                labels = plc.constrain_batch(
+                    jnp.where(mask, fresh_labels, labels))
+                return jax.tree.map(pick, state, fresh), labels
+
+        elif kind == "step":
+            shape = self.sample_shape
+
+            def lane_step(params, state, label):
+                def eps_fn(xw, taus):
+                    y = jnp.full((xw.shape[0],), label, jnp.int32)
+                    return eps_apply(params, xw, taus, y)
+
+                return _parataa.step_chunk(eps_fn, coeffs, cfg, state,
+                                           chunk_iters, sample_shape=shape)
+
+            vmap_kw = {"spmd_axis_name": plc.spmd_axes()} \
+                if plc.is_sharded else {}
+
+            def program(params, state, labels):
+                self.stats["stepwise_traces"] += 1
+                state = self._constrain_state(state)
+                labels = plc.constrain_batch(labels)
+                return jax.vmap(lambda s, lab: lane_step(params, s, lab),
+                                **vmap_kw)(state, labels)
+
+        else:
+            raise ValueError(f"unknown stepwise program {kind!r}")
+
+        fn = self._stepwise_jits[key] = jax.jit(program)
+        return fn
+
+    def validate_request(self, request: SampleRequest) -> None:
+        """Raise exactly what a dispatch carrying ``request`` would raise —
+        lets a serving loop fail ONE incompatible request's ticket instead
+        of a whole admission group."""
+        self.spec.check_request_flags(
+            warm_start=request.init is not None,
+            solver_overrides=request.has_solver_overrides)
+
+    def stepwise_open(self, slots: int, *, chunk_iters: int) -> LaneBank:
+        """Open an all-vacant LaneBank at the engine's fixed slot geometry
+        (every lane inits ``finished``, so chunks no-op it until refill).
+        Compiles the open program; init/merge compile on the first refill
+        and the step program on the first ``stepwise_step``."""
+        if chunk_iters < 1:
+            raise ValueError(f"chunk_iters must be >= 1, got {chunk_iters}")
+        B = self.placement.round_batch(slots)
+        t0 = time.time()
+        xi = self.draw_request_noise(SampleRequest())
+        with self.placement.activations():
+            state = self._stepwise_program("open", B)(xi)
+        (labels,) = self.placement.place_batch(jnp.zeros((B,), jnp.int32))
+        bank = LaneBank(state=state, labels=labels, requests=[None] * B,
+                        slots=B, chunk_iters=chunk_iters)
+        bank.pack_s += time.time() - t0
+        return bank
+
+    def stepwise_refill(self, bank: LaneBank, lanes: Sequence[int],
+                        requests: Sequence[SampleRequest]) -> None:
+        """Pack ``requests`` into the given vacant ``lanes`` of the live
+        bank state — no retrace, and ONE init + ONE merge program launch
+        per refill round no matter how many lanes it fills (launch
+        rendezvous dominates on a multi-device host).  Only the admitted
+        requests pay PRNG/pack cost: their packed rows are permuted into
+        lane positions and the remaining rows repeat an already-packed row
+        under a zeroed iteration budget (vacant = finished at birth)."""
+        requests = list(requests)
+        if len(requests) != len(lanes):
+            raise ValueError(f"{len(requests)} requests for "
+                             f"{len(lanes)} lanes")
+        if not requests:
+            return
+        taken = [bank.requests[lane] for lane in lanes]
+        if any(r is not None for r in taken):
+            raise ValueError(f"lanes {list(lanes)} are not all vacant")
+        self.spec.check_request_flags(
+            warm_start=any(r.init is not None for r in requests),
+            solver_overrides=any(r.has_solver_overrides for r in requests))
+        t0 = time.time()
+        packed = self._pack(requests)           # (k, ...) — k PRNG draws
+        pos = {lane: i for i, lane in enumerate(lanes)}
+        idx = np.asarray([pos.get(j, 0) for j in range(bank.slots)])
+        xis, labels, x0s, t_inits, tau_sqs, iter_caps = (
+            jnp.take(a, idx, axis=0) for a in packed)
+        # lanes outside the refill keep their OLD state (merge mask), so the
+        # repeated filler rows never land anywhere
+        untouched = np.asarray([j not in pos for j in range(bank.slots)])
+        xis, x0s, t_inits, tau_sqs, iter_caps, labels, mask = \
+            self.placement.place_batch(xis, x0s, t_inits, tau_sqs,
+                                       iter_caps, labels,
+                                       jnp.asarray(~untouched))
+        with self.placement.activations():
+            fresh = self._stepwise_program("init")(
+                xis, x0s, t_inits, tau_sqs, iter_caps)
+            bank.state, bank.labels = self._stepwise_program("merge")(
+                bank.state, fresh, bank.labels, labels, mask)
+        for lane, req in zip(lanes, requests):
+            bank.requests[lane] = req
+        bank.refills += 1
+        bank.pack_s += time.time() - t0
+
+    def stepwise_step(self, bank: LaneBank) -> None:
+        """Advance every lane by ``bank.chunk_iters`` guarded solver
+        iterations (non-blocking: JAX async dispatch)."""
+        with self.placement.activations():
+            bank.state = self._stepwise_program(
+                "step", bank.chunk_iters)(self.params, bank.state,
+                                          bank.labels)
+        bank.device_iters += bank.chunk_iters
+
+    def stepwise_poll(self, bank: LaneBank) -> Dict[str, np.ndarray]:
+        """Fetch the small per-lane scheduling fields (blocks on the chunk
+        in flight; trajectories stay on device until harvest)."""
+        state = bank.state
+        finished, it, nfe, done = jax.device_get(
+            (state.finished, state.it, state.nfe, state.done))
+        return dict(finished=np.asarray(finished), iters=np.asarray(it),
+                    nfe=np.asarray(nfe), done=np.asarray(done))
+
+    def stepwise_harvest(self, bank: LaneBank):
+        """Retire every occupied lane whose OWN solve has finished: returns
+        ``[(lane, SampleResult), ...]`` and vacates those lanes (their state
+        stays ``finished``, so subsequent chunks no-op them until refill)."""
+        polled = self.stepwise_poll(bank)
+        ready = [i for i, req in enumerate(bank.requests)
+                 if req is not None and polled["finished"][i]]
+        if not ready:
+            return []
+        T = self.coeffs.T
+        trajs = np.asarray(bank.state.x).reshape(
+            (bank.slots, T + 1) + self.sample_shape)
+        residuals = np.asarray(bank.state.r_last)
+        out = []
+        for lane in ready:
+            req = bank.requests[lane]
+            iters = int(polled["iters"][lane])
+            nfe = int(polled["nfe"][lane])
+            converged = bool(polled["done"][lane])
+            out.append((lane, SampleResult(
+                x0=trajs[lane, 0], trajectory=trajs[lane],
+                iters=iters, nfe=nfe, converged=converged,
+                early_stopped=self.spec.request_early_stopped(
+                    req, T, iters, converged),
+                residuals=None if self.spec.is_sequential
+                else residuals[lane],
+                request=req)))
+            bank.requests[lane] = None
+            bank.useful_iters += iters
+            bank.harvested_nfe += nfe
+            bank.completed += 1
+        return out
+
+    def stepwise_report(self, bank: LaneBank) -> Dict:
+        """Work-accounting snapshot of a bank, shaped like a
+        ``last_dispatches`` entry (feeds ``Batcher.note`` / benchmarks)."""
+        polled = self.stepwise_poll(bank)
+        live_iters = int(sum(polled["iters"][i]
+                             for i, r in enumerate(bank.requests)
+                             if r is not None))
+        useful = bank.useful_iters + live_iters
+        return dict(
+            slots=bank.slots, chunk_iters=bank.chunk_iters,
+            completed=bank.completed, refills=bank.refills,
+            occupied=bank.occupied, pack_s=bank.pack_s,
+            useful_iters=useful,
+            devices=self.placement.num_devices,
+            **self._work_report(useful, bank.device_iters, bank.slots))
+
     def reset_stats(self) -> None:
         """Rewind the serving counters and dispatch reports — e.g. after a
-        warmup or compile-only pass — keeping ``traces``: compilations are
-        a property of the program cache, not of traffic.  Owns the key
-        list, so callers never enumerate stats fields by hand."""
-        traces = self.stats["traces"]
-        self.stats = {"traces": traces, "batches": 0, "requests": 0,
+        warmup or compile-only pass — keeping ``traces`` (and its stepwise
+        twin): compilations are a property of the program cache, not of
+        traffic.  Owns the key list, so callers never enumerate stats
+        fields by hand."""
+        self.stats = {"traces": self.stats["traces"],
+                      "stepwise_traces": self.stats["stepwise_traces"],
+                      "batches": 0, "requests": 0,
                       "wall_s": 0.0, "pack_s": 0.0}
         self.last_batch_walls = []
         self.last_dispatches = []

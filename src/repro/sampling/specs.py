@@ -11,6 +11,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict
 
+import numpy as np
+
 from repro.core.parataa import ParaTAAConfig
 
 #: order_k sentinel: resolve to the full system order T at solve time.
@@ -46,7 +48,8 @@ class SamplerSpec:
         return self.solver == "seq"
 
     def check_request_flags(self, *, diagnostics: bool = False,
-                            warm_start: bool = False) -> None:
+                            warm_start: bool = False,
+                            solver_overrides: bool = False) -> None:
         """Reject request options that are solver-iteration concepts the
         sequential sampler does not have."""
         if self.is_sequential and diagnostics:
@@ -55,9 +58,43 @@ class SamplerSpec:
         if self.is_sequential and warm_start:
             raise ValueError("warm starts initialize solver iterates; the "
                              "sequential sampler has none")
+        if self.is_sequential and solver_overrides:
+            raise ValueError("per-request tau/max_iters/quality_steps are "
+                             "solver-iteration budgets; the sequential "
+                             "sampler has none")
 
     def s_max_for(self, T: int) -> int:
         return self.s_max if self.s_max else 2 * T
+
+    # -- per-request solver budgets (ONE implementation for every entry
+    # point: engine pack/collect, stepwise harvest, and api.run must agree)
+
+    def iter_budget(self, T: int) -> int:
+        """Run-to-convergence iteration budget (T for seq)."""
+        return T if self.is_sequential else self.s_max_for(T)
+
+    def request_iter_cap(self, request, T: int) -> int:
+        """``request``'s iteration budget: s_max bounded by its own
+        ``max_iters`` / ``quality_steps`` (Sec 4.1 early exit)."""
+        s_max = self.iter_budget(T)
+        cap = min(request.max_iters if request.max_iters is not None
+                  else s_max,
+                  request.quality_steps if request.quality_steps is not None
+                  else s_max)
+        return min(cap, s_max)
+
+    def request_tau_sq(self, request) -> np.float32:
+        """``request``'s SQUARED stopping tolerance — squared on the host
+        so the default (this spec's python-float tau) packs to the exact
+        f32 constant the pre-override program folded in."""
+        tau = self.tau if request.tau is None else request.tau
+        return np.float32(tau ** 2)
+
+    def request_early_stopped(self, request, T: int, iters: int,
+                              converged: bool) -> bool:
+        """Did ``request`` exit at its OWN budget before full tolerance?"""
+        cap = self.request_iter_cap(request, T)
+        return not converged and cap < self.iter_budget(T) and iters >= cap
 
     def solver_config(self, T: int, *, t_init: int = 0) -> ParaTAAConfig:
         """Resolve this spec against a step count T."""
@@ -68,6 +105,16 @@ class SamplerSpec:
             history_m=self.history_m, window=self.window, mode=self.solver,
             tau=self.tau, lam=self.lam, s_max=self.s_max_for(T),
             safeguard=self.safeguard, t_init=t_init)
+
+    def stepwise_config(self, T: int) -> ParaTAAConfig:
+        """Resolve this spec for the resumable stepwise driver.  Unlike
+        :meth:`solver_config` this also covers "seq": the sequential sampler
+        runs as mode="seq" state (one timestep per iteration, iter_cap=T)
+        so serving can chunk/retire/refill it like any solver lane."""
+        if self.is_sequential:
+            return ParaTAAConfig(order_k=1, history_m=1, mode="seq",
+                                 s_max=T, safeguard=False)
+        return self.solver_config(T)
 
 
 _REGISTRY: Dict[str, SamplerSpec] = {}

@@ -32,10 +32,18 @@ class WarmStart:
     trajectory: Any
     t_init: Optional[int] = None
 
+    @classmethod
+    def from_result(cls, result: "SampleResult",
+                    t_init: Optional[int] = None) -> "WarmStart":
+        """Warm-start from a solved :class:`SampleResult` — the handle the
+        Sec 4.2 trajectory cache hands back to similar requests."""
+        return cls(trajectory=result.trajectory, t_init=t_init)
+
 
 @dataclasses.dataclass(frozen=True)
 class SampleRequest:
-    """One sampling request: (conditioning, seed, optional warm start).
+    """One sampling request: (conditioning, seed, optional warm start,
+    optional per-request solver budget).
 
     ``arrival_time`` and ``priority`` are serving metadata carried on the
     request itself so batching layers never need a side-channel dict keyed
@@ -43,12 +51,32 @@ class SampleRequest:
     queue clock reading at submission (``repro.serving.RequestQueue.submit``
     stamps it when unset); ``priority`` orders requests within one engine
     key — higher dispatches first, FIFO among equals.
+
+    ``tau`` / ``max_iters`` / ``quality_steps`` are per-request SOLVER
+    overrides, packed as batched arrays into the one compiled program (no
+    retrace — they are data, like labels):
+
+    tau:           stopping tolerance override (default: the engine spec's
+                   tau).  A looser tau retires the request earlier.
+    max_iters:     hard per-request iteration budget (result reports
+                   ``converged=False``/``early_stopped=True`` when hit).
+    quality_steps: Sec 4.1 early exit — return after this many solver
+                   iterations, where iterates are already usable, instead
+                   of running to full tolerance.
     """
     label: int = 0
     seed: int = 0
     init: Optional[WarmStart] = None
     arrival_time: Optional[float] = None
     priority: int = 0
+    tau: Optional[float] = None
+    max_iters: Optional[int] = None
+    quality_steps: Optional[int] = None
+
+    @property
+    def has_solver_overrides(self) -> bool:
+        return (self.tau is not None or self.max_iters is not None
+                or self.quality_steps is not None)
 
 
 @dataclasses.dataclass
@@ -60,6 +88,9 @@ class SampleResult:
     iters:       parallelizable solver iterations executed (== T for seq).
     nfe:         number of eps evaluations issued (== T for seq).
     converged:   solver reached its tolerance (always True for seq).
+    early_stopped: the request exited at its own ``quality_steps`` /
+                 ``max_iters`` budget before full tolerance (Sec 4.1) —
+                 the iterate is the deliverable, not a failure.
     residuals:   final per-timestep first-order residuals (parallel only).
     diagnostics: per-iteration recordings (res_history, x0_history, ...)
                  when the run was issued with diagnostics=True.
@@ -71,10 +102,16 @@ class SampleResult:
     iters: int
     nfe: int
     converged: bool
+    early_stopped: bool = False
     residuals: Optional[Any] = None
     diagnostics: Optional[Dict[str, Any]] = None
     request: Optional[SampleRequest] = None
     wall_s: float = 0.0
+
+    def warm_start(self, t_init: Optional[int] = None) -> WarmStart:
+        """This result's solved trajectory as a :class:`WarmStart` handle
+        (Sec 4.2): ``engine.run(request.init=result.warm_start(t))``."""
+        return WarmStart.from_result(self, t_init=t_init)
 
     @property
     def info(self) -> Dict[str, Any]:

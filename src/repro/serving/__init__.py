@@ -19,22 +19,31 @@ serving layer for live traffic:
   * :class:`ServingLoop` — a double-buffered pump: packs dispatch N+1 on
     the host while dispatch N computes on the device (JAX async dispatch;
     only ``collect`` blocks), driven synchronously (``drain()``) or as a
-    background thread (``start()``/``stop()``).
+    background thread (``start()``/``stop()``).  With ``chunk_iters > 0``
+    it switches to ITERATION-LEVEL continuous batching: one live
+    ``LaneBank`` of resumable solver state per key, advanced a chunk of
+    solver iterations at a time, with lanes retiring the moment their own
+    request converges (or early-exits at its ``tau``/``quality_steps``/
+    ``max_iters`` budget, Sec 4.1) and freed lanes refilled mid-solve —
+    per-iteration scheduling instead of per-batch scheduling.
+  * :class:`TrajectoryCache` — per-key solved-trajectory store (Sec 4.2
+    warm-start cache skeleton), hanging off the registry like the engines.
 
 Results are bitwise-identical to ``engine.run_batch`` over the same
 requests at the same slot geometry — batching is a scheduling concern, not
-a numerics one.  See ``launch/serve.py --serve-async`` for the live driver
-and ``benchmarks/serving_async.py`` for throughput/latency measurements
-against the blocking loop.
+a numerics one (iteration-level refill included: a lane's state evolves
+exactly as if it ran alone).  See ``launch/serve.py --serve-async`` for
+the live driver and ``benchmarks/serving_async.py`` for throughput /
+latency / NFE-per-request measurements against the blocking loop.
 """
 from repro.serving.batcher import Batcher, BatchingPolicy, Dispatch
 from repro.serving.loop import ServingLoop
 from repro.serving.queue import EngineKey, RequestQueue, Ticket
-from repro.serving.registry import EngineRegistry
+from repro.serving.registry import EngineRegistry, TrajectoryCache
 
 __all__ = [
     "Batcher", "BatchingPolicy", "Dispatch",
     "ServingLoop",
     "EngineKey", "RequestQueue", "Ticket",
-    "EngineRegistry",
+    "EngineRegistry", "TrajectoryCache",
 ]

@@ -137,6 +137,34 @@ class Batcher:
                     break
         return plans
 
+    # -- iteration-level admission (stepwise banks) --------------------------
+
+    def plan_refill(self, queue: RequestQueue, key: EngineKey,
+                    free_slots: int, *, now: float, active: bool,
+                    flush: bool = False) -> List[Ticket]:
+        """Pop the tickets to admit into the free lanes of a live
+        :class:`~repro.sampling.engine.LaneBank` this round.
+
+        The work-conserving drain counts IN-FLIGHT REFILLABLE SLOTS, not
+        just an idle device pipeline: when the bank has active lanes
+        (``active``) the chunk runs with or without newcomers, so admitting
+        them immediately is free work — no fill-or-deadline wait.  Only a
+        fully idle bank (a cold start, where admission is what lights up
+        the device) applies the usual fill / deadline / flush gate.
+        """
+        if free_slots <= 0 or queue.pending(key) == 0:
+            return []
+        ready = flush or (self.policy.work_conserving and active) \
+            or queue.pending(key) >= self.fill_quota(free_slots)
+        if not ready:
+            oldest = queue.oldest_arrival(key)
+            ready = oldest is not None \
+                and now - oldest >= self.policy.max_wait_s
+        if not ready:
+            return []
+        return queue.pop(key, free_slots,
+                         promote_before=now - self.policy.max_wait_s)
+
     # -- observed-dispatch feedback ------------------------------------------
 
     def note(self, key: EngineKey, report: dict) -> None:

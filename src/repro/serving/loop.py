@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import collections
 import threading
-from typing import Deque, Optional, Tuple
+from typing import Deque, Dict, Optional, Tuple
 
 import jax
 
@@ -37,29 +37,51 @@ class ServingLoop:
     queue:    request intake; the loop is its only consumer.
     batcher:  drain policy (default :class:`Batcher` defaults).
     depth:    max dispatches in flight (1 = no overlap, 2 = double buffer).
+    chunk_iters: 0 (default) = whole-batch mode — every dispatch runs to
+              the convergence of its SLOWEST member before any ticket
+              resolves.  > 0 = ITERATION-LEVEL continuous batching: each
+              key keeps one live :class:`~repro.sampling.engine.LaneBank`,
+              the pump advances it ``chunk_iters`` solver iterations per
+              round, lanes retire the moment their own request converges
+              (or hits its per-request ``quality_steps``/``max_iters``
+              budget — Sec 4.1 early exit), and freed lanes are refilled
+              from the queue into the live solver state without a retrace.
     """
 
     def __init__(self, registry: EngineRegistry, queue: RequestQueue,
-                 batcher: Optional[Batcher] = None, *, depth: int = 2):
+                 batcher: Optional[Batcher] = None, *, depth: int = 2,
+                 chunk_iters: int = 0):
         if depth < 1:
             raise ValueError(f"depth must be >= 1, got {depth}")
+        if chunk_iters < 0:
+            raise ValueError(
+                f"chunk_iters must be >= 0, got {chunk_iters}")
         self.registry = registry
         self.queue = queue
         self.batcher = batcher or Batcher()
         self.depth = depth
+        self.chunk_iters = chunk_iters
         self.stats = {"dispatches": 0, "completed": 0, "failed": 0}
+        if chunk_iters:
+            self.stats.update(chunks=0, refills=0)
         self.error: Optional[BaseException] = None
         self._inflight: Deque[Tuple[Dispatch, object]] = collections.deque()
+        self._banks: Dict = {}          # EngineKey -> LaneBank
+        self._lane_tickets: Dict = {}   # EngineKey -> List[Optional[Ticket]]
         self._stop_event = threading.Event()
         self._thread: Optional[threading.Thread] = None
 
     # -- one scheduling round ------------------------------------------------
 
     def pump(self, *, flush: bool = False) -> int:
-        """Plan ready dispatches and launch them, collecting the oldest
-        in-flight batch whenever the pipeline is at ``depth``.  Returns the
-        number of requests dispatched this round."""
+        """One scheduling round; returns the number of requests newly
+        dispatched/admitted.  Whole-batch mode plans fixed-slot dispatches
+        and collects the oldest in-flight batch whenever the pipeline is at
+        ``depth``; stepwise mode harvests/refills/advances the live banks.
+        """
         self._assert_not_threaded()
+        if self.chunk_iters:
+            return self._pump_stepwise(flush=flush)
         plans = self.batcher.plan(
             self.queue, self.registry, now=self.queue.clock(),
             flush=flush, idle=not self._inflight)
@@ -77,6 +99,10 @@ class ServingLoop:
     def drain(self) -> None:
         """Dispatch everything queued and collect every in-flight batch."""
         self._assert_not_threaded()
+        if self.chunk_iters:
+            while len(self.queue) or self._occupied_lanes():
+                self.pump(flush=True)
+            return
         while len(self.queue):
             self.pump(flush=True)
         while self._inflight:
@@ -84,7 +110,125 @@ class ServingLoop:
 
     @property
     def inflight(self) -> int:
-        return len(self._inflight)
+        return len(self._inflight) if not self.chunk_iters \
+            else self._occupied_lanes()
+
+    # -- stepwise (iteration-level) rounds -----------------------------------
+
+    def _occupied_lanes(self) -> int:
+        return sum(bank.occupied for bank in self._banks.values())
+
+    def _pump_stepwise(self, *, flush: bool = False) -> int:
+        """harvest -> refill -> advance, every live/pending key per round.
+
+        Harvest first resolves any lane whose own solve finished during the
+        previous chunk (blocking on that chunk — the step at the end of the
+        round is async, so host scheduling overlaps device compute);
+        refill admission is :meth:`Batcher.plan_refill` — free lanes of an
+        ACTIVE bank admit immediately (work-conserving: the chunk runs
+        anyway), an idle bank applies the usual fill-or-deadline gate."""
+        now = self.queue.clock()
+        admitted = 0
+
+        def starvation(key):
+            oldest = self.queue.oldest_arrival(key)
+            return (now if oldest is None else oldest, key)
+
+        keys = sorted(set(self.queue.keys()) | set(self._banks),
+                      key=starvation)
+        for key in keys:
+            try:
+                engine = self.registry.get(key)
+            except Exception as error:  # noqa: BLE001 — poisoned key
+                for ticket in self.queue.pop(key, self.queue.pending(key)):
+                    ticket.fail(error)
+                    self.stats["failed"] += 1
+                continue
+            bank = self._banks.get(key)
+            if bank is None:
+                if not self.queue.pending(key):
+                    continue
+                try:
+                    slots = self.batcher.slots_for(engine)
+                    bank = engine.stepwise_open(
+                        slots, chunk_iters=self.chunk_iters)
+                except Exception as error:  # noqa: BLE001 — open/compile
+                    # failure poisons THIS key only: fail its pending
+                    # tickets (nothing is admitted yet), keep serving
+                    for ticket in self.queue.pop(key,
+                                                 self.queue.pending(key)):
+                        ticket.fail(error)
+                        self.stats["failed"] += 1
+                    continue
+                self._banks[key] = bank
+                self._lane_tickets[key] = [None] * bank.slots
+            tickets = self._lane_tickets[key]
+            try:
+                for lane, result in engine.stepwise_harvest(bank):
+                    ticket = tickets[lane]
+                    tickets[lane] = None
+                    if ticket is not None:
+                        ticket.resolve(result)
+                        self.stats["completed"] += 1
+                free = bank.free_lanes()
+                admit = self.batcher.plan_refill(
+                    self.queue, key, len(free), now=now,
+                    active=bank.occupied > 0, flush=flush)
+                admitted += self._refill(engine, bank, tickets, free, admit)
+                if bank.occupied:
+                    engine.stepwise_step(bank)
+                    self.stats["chunks"] += 1
+            except Exception as error:  # noqa: BLE001 — fail this bank's
+                # tickets, drop the bank, keep serving other keys
+                self._fail_bank(key, error)
+        return admitted
+
+    def _refill(self, engine, bank, tickets, free, admit) -> int:
+        """Splice admitted tickets into free lanes.  A request the engine
+        rejects (e.g. per-request tau on a seq key) fails ITS OWN ticket at
+        validation; a refill that fails after that fails the admitted group
+        — in both cases the popped tickets are accounted for, never leaked,
+        and the bank keeps serving."""
+        if not admit:
+            return 0
+        valid = []
+        for ticket in admit:
+            try:
+                engine.validate_request(ticket.request)
+            except Exception as error:  # noqa: BLE001
+                ticket.fail(error)
+                self.stats["failed"] += 1
+            else:
+                valid.append(ticket)
+        if not valid:
+            return 0
+        lanes = free[:len(valid)]
+        try:
+            engine.stepwise_refill(bank, lanes,
+                                   [t.request for t in valid])
+        except Exception as error:  # noqa: BLE001
+            for ticket in valid:
+                ticket.fail(error)
+            self.stats["failed"] += len(valid)
+            return 0
+        for lane, ticket in zip(lanes, valid):
+            tickets[lane] = ticket
+        self.stats["refills"] += 1
+        self.stats["dispatches"] += 1
+        return len(valid)
+
+    def _fail_bank(self, key, error: BaseException) -> None:
+        for ticket in self._lane_tickets.get(key, []):
+            if ticket is not None:
+                ticket.fail(error)
+                self.stats["failed"] += 1
+        self._banks.pop(key, None)
+        self._lane_tickets.pop(key, None)
+
+    def bank_reports(self) -> Dict:
+        """Per-key stepwise work accounting (see ``stepwise_report``)."""
+        return {key: self.registry.get(key).stepwise_report(bank)
+                for key, bank in self._banks.items()}
 
     def _assert_not_threaded(self) -> None:
         """The pipeline state (``_inflight``) is single-consumer: while the
@@ -153,6 +297,8 @@ class ServingLoop:
             for ticket in plan.tickets:
                 ticket.fail(error)
             self.stats["failed"] += len(plan.tickets)
+        for key in list(self._banks):
+            self._fail_bank(key, error)
         for key in self.queue.keys():
             for ticket in self.queue.pop(key, self.queue.pending(key)):
                 ticket.fail(error)
@@ -170,6 +316,13 @@ class ServingLoop:
             try:
                 while not self._stop_event.is_set():
                     if self.pump() == 0:
+                        if self.chunk_iters:
+                            # a round with live lanes already advanced them
+                            # (and the next harvest blocks on that chunk);
+                            # only a fully idle loop needs to sleep
+                            if not self._occupied_lanes():
+                                self._stop_event.wait(poll_s)
+                            continue
                         # never park in a blocking collect here: collect
                         # any batch that already finished on device (out of
                         # order — batches are independent), otherwise poll

@@ -10,26 +10,83 @@ never see meshes, shardings, or denoiser parameters.
 """
 from __future__ import annotations
 
+import collections
 import threading
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, List, Optional
 
 from repro.sampling.engine import SamplingEngine
-from repro.sampling.types import SampleRequest
+from repro.sampling.types import SampleRequest, SampleResult, WarmStart
 from repro.serving.queue import EngineKey
 
 
+class TrajectoryCache:
+    """Per-:class:`EngineKey` store of solved trajectories (Sec 4.2 warm-
+    start cache SKELETON).
+
+    Trajectories are (T+1, ...)-shaped per key, which is exactly why the
+    cache hangs off the registry: one cache per key, like one engine per
+    key.  The minimal policy here keys by conditioning label (LRU,
+    capacity-bounded) and hands back a ready-to-submit :class:`WarmStart`;
+    the "seed neighborhood" similarity metric and submit-time
+    auto-population are the remaining ROADMAP work this scaffolds.
+    Early-stopped results are not cached — a warm start should descend
+    from a fully-converged trajectory.
+    """
+
+    def __init__(self, capacity: int = 64):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._lock = threading.Lock()
+        self._store: "collections.OrderedDict" = collections.OrderedDict()
+
+    def record(self, result: SampleResult) -> bool:
+        """Offer one solved result; returns True if it was cached."""
+        if not result.converged or result.request is None:
+            return False
+        with self._lock:
+            label = result.request.label
+            self._store.pop(label, None)
+            self._store[label] = result.trajectory
+            while len(self._store) > self.capacity:
+                self._store.popitem(last=False)
+        return True
+
+    def lookup(self, label: int,
+               t_init: Optional[int] = None) -> Optional[WarmStart]:
+        """A WarmStart for ``label``'s condition, or None (LRU-refreshes)."""
+        with self._lock:
+            traj = self._store.get(label)
+            if traj is None:
+                return None
+            self._store.move_to_end(label)
+        return WarmStart(trajectory=traj, t_init=t_init)
+
+    def labels(self) -> List[int]:
+        with self._lock:
+            return list(self._store)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._store)
+
+
 class EngineRegistry:
-    """One lazily-constructed :class:`SamplingEngine` per :class:`EngineKey`.
+    """One lazily-constructed :class:`SamplingEngine` per :class:`EngineKey`,
+    plus that key's :class:`TrajectoryCache`.
 
     factory: ``EngineKey -> SamplingEngine``; called at most once per key
              (under a lock — engine construction may shard parameters onto
              a mesh, which must not race).
     """
 
-    def __init__(self, factory: Callable[[EngineKey], SamplingEngine]):
+    def __init__(self, factory: Callable[[EngineKey], SamplingEngine], *,
+                 cache_capacity: int = 64):
         self._factory = factory
         self._lock = threading.Lock()
         self._engines: Dict[EngineKey, SamplingEngine] = {}
+        self._caches: Dict[EngineKey, TrajectoryCache] = {}
+        self._cache_capacity = cache_capacity
 
     def get(self, key: EngineKey) -> SamplingEngine:
         with self._lock:
@@ -43,8 +100,18 @@ class EngineRegistry:
         with self._lock:
             return dict(self._engines)
 
+    def cache(self, key: EngineKey) -> TrajectoryCache:
+        """``key``'s trajectory cache (lazy, one per key like its engine)."""
+        with self._lock:
+            cache = self._caches.get(key)
+            if cache is None:
+                cache = self._caches[key] = \
+                    TrajectoryCache(self._cache_capacity)
+            return cache
+
     def warmup(self, key: EngineKey, *, slots: int,
-               request: Optional[SampleRequest] = None) -> SamplingEngine:
+               request: Optional[SampleRequest] = None,
+               chunk_iters: int = 0) -> SamplingEngine:
         """Construct + compile ``key``'s engine ahead of traffic.
 
         Dispatches one throwaway request at ``slots`` — which must be the
@@ -52,10 +119,23 @@ class EngineRegistry:
         other slot count compiles a different program and the first real
         batch would still pay the jit compile — then rewinds the engine's
         serving counters (``traces`` is kept: it genuinely compiled).
+
+        With ``chunk_iters > 0`` the stepwise programs are warmed instead
+        (open/init/merge/step at the serving slot geometry and chunk size —
+        the programs an iteration-level :class:`~repro.serving.ServingLoop`
+        drives); the throwaway bank is discarded, the compilations stay.
         """
         engine = self.get(key)
-        pending = engine.dispatch([request or SampleRequest()], slots=slots)
-        engine.collect(pending)
+        if chunk_iters:
+            bank = engine.stepwise_open(slots, chunk_iters=chunk_iters)
+            engine.stepwise_refill(bank, [0], [request or SampleRequest()])
+            while bank.occupied:
+                engine.stepwise_step(bank)
+                engine.stepwise_harvest(bank)
+        else:
+            pending = engine.dispatch([request or SampleRequest()],
+                                      slots=slots)
+            engine.collect(pending)
         engine.reset_stats()
         return engine
 

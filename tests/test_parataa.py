@@ -1,12 +1,15 @@
 """ParaTAA solver tests: equivalence with sequential sampling (the paper's
-central claim), convergence orderings, safeguard, windows, trajectory init."""
+central claim), convergence orderings, safeguard, windows, trajectory init,
+and the resumable stepwise (init_state/step_chunk) driver's bitwise
+equivalence to the monolithic loop."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import ddim_coeffs, ddpm_coeffs
-from repro.core.parataa import ParaTAAConfig, sample, sample_recording
+from repro.core.parataa import (ParaTAAConfig, init_state, sample,
+                                sample_recording, step_chunk)
 from repro.core.anderson import anderson_update, taa_update_literal
 from repro.sampling import sequential_sample, draw_noises
 from tests.helpers import make_oracle_denoiser
@@ -134,6 +137,93 @@ def test_taa_suffix_matches_literal_theorem_3_2():
                            mode="taa", lam=1e-6)
     lit = taa_update_literal(x, R, dX, dF, 3, T - 1, 1e-6)
     np.testing.assert_allclose(np.asarray(ours)[3:], lit[3:], rtol=2e-3, atol=2e-3)
+
+
+def _drive_chunked(eps_fn, coeffs, cfg, xi, chunk, **init_kw):
+    """Drive init_state/step_chunk across host boundaries until finished."""
+    state = init_state(coeffs, cfg, xi, **init_kw)
+    step = jax.jit(lambda s: step_chunk(eps_fn, coeffs, cfg, s, chunk))
+    hops = 0
+    while not bool(state.finished):
+        state = step(state)
+        hops += 1
+    return state, hops
+
+
+@pytest.mark.parametrize("mode,k,m,window", [
+    ("fp", 25, 1, 0), ("taa", 8, 3, 0), ("taa", 8, 3, 10)])
+@pytest.mark.parametrize("chunk", [1, 3, 7])
+def test_step_chunk_driver_bitwise_equals_monolithic(mode, k, m, window,
+                                                     chunk):
+    """Tentpole acceptance: the resumable stepwise driver — K guarded
+    iterations per jitted call, state crossing the host boundary between
+    chunks — reproduces the monolithic while_loop bitwise for every solver
+    variant and chunk size."""
+    coeffs = ddim_coeffs(25)
+    eps_fn = make_oracle_denoiser(D)
+    xi = draw_noises(jax.random.PRNGKey(42), coeffs, (D,))
+    cfg = ParaTAAConfig(order_k=k, history_m=m, mode=mode, window=window,
+                        tau=1e-3, s_max=300)
+    traj, info = sample(eps_fn, coeffs, cfg, xi)
+    state, hops = _drive_chunked(eps_fn, coeffs, cfg, xi, chunk)
+    assert hops > 1, "chunked drive must actually cross host boundaries"
+    np.testing.assert_array_equal(np.asarray(state.x), np.asarray(traj))
+    assert int(state.it) == int(info["iters"])
+    assert int(state.nfe) == int(info["nfe"])
+    assert bool(state.done) == bool(info["converged"])
+
+
+def test_step_chunk_seq_mode_bitwise_equals_sequential():
+    """mode="seq" expresses eq. (6) as stepwise state: chunked driving
+    reproduces the reference sequential sampler bitwise (T steps, T NFE)."""
+    coeffs = ddim_coeffs(20)
+    eps_fn = make_oracle_denoiser(D)
+    xi = draw_noises(jax.random.PRNGKey(7), coeffs, (D,))
+    ref = sequential_sample(eps_fn, coeffs, xi, return_traj=True)
+    cfg = ParaTAAConfig(order_k=1, history_m=1, mode="seq", s_max=20,
+                        safeguard=False)
+    traj, info = sample(eps_fn, coeffs, cfg, xi)
+    np.testing.assert_array_equal(np.asarray(traj), np.asarray(ref))
+    assert int(info["iters"]) == 20 and int(info["nfe"]) == 20
+    state, _ = _drive_chunked(eps_fn, coeffs, cfg, xi, 3)
+    np.testing.assert_array_equal(np.asarray(state.x), np.asarray(ref))
+
+
+def test_step_chunk_warm_start_and_tau_overrides_bitwise():
+    """Warm-start t_init and runtime tau/iter_cap overrides flow through
+    the stepwise state identically to the monolithic driver."""
+    coeffs = ddim_coeffs(30)
+    eps1 = make_oracle_denoiser(D, seed=0)
+    eps2 = make_oracle_denoiser(D, seed=0, nonlin=0.35)
+    xi = draw_noises(jax.random.PRNGKey(6), coeffs, (D,))
+    cfg = ParaTAAConfig(order_k=8, history_m=3, mode="taa", tau=1e-3,
+                        s_max=200)
+    traj1, _ = sample(eps1, coeffs, cfg, xi)
+    kw = dict(x_init=traj1, t_init=18, tau_sq=np.float32(1e-2 ** 2))
+    traj, info = sample(eps2, coeffs, cfg, xi, **kw)
+    state, _ = _drive_chunked(eps2, coeffs, cfg, xi, 2, **kw)
+    np.testing.assert_array_equal(np.asarray(state.x), np.asarray(traj))
+    assert int(state.it) == int(info["iters"])
+    # iter_cap stops the chunked drive mid-solve at exactly that budget
+    capped, _ = _drive_chunked(eps2, coeffs, cfg, xi, 2, iter_cap=3)
+    assert int(capped.it) == 3 and not bool(capped.done)
+    traj_c, info_c = sample(eps2, coeffs, cfg, xi, iter_cap=3)
+    np.testing.assert_array_equal(np.asarray(capped.x), np.asarray(traj_c))
+
+
+def test_recording_is_thin_driver_over_stepwise_state():
+    """sample_recording keeps its outputs after the stepwise refactor and
+    respects iter_cap (quality-steps early exit records a truncated run)."""
+    coeffs = ddim_coeffs(15)
+    eps_fn = make_oracle_denoiser(D)
+    xi = draw_noises(jax.random.PRNGKey(3), coeffs, (D,))
+    cfg = ParaTAAConfig(order_k=8, history_m=3, mode="taa", tau=1e-3,
+                        s_max=40)
+    _, info = sample_recording(eps_fn, coeffs, cfg, xi, iter_cap=4)
+    assert int(info["iters"]) == 4 and not bool(info["converged"])
+    assert info["res_history"].shape == (40, 15)
+    # iterations past the cap record the frozen state
+    assert bool(jnp.all(info["t2_history"][4:] == info["t2_history"][4]))
 
 
 def test_batched_sampling_via_vmap():

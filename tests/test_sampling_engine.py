@@ -210,6 +210,120 @@ def test_warm_start_explicit_t_init_zero_is_fully_solved():
     assert full.converged and full.iters >= verify.iters
 
 
+# --- per-request solver budgets (tau / max_iters / quality_steps) -----------
+
+def test_per_request_tau_is_data_to_one_program():
+    """A looser per-request tau retires that lane earlier INSIDE a shared
+    dispatch, matches a solo run at the same tau bitwise, and defaults stay
+    bitwise-identical to the no-override engine — all under one trace."""
+    T = 20
+    coeffs = ddim_coeffs(T)
+    eng = make_engine(coeffs, get_sampler("taa"))
+    default = SampleRequest(label=1, seed=5)
+    loose = SampleRequest(label=2, seed=6, tau=5e-2)
+    res_d, res_l = eng.run_batch([default, loose], batch_size=2)
+    assert eng.stats["traces"] == 1
+    assert res_l.iters <= res_d.iters
+    # the loose lane == a solo engine whose SPEC carries that tau
+    [solo] = make_engine(coeffs, get_sampler("taa", tau=5e-2)).run_batch(
+        [SampleRequest(label=2, seed=6)])
+    np.testing.assert_array_equal(np.asarray(res_l.trajectory),
+                                  np.asarray(solo.trajectory))
+    assert res_l.iters == solo.iters
+    # the default lane == the pre-override engine output
+    [ref] = make_engine(coeffs, get_sampler("taa")).run_batch(
+        [SampleRequest(label=1, seed=5)])
+    np.testing.assert_array_equal(np.asarray(res_d.trajectory),
+                                  np.asarray(ref.trajectory))
+
+
+def test_quality_steps_and_max_iters_early_exit():
+    """Sec 4.1: a quality-steps budget returns the iterate at that
+    iteration (early_stopped, not converged); max_iters behaves the same
+    as a hard cap."""
+    T = 20
+    coeffs = ddim_coeffs(T)
+    eng = make_engine(coeffs, get_sampler("taa"))
+    [full] = eng.run_batch([SampleRequest(label=1, seed=5)])
+    assert full.converged and not full.early_stopped
+    [qs] = eng.run_batch([SampleRequest(label=1, seed=5, quality_steps=3)])
+    assert qs.iters == 3 and qs.early_stopped and not qs.converged
+    assert qs.nfe < full.nfe
+    [mi] = eng.run_batch([SampleRequest(label=1, seed=5, max_iters=2)])
+    assert mi.iters == 2 and mi.early_stopped
+    # a budget ABOVE the convergence point changes nothing (bitwise)
+    [roomy] = eng.run_batch(
+        [SampleRequest(label=1, seed=5, max_iters=full.iters + 5)])
+    assert roomy.converged and not roomy.early_stopped
+    np.testing.assert_array_equal(np.asarray(roomy.trajectory),
+                                  np.asarray(full.trajectory))
+
+
+def test_seq_spec_rejects_solver_overrides():
+    eng = make_engine(ddim_coeffs(10), get_sampler("seq"))
+    with pytest.raises(ValueError, match="solver-iteration budgets"):
+        eng.run_batch([SampleRequest(seed=1, tau=1e-2)])
+    with pytest.raises(ValueError, match="solver-iteration budgets"):
+        eng.run_batch([SampleRequest(seed=1, quality_steps=3)])
+
+
+def test_functional_run_honors_request_budgets_like_the_engine():
+    """Both entry points of the unified API resolve per-request budgets
+    through the same spec helpers: ``run(request=...)`` early-exits at
+    quality_steps exactly like ``engine.run_batch`` does, and seq rejects
+    overrides on both."""
+    T = 20
+    coeffs = ddim_coeffs(T)
+    eps = make_oracle_denoiser(D)
+    xi = draw_noises(jax.random.PRNGKey(8), coeffs, (D,))
+    spec = get_sampler("taa")
+    req = SampleRequest(quality_steps=3)
+    res = run(spec, eps, coeffs, xi, request=req)
+    assert res.iters == 3 and res.early_stopped and not res.converged
+    full = run(spec, eps, coeffs, xi)
+    assert full.converged and not full.early_stopped
+    loose = run(spec, eps, coeffs, xi, request=SampleRequest(tau=5e-2))
+    assert loose.converged and loose.iters <= full.iters
+    with pytest.raises(ValueError, match="solver-iteration budgets"):
+        run(get_sampler("seq"), eps, coeffs, xi,
+            request=SampleRequest(tau=1e-2))
+
+
+# --- dispatch work accounting ------------------------------------------------
+
+def test_dispatch_reports_per_lane_iters_and_wasted_frac():
+    """The whole-batch dispatch report exposes per-lane iters/nfe and the
+    wasted-lane-iteration fraction (work burned past each lane's own
+    convergence — what iteration-level batching reclaims)."""
+    T = 20
+    coeffs = ddim_coeffs(T)
+    eng = make_engine(coeffs, get_sampler("taa"))
+    reqs = [SampleRequest(label=1, seed=5),
+            SampleRequest(label=2, seed=6, quality_steps=2)]
+    results = eng.run_batch(reqs, batch_size=2)
+    [report] = eng.last_dispatches
+    assert report["iters"] == [r.iters for r in results]
+    assert report["nfe"] == [r.nfe for r in results]
+    assert report["device_iters"] == max(r.iters for r in results)
+    # the quality-capped lane idled while the slow lane ran to tolerance
+    expected = 1.0 - sum(r.iters for r in results) \
+        / (report["device_iters"] * 2)
+    assert report["wasted_iter_frac"] == pytest.approx(expected)
+    assert report["device_nfe"] == report["device_iters"] * 2 * eng.window
+
+
+# --- warm-start handles ------------------------------------------------------
+
+def test_result_exposes_warm_start_handle():
+    eng = make_engine(ddim_coeffs(15), get_sampler("taa"))
+    [res] = eng.run_batch([SampleRequest(label=1, seed=4)])
+    ws = res.warm_start(t_init=7)
+    assert ws.t_init == 7 and ws.trajectory is res.trajectory
+    assert WarmStart.from_result(res).t_init is None
+    [again] = eng.run_batch([SampleRequest(label=1, seed=4, init=ws)])
+    assert again.converged and again.iters <= res.iters
+
+
 # --- deprecation shims are gone --------------------------------------------
 
 def test_pr1_shims_removed():

@@ -1,9 +1,11 @@
 """`repro.serving` coverage: queue/ticket semantics, lazy engine registry,
-batching policy (fill / deadline / flush / work-conserving), and the
-double-buffered serving loop — async-served results must be bitwise-equal to
-``engine.run_batch`` over the same requests (host placement here, 8-device
-mesh in the subprocess variant), with mixed-key requests routed to the right
-engine FIFO-fair per key."""
+batching policy (fill / deadline / flush / work-conserving, including
+iteration-level ``plan_refill`` admission), the double-buffered serving
+loop, the stepwise (``chunk_iters``) loop with mid-solve retire/refill, and
+the per-key trajectory cache — async-served results must be bitwise-equal
+to ``engine.run_batch`` over the same requests (host placement here,
+8-device mesh in the subprocess variants), with mixed-key requests routed
+to the right engine FIFO-fair per key."""
 import json
 import subprocess
 import sys
@@ -211,6 +213,44 @@ def test_batching_policy_validation():
         BatchingPolicy(max_wait_s=-1.0)
     with pytest.raises(ValueError, match="depth"):
         ServingLoop(EngineRegistry(make_factory()), RequestQueue(), depth=0)
+    with pytest.raises(ValueError, match="chunk_iters"):
+        ServingLoop(EngineRegistry(make_factory()), RequestQueue(),
+                    chunk_iters=-1)
+
+
+def test_plan_refill_counts_inflight_refillable_slots():
+    """Work-conserving admission counts the free lanes of an ACTIVE bank
+    (the chunk runs with or without newcomers), while an idle bank applies
+    the usual fill-or-deadline gate before lighting up the device."""
+    clock = FakeClock(0.0)
+    q = RequestQueue(clock=clock)
+    key = EngineKey("oracle", 8, "taa")
+    batcher = Batcher(BatchingPolicy(max_batch=4, max_wait_s=10.0))
+    t1 = q.submit(SampleRequest(seed=1), key)
+    # ACTIVE bank -> no fill/deadline gate: the lone ticket rides along now
+    taken = batcher.plan_refill(q, key, 2, now=0.1, active=True)
+    assert taken == [t1] and q.pending(key) == 0
+    # idle bank: a partial refill waits for fill or deadline...
+    t2 = q.submit(SampleRequest(seed=2), key)
+    assert batcher.plan_refill(q, key, 4, now=0.2, active=False) == []
+    # ...until the deadline passes
+    assert batcher.plan_refill(q, key, 4, now=11.0, active=False) == [t2]
+    # ...or the fill quota over the free lanes is met
+    tks = [q.submit(SampleRequest(seed=s), key) for s in (3, 4)]
+    assert batcher.plan_refill(q, key, 2, now=11.1, active=False) == tks
+    # flush drains regardless; empty queue or no free lanes admit nothing
+    t5 = q.submit(SampleRequest(seed=5), key)
+    assert batcher.plan_refill(q, key, 0, now=11.2, active=True,
+                               flush=True) == []
+    assert batcher.plan_refill(q, key, 4, now=11.2, active=False,
+                               flush=True) == [t5]
+    assert batcher.plan_refill(q, key, 4, now=11.3, active=True) == []
+    # non-work-conserving policies hold even for active banks
+    strict = Batcher(BatchingPolicy(max_batch=4, max_wait_s=10.0,
+                                    work_conserving=False))
+    clock.t = 11.3
+    q.submit(SampleRequest(seed=6), key)
+    assert strict.plan_refill(q, key, 4, now=11.4, active=True) == []
 
 
 # --- engine dispatch/collect halves ----------------------------------------
@@ -313,6 +353,169 @@ def test_mixed_key_requests_route_to_their_engines_fifo_fair():
     for key in (k1, k2):
         assert registry.get(key).stats["requests"] == 4
         assert registry.get(key).coeffs.T == key.T
+
+
+# --- iteration-level (stepwise) serving --------------------------------------
+
+def test_stepwise_loop_bitwise_equals_run_batch_with_mixed_budgets():
+    """Acceptance: iteration-level serving — chunked solver state, lanes
+    retiring/refilling mid-solve — reproduces the monolithic ``run_batch``
+    bitwise over a mix of cold, warm-start (t_init), per-request-tau and
+    quality-steps requests, with NO per-refill recompiles."""
+    T = 12
+    key = EngineKey("oracle", T, "taa")
+    [solved] = reference_engine(T).run_batch([SampleRequest(label=1, seed=3)])
+    reqs = [SampleRequest(label=i % N_LABELS, seed=50 + i) for i in range(6)]
+    reqs[1] = SampleRequest(label=3, seed=51, tau=5e-2)
+    reqs[2] = SampleRequest(label=1, seed=3,
+                            init=WarmStart(solved.trajectory, t_init=6))
+    reqs[4] = SampleRequest(label=0, seed=54, quality_steps=3)
+
+    registry = EngineRegistry(make_factory())
+    queue = RequestQueue()
+    loop = ServingLoop(registry, queue, Batcher(BatchingPolicy(max_batch=4)),
+                       chunk_iters=2)
+    tickets = [queue.submit(r, key) for r in reqs]
+    loop.drain()
+    assert loop.inflight == 0 and loop.stats["completed"] == 6
+    assert loop.stats["chunks"] > 0 and loop.stats["refills"] >= 2
+
+    ref = reference_engine(T).run_batch(reqs, batch_size=4)
+    for ticket, want in zip(tickets, ref):
+        got = ticket.result()
+        assert np.array_equal(np.asarray(got.trajectory),
+                              np.asarray(want.trajectory)), \
+            f"stepwise result diverged for {ticket.request}"
+        assert (got.iters, got.nfe, got.converged, got.early_stopped) == \
+            (want.iters, want.nfe, want.converged, want.early_stopped)
+    # quality-steps lane early-exited
+    assert tickets[4].result().early_stopped
+    # open/init/merge/step compiled exactly once each, refills included
+    engine = registry.get(key)
+    assert engine.stats["stepwise_traces"] == 4
+    report = loop.bank_reports()[key]
+    assert report["completed"] == 6 and report["occupied"] == 0
+    assert 0.0 <= report["wasted_iter_frac"] < 1.0
+
+
+def test_stepwise_midsolve_refill_retires_late_arrivals_first():
+    """Mid-solve refill semantics: with 2 lanes, a slow request and three
+    quality-capped fast ones, the fast requests stream through the lane the
+    first fast one vacates — all of them retiring BEFORE the slow request
+    that started first (impossible for whole-batch dispatches, which hold
+    every member to the slowest lane)."""
+    T = 16
+    key = EngineKey("oracle", T, "taa")
+    slow = SampleRequest(label=1, seed=5, tau=1e-4)
+    fast = [SampleRequest(label=i % N_LABELS, seed=30 + i, quality_steps=1)
+            for i in range(3)]
+    registry = EngineRegistry(make_factory())
+    queue = RequestQueue()
+    loop = ServingLoop(registry, queue, Batcher(BatchingPolicy(max_batch=2)),
+                       chunk_iters=1)
+    t_slow = queue.submit(slow, key)
+    t_fast = [queue.submit(r, key) for r in fast]
+    loop.drain()
+    slow_res = t_slow.result()
+    assert slow_res.converged and slow_res.iters > 3
+    for t in t_fast:
+        assert t.result().early_stopped and t.result().iters == 1
+        assert t.completed_time < t_slow.completed_time, \
+            "a 1-iteration request waited for the slow lane"
+    # the single freed lane was refilled at least twice mid-solve
+    assert loop.stats["refills"] >= 3
+    # and the slow lane's solve was untouched by its neighbors churning
+    [ref] = reference_engine(T).run_batch([slow])
+    assert np.array_equal(np.asarray(slow_res.trajectory),
+                          np.asarray(ref.trajectory))
+
+
+def test_stepwise_loop_threaded_and_failure_paths():
+    """Background-thread stepwise serving completes live arrivals; a
+    request the engine rejects (per-request tau on seq) fails its own
+    ticket and the loop keeps serving."""
+    key = EngineKey("oracle", 8, "taa")
+    registry = EngineRegistry(make_factory())
+    registry.warmup(key, slots=4, chunk_iters=2)
+    queue = RequestQueue()
+    loop = ServingLoop(registry, queue,
+                       Batcher(BatchingPolicy(max_batch=4, max_wait_s=0.01)),
+                       chunk_iters=2)
+    with loop:
+        tickets = [queue.submit(
+            SampleRequest(label=i % N_LABELS, seed=90 + i), key)
+            for i in range(6)]
+        results = [t.result(timeout=120) for t in tickets]
+    assert all(r.converged for r in results)
+    assert loop.stats["completed"] == 6 and loop.stats["failed"] == 0
+    assert registry.get(key).stats["stepwise_traces"] == 4
+
+    seq_key = EngineKey("oracle", 8, "seq")
+    queue2 = RequestQueue()
+    loop2 = ServingLoop(registry, queue2,
+                        Batcher(BatchingPolicy(max_batch=2)), chunk_iters=2)
+    bad = queue2.submit(SampleRequest(seed=1, tau=1e-2), seq_key)
+    good = queue2.submit(SampleRequest(seed=2), seq_key)
+    loop2.drain()
+    with pytest.raises(ValueError, match="solver-iteration budgets"):
+        bad.result()
+    assert good.result().converged and good.result().iters == 8
+
+
+def test_stepwise_seq_spec_chunks_and_matches_run_batch():
+    """The sequential sampler serves through the same stepwise machinery
+    (mode="seq" lanes, one timestep per iteration), bitwise-equal to its
+    whole-batch dispatch."""
+    key = EngineKey("oracle", 10, "seq")
+    registry = EngineRegistry(make_factory())
+    queue = RequestQueue()
+    loop = ServingLoop(registry, queue, Batcher(BatchingPolicy(max_batch=2)),
+                       chunk_iters=3)
+    reqs = [SampleRequest(label=i % N_LABELS, seed=20 + i) for i in range(3)]
+    tickets = [queue.submit(r, key) for r in reqs]
+    loop.drain()
+    ref = reference_engine(10, "seq").run_batch(reqs, batch_size=2)
+    for t, r in zip(tickets, ref):
+        got = t.result()
+        assert np.array_equal(np.asarray(got.trajectory),
+                              np.asarray(r.trajectory))
+        assert got.iters == 10 and got.nfe == 10 and got.converged
+
+
+# --- trajectory cache (warm-start groundwork) --------------------------------
+
+def test_trajectory_cache_skeleton_on_registry():
+    from repro.serving import TrajectoryCache
+    registry = EngineRegistry(make_factory(), cache_capacity=2)
+    key = EngineKey("oracle", 10, "taa")
+    cache = registry.cache(key)
+    assert registry.cache(key) is cache          # one cache per key
+    assert isinstance(cache, TrajectoryCache) and len(cache) == 0
+    assert cache.lookup(1) is None
+
+    engine = registry.get(key)
+    [r1] = engine.run_batch([SampleRequest(label=1, seed=3)])
+    assert cache.record(r1) and len(cache) == 1
+    ws = cache.lookup(1, t_init=5)
+    assert ws is not None and ws.t_init == 5
+    assert np.array_equal(np.asarray(ws.trajectory),
+                          np.asarray(r1.trajectory))
+    # warm-starting from the cache round-trips through the engine
+    [warm] = engine.run_batch([SampleRequest(label=1, seed=3, init=ws)])
+    assert warm.converged and warm.iters <= r1.iters
+
+    # early-stopped results are refused: warm starts descend from solved
+    # trajectories only
+    [draft] = engine.run_batch([SampleRequest(label=2, seed=4,
+                                              quality_steps=1)])
+    assert draft.early_stopped and not cache.record(draft)
+    # LRU capacity bound
+    [r0] = engine.run_batch([SampleRequest(label=0, seed=5)])
+    [r3] = engine.run_batch([SampleRequest(label=3, seed=6)])
+    assert cache.record(r0) and cache.record(r3)
+    assert len(cache) == 2 and cache.lookup(1) is None  # evicted
+    with pytest.raises(ValueError, match="capacity"):
+        TrajectoryCache(capacity=0)
 
 
 def test_serving_loop_threaded_live_arrivals():
@@ -559,3 +762,98 @@ def test_async_serving_sharded_matches_host_run_batch():
     assert out["traces"] == [1, 1]             # one compile per key
     assert out["pack_reported"]
     assert out["loop"] == {"dispatches": 4, "completed": 10, "failed": 0}
+
+
+STEPWISE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import ddim_coeffs
+from repro.diffusion.schedules import make_schedule
+from repro.launch.mesh import make_mesh
+from repro.sampling import (Placement, SampleRequest, SamplingEngine,
+                            WarmStart, get_sampler)
+from repro.serving import (Batcher, BatchingPolicy, EngineKey,
+                           EngineRegistry, RequestQueue, ServingLoop)
+
+D, N_LABELS = 16, 4
+abar = jnp.asarray(make_schedule("linear", 1000)[0], jnp.float32)
+key = jax.random.PRNGKey(0)
+xstars = jax.random.normal(key, (N_LABELS, D))
+W = jax.random.normal(jax.random.fold_in(key, 3), (D, D)) / np.sqrt(D)
+
+def eps_apply(params, x, taus, y):
+    ab = abar[jnp.clip(taus.astype(jnp.int32), 0, 999)][:, None]
+    xs = xstars[jnp.clip(y, 0, N_LABELS - 1)]
+    lin = (x - jnp.sqrt(ab) * xs) / jnp.sqrt(1.0 - ab + 1e-8)
+    return lin + 0.3 * jnp.tanh(x @ W)
+
+plc = Placement(mesh=make_mesh("debug", data_parallel=4, model_parallel=2))
+
+def factory(k):
+    return SamplingEngine(eps_apply, None, ddim_coeffs(k.T),
+                          get_sampler(k.solver), sample_shape=(D,),
+                          placement=plc)
+
+T = 12
+k1 = EngineKey("oracle", T, "taa")
+host = SamplingEngine(eps_apply, None, ddim_coeffs(T), get_sampler("taa"),
+                      sample_shape=(D,))
+[solved] = host.run_batch([SampleRequest(label=1, seed=3)])
+reqs = [SampleRequest(label=i % N_LABELS, seed=50 + i) for i in range(10)]
+reqs[1] = SampleRequest(label=3, seed=51, tau=5e-2)
+reqs[2] = SampleRequest(label=1, seed=3,
+                        init=WarmStart(solved.trajectory, t_init=6))
+reqs[5] = SampleRequest(label=0, seed=55, quality_steps=3)
+
+registry = EngineRegistry(factory)
+queue = RequestQueue()
+# max_batch=3 rounds up to the mesh's 4 data shards: fixed 4-lane bank
+loop = ServingLoop(registry, queue, Batcher(BatchingPolicy(max_batch=3)),
+                   chunk_iters=2)
+tickets = [queue.submit(r, k1) for r in reqs]
+loop.drain()
+
+ref = host.run_batch(reqs, batch_size=4)
+equal = True
+for t, r in zip(tickets, ref):
+    got = t.result()
+    equal = equal and np.array_equal(np.asarray(got.trajectory),
+                                     np.asarray(r.trajectory)) \
+        and got.iters == r.iters and got.nfe == r.nfe \
+        and got.early_stopped == r.early_stopped
+engine = registry.get(k1)
+report = loop.bank_reports()[k1]
+out = {"equal": bool(equal),
+       "slots": report["slots"], "devices": report["devices"],
+       "stepwise_traces": engine.stats["stepwise_traces"],
+       "refills": report["refills"], "completed": report["completed"],
+       "loop_completed": loop.stats["completed"],
+       "failed": loop.stats["failed"]}
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.mark.mesh
+def test_stepwise_serving_sharded_matches_host_run_batch():
+    """Acceptance: the chunked stepwise loop on the 8-device debug mesh —
+    lanes sharded 4-way over data, denoiser TP over model, mid-solve
+    refills included — reproduces the HOST engine's monolithic run_batch
+    bitwise, with the stepwise programs compiled exactly once each."""
+    proc = subprocess.run(
+        [sys.executable, "-c", STEPWISE_SCRIPT], capture_output=True,
+        text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+             "JAX_PLATFORMS": "cpu"},
+        cwd=Path(__file__).resolve().parent.parent, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][0]
+    out = json.loads(line[7:])
+    assert out["equal"], \
+        "sharded stepwise serving diverged from host run_batch"
+    assert out["slots"] == 4 and out["devices"] == 8
+    assert out["stepwise_traces"] == 4         # open/init/merge/step, once
+    assert out["refills"] >= 3                 # lanes recycled mid-solve
+    assert out["completed"] == 10 and out["loop_completed"] == 10
+    assert out["failed"] == 0

@@ -1,15 +1,18 @@
 #!/usr/bin/env bash
 # CI entry point: install dev requirements (best-effort — offline images
 # already bake in jax/pytest; hypothesis enables the property suite), then
-# run three passes: the tier-1 verify command from ROADMAP.md over the
+# run four passes: the tier-1 verify command from ROADMAP.md over the
 # default (non-mesh) tests; a second, sharded pass selecting the
 # mesh-marked tests — the engine's data/model-sharded execution path —
-# under an 8-device forced host platform; and a third async-serving soak
+# under an 8-device forced host platform; a third async-serving soak
 # smoke that exercises the repro.serving batcher/loop end-to-end (queue ->
 # registry -> fixed-slot dispatches -> double-buffered collect) on the same
-# forced-host-device mesh.  Extra args ("$@", e.g. a test file) are
-# forwarded to both pytest passes; a pass whose marker selects nothing in
-# that target (pytest exit 5) is not a failure.
+# forced-host-device mesh; and a fourth EARLY-EXIT soak — a mixed-tau
+# Poisson stream through the iteration-level continuous-batching path
+# (chunked stepwise solver state, per-request tau/quality_steps budgets,
+# lanes retiring and refilling mid-solve).  Extra args ("$@", e.g. a test
+# file) are forwarded to both pytest passes; a pass whose marker selects
+# nothing in that target (pytest exit 5) is not a failure.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -30,3 +33,12 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     python -m repro.launch.serve --serve-async --smoke \
         --mesh debug --data-parallel 4 --model-parallel 2 \
         --requests 12 --steps-T 8 --batch-size 4 --arrival-rate 100
+
+echo "--- early-exit soak (iteration-level batching, mixed-tau Poisson) ---"
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.launch.serve --serve-async --smoke \
+        --mesh debug --data-parallel 4 --model-parallel 2 \
+        --requests 12 --steps-T 8 --batch-size 4 --arrival-rate 100 \
+        --chunk-iters 2 --loose-tau-frac 0.5 --loose-tau 1e-2 \
+        --quality-steps 3
