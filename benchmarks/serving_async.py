@@ -29,9 +29,22 @@ DiT, placement from ``REPRO_BENCH_MESH`` like ``serving_throughput``):
     the freed lane mid-solve, so the win shows up as device work reduction:
     requests/s and device-NFE-per-request are recorded for both.
 
-Latency percentiles (p50/p95, arrival -> completion) are reported for both
-serving modes, and everything is written to ``BENCH_serving.json`` at the
-repo root (sections ``"async"`` / ``"earlyexit"``) so the trajectory is
+  * ``stepwise_overhead`` — the stepwise HOST PROTOCOL itself: staggered
+    per-request budgets retire lanes a few at a time, and the section
+    compares what actually crosses the host<->device boundary per round
+    against the PR 4 protocol on the same schedule (which fetched the
+    ENTIRE ``slots x (T+1) x D`` bank trajectory at every harvest, always
+    fetched residuals, and issued a separate blocking poll per
+    harvest/report call).  Records bytes-fetched/round, blocking
+    polls/round, and requests/s vs the whole-batch baseline over the same
+    population.
+
+Every section records ``host_fetch_bytes_per_round`` and
+``blocking_polls_per_round`` (round = one dispatch for whole-batch modes,
+one harvest/step scheduling round for stepwise modes) so future PRs get
+the host-protocol trajectory for free.  Latency percentiles (p50/p95,
+arrival -> completion) are reported for both serving modes, and everything
+is written to ``BENCH_serving.json`` at the repo root so the trajectory is
 tracked across PRs.
 
 Where the win comes from: small arrival groups burn whole rounded-up
@@ -71,6 +84,20 @@ def _percentiles(latencies):
     return float(np.percentile(arr, 50)), float(np.percentile(arr, 95))
 
 
+def _fetch_mark(engine):
+    """Snapshot of the engine's host-protocol counters."""
+    return (engine.stats["host_fetch_bytes"], engine.stats["blocking_polls"])
+
+
+def _per_round(engine, mark, rounds):
+    """host_fetch_bytes / blocking_polls per round since ``mark``."""
+    bytes_now, polls_now = _fetch_mark(engine)
+    rounds = max(rounds, 1)
+    return dict(
+        host_fetch_bytes_per_round=(bytes_now - mark[0]) / rounds,
+        blocking_polls_per_round=(polls_now - mark[1]) / rounds)
+
+
 def run(T: int = 25, n_requests: int = 24, max_batch: int = 8):
     placement = common.bench_placement()
     key = EngineKey("dit-xl", T, "taa")
@@ -87,6 +114,7 @@ def run(T: int = 25, n_requests: int = 24, max_batch: int = 8):
     sync_engine = factory(key)
     for size in sorted({len(g) for g in groups}):
         sync_engine.run_batch(groups[0][:1] * size)        # compile geometries
+    sync_mark = _fetch_mark(sync_engine)
     t0 = time.perf_counter()
     sync_results, sync_latencies = [], []
     for group in groups:
@@ -96,6 +124,7 @@ def run(T: int = 25, n_requests: int = 24, max_batch: int = 8):
     sync_wall = time.perf_counter() - t0
     sync_p50, sync_p95 = _percentiles(sync_latencies)
     sync_reqps = n_requests / sync_wall
+    sync_rounds = _per_round(sync_engine, sync_mark, len(groups))
 
     # -- async: continuous batching over the same requests -------------------
     registry = EngineRegistry(factory)
@@ -104,6 +133,7 @@ def run(T: int = 25, n_requests: int = 24, max_batch: int = 8):
     registry.warmup(key, slots=slots)
     queue = RequestQueue()
     loop = ServingLoop(registry, queue, batcher)
+    async_mark = _fetch_mark(registry.get(key))
     t0 = time.perf_counter()
     tickets = [queue.submit(r, key) for r in requests]
     loop.drain()
@@ -112,6 +142,7 @@ def run(T: int = 25, n_requests: int = 24, max_batch: int = 8):
     async_p50, async_p95 = _percentiles([t.latency_s for t in tickets])
     async_reqps = n_requests / async_wall
     engine = registry.get(key)
+    async_rounds = _per_round(engine, async_mark, loop.stats["dispatches"])
     util = min(d["slot_utilization"] for d in engine.last_dispatches)
     rel_err = max(
         float(np.linalg.norm(np.asarray(a.x0) - np.asarray(b.x0))
@@ -119,15 +150,21 @@ def run(T: int = 25, n_requests: int = 24, max_batch: int = 8):
         for a, b in zip(async_results, sync_results))
 
     # -- overlap isolated: same geometry, blocking vs double-buffered --------
+    block_mark = _fetch_mark(engine)
     t0 = time.perf_counter()
     ref = engine.run_batch(requests, batch_size=slots)
     block_wall = time.perf_counter() - t0
+    block_rounds = _per_round(engine, block_mark,
+                              len(engine.last_dispatches))
     queue2 = RequestQueue()
     loop2 = ServingLoop(registry, queue2, batcher)
+    overlap_mark = _fetch_mark(engine)
     t0 = time.perf_counter()
     tickets2 = [queue2.submit(r, key) for r in requests]
     loop2.drain()
     overlap_wall = time.perf_counter() - t0
+    overlap_rounds = _per_round(engine, overlap_mark,
+                                loop2.stats["dispatches"])
     bitwise = all(
         np.array_equal(np.asarray(t.result().trajectory),
                        np.asarray(r.trajectory))
@@ -159,6 +196,7 @@ def run(T: int = 25, n_requests: int = 24, max_batch: int = 8):
     # slowest lane; device NFE comes from the per-dispatch reports
     base_engine = registry.get(key)
     base_mark = len(base_engine.last_dispatches)
+    base_fetch_mark = _fetch_mark(base_engine)
     queue3 = RequestQueue()
     loop3 = ServingLoop(registry, queue3, batcher)
     t0 = time.perf_counter()
@@ -171,6 +209,9 @@ def run(T: int = 25, n_requests: int = 24, max_batch: int = 8):
     base_waste = np.mean([d["wasted_iter_frac"]
                           for d in base_engine.last_dispatches[base_mark:]])
     base_reqps = n_requests / base_wall
+    base_rounds = _per_round(
+        base_engine, base_fetch_mark,
+        len(base_engine.last_dispatches) - base_mark)
 
     # stepwise: lanes retire at their own tau/quality_steps and refill
     registry.warmup(key, slots=slots, chunk_iters=chunk_iters)  # compile
@@ -184,6 +225,12 @@ def run(T: int = 25, n_requests: int = 24, max_batch: int = 8):
     report = loop4.bank_reports()[key]
     step_nfe = report["device_nfe"]
     step_reqps = n_requests / step_wall
+    # stepwise rounds = chunks stepped + the final harvest-only round; the
+    # protocol guarantee is at most ONE blocking poll per round
+    rounds4 = loop4.stats["chunks"] + 1
+    step_rounds = dict(
+        host_fetch_bytes_per_round=report["host_fetch_bytes"] / rounds4,
+        blocking_polls_per_round=report["blocking_polls"] / rounds4)
     # per-lane solves are scheduling-independent, so host placements match
     # bitwise; under TP-sharded params the stepwise/monolithic programs are
     # distinct XLA programs whose partial-sum fusion may differ by ulps —
@@ -205,6 +252,58 @@ def run(T: int = 25, n_requests: int = 24, max_batch: int = 8):
     n_tight_converged = sum(1 for r in step_results
                             if r.request.quality_steps is None
                             and r.converged)
+
+    # -- stepwise overhead: device-resident host protocol vs PR 4's --------
+    # staggered budgets (quality_steps 1..6 over chunk_iters=1 rounds, a
+    # quarter full-quality) retire lanes a FEW at a time — exactly where
+    # the old protocol hurt most: every small harvest fetched the entire
+    # slots x (T+1) x D bank plus residuals, and separate per-field polls.
+    ov_chunk = 1
+    stagger = [SampleRequest(label=i % 10, seed=900 + i,
+                             **({} if i % 4 == 0
+                                else dict(tau=1e-2,
+                                          quality_steps=1 + i % 6)))
+               for i in range(n_requests)]
+    ov_engine = registry.get(key)
+    queue5 = RequestQueue()
+    loop5 = ServingLoop(registry, queue5, batcher)
+    t0 = time.perf_counter()
+    tickets5 = [queue5.submit(r, key) for r in stagger]
+    loop5.drain()
+    ov_base_wall = time.perf_counter() - t0
+    [t.result() for t in tickets5]
+    ov_base_reqps = n_requests / ov_base_wall
+
+    registry.warmup(key, slots=slots, chunk_iters=ov_chunk)
+    queue6 = RequestQueue()
+    loop6 = ServingLoop(registry, queue6, batcher, chunk_iters=ov_chunk)
+    t0 = time.perf_counter()
+    tickets6 = [queue6.submit(r, key) for r in stagger]
+    loop6.drain()
+    ov_step_wall = time.perf_counter() - t0
+    [t.result() for t in tickets6]
+    ov_step_reqps = n_requests / ov_step_wall
+    ov_report = loop6.bank_reports()[key]
+    # reporting shares the round's cached poll: a second report must not
+    # add a blocking fetch
+    polls_before = ov_report["blocking_polls"]
+    ov_report = loop6.bank_reports()[key]
+    report_reuses_poll = ov_report["blocking_polls"] == polls_before
+
+    ov_rounds = loop6.stats["chunks"] + 1      # + final harvest-only round
+    new_bytes_round = ov_report["host_fetch_bytes"] / ov_rounds
+    new_polls_round = ov_report["blocking_polls"] / ov_rounds
+    # the PR 4 protocol's cost over the SAME schedule: every poll fetched
+    # finished/it/nfe/done as four host arrays (10 B/slot), every harvest
+    # that retired >= 1 lane fetched the whole bank trajectory AND r_last
+    # (residuals were fetched even for sequential specs), and report's
+    # extra poll re-blocked per call
+    lane_bytes = (T + 1) * int(np.prod(ov_engine.sample_shape)) * 4
+    legacy_bytes_round = (ov_report["blocking_polls"] * 10 * slots
+                          + ov_report["harvests"]
+                          * (slots * lane_bytes + slots * T * 4)) / ov_rounds
+    fetch_reduction = legacy_bytes_round / max(new_bytes_round, 1e-9)
+    ov_speedup = ov_step_reqps / ov_base_reqps
 
     tag = "mesh" if placement.is_sharded else "host"
     speedup = async_reqps / sync_reqps
@@ -232,14 +331,37 @@ def run(T: int = 25, n_requests: int = 24, max_batch: int = 8):
          f"{base_nfe / n_requests:.0f} ({nfe_reduction:.0%} lower);"
          f"early_exits={n_early};bitwise_equal={ee_bitwise};"
          f"max_rel_err={ee_rel_err:.1e}"),
+        (f"serve_async/ddim{T}/stepwise_overhead_k{ov_chunk}/{tag}",
+         ov_step_wall / n_requests * 1e6,
+         f"fetched/round={new_bytes_round / 1024:.1f}KiB vs PR4 "
+         f"{legacy_bytes_round / 1024:.1f}KiB ({fetch_reduction:.1f}x "
+         f"lower);blocking_polls/round={new_polls_round:.2f};"
+         f"reqps={ov_step_reqps:.2f} vs whole-batch {ov_base_reqps:.2f} "
+         f"({ov_speedup:.2f}x);report_reuses_poll={report_reuses_poll}"),
     ]
     common.write_bench_json("async", dict(
         T=T, n_requests=n_requests, slots=slots,
         placement=placement.describe(), devices=placement.num_devices,
         sync_reqps=sync_reqps, sync_p50_s=sync_p50, sync_p95_s=sync_p95,
         sync_dispatches=len(groups),
+        sync_host_fetch_bytes_per_round=sync_rounds[
+            "host_fetch_bytes_per_round"],
+        sync_blocking_polls_per_round=sync_rounds[
+            "blocking_polls_per_round"],
         async_reqps=async_reqps, async_p50_s=async_p50,
         async_p95_s=async_p95, async_dispatches=loop.stats["dispatches"],
+        async_host_fetch_bytes_per_round=async_rounds[
+            "host_fetch_bytes_per_round"],
+        async_blocking_polls_per_round=async_rounds[
+            "blocking_polls_per_round"],
+        overlap_blocking_host_fetch_bytes_per_round=block_rounds[
+            "host_fetch_bytes_per_round"],
+        overlap_blocking_polls_per_round=block_rounds[
+            "blocking_polls_per_round"],
+        overlap_async_host_fetch_bytes_per_round=overlap_rounds[
+            "host_fetch_bytes_per_round"],
+        overlap_async_blocking_polls_per_round=overlap_rounds[
+            "blocking_polls_per_round"],
         min_slot_utilization=util, speedup_vs_sync=speedup,
         overlap_only_ratio=overlap_ratio,
         bitwise_equal_same_geometry=bool(bitwise),
@@ -263,5 +385,26 @@ def run(T: int = 25, n_requests: int = 24, max_batch: int = 8):
         tight_requests_converged=n_tight_converged,
         tight_requests=sum(1 for r in mixed if r.quality_steps is None),
         bitwise_equal_vs_whole_batch=bool(ee_bitwise),
-        max_rel_err_vs_whole_batch=ee_rel_err))
+        max_rel_err_vs_whole_batch=ee_rel_err,
+        whole_batch_host_fetch_bytes_per_round=base_rounds[
+            "host_fetch_bytes_per_round"],
+        whole_batch_blocking_polls_per_round=base_rounds[
+            "blocking_polls_per_round"],
+        stepwise_host_fetch_bytes_per_round=step_rounds[
+            "host_fetch_bytes_per_round"],
+        stepwise_blocking_polls_per_round=step_rounds[
+            "blocking_polls_per_round"]))
+    common.write_bench_json("stepwise_overhead", dict(
+        T=T, n_requests=n_requests, slots=slots, chunk_iters=ov_chunk,
+        placement=placement.describe(), devices=placement.num_devices,
+        rounds=ov_rounds, harvests=ov_report["harvests"],
+        gather_launches=ov_report["gather_launches"],
+        host_fetch_bytes_per_round=new_bytes_round,
+        blocking_polls_per_round=new_polls_round,
+        pr4_host_fetch_bytes_per_round=legacy_bytes_round,
+        host_fetch_reduction_vs_pr4=fetch_reduction,
+        report_reuses_round_poll=bool(report_reuses_poll),
+        stepwise_reqps=ov_step_reqps,
+        whole_batch_reqps=ov_base_reqps,
+        speedup_vs_whole_batch=ov_speedup))
     return rows

@@ -24,7 +24,20 @@ Train a tiny DiT on synthetic latents, then:
      iteration-level continuous batching — draft-quality requests retire
      from the live solver state the moment THEIR budget is met, and the
      freed lane is refilled mid-solve instead of idling until the
-     batch's slowest member converges.
+     batch's slowest member converges.  The stepwise hot path is
+     device-resident: each chunk piggybacks a packed (slots, 4)
+     scheduling summary (ONE blocking poll per round, fetched
+     asynchronously one round ahead), and harvest gathers only the
+     RETIRED lanes' trajectory rows on device — the bank report's
+     `host_fetch_bytes` / `blocking_polls` / `gather_launches` counters
+     show exactly what crossed the host<->device boundary;
+  7. kernel routing: the solver's TAA Gram/apply passes — the two
+     memory-bound HBM sweeps of the Theorem 3.2 update — dispatch
+     through `repro.kernels.ops` (`use_pallas` on the `SamplerSpec`, or
+     `serve.py --use-pallas`).  The default (None) auto-selects: fused
+     Pallas kernels on TPU, the pure-jnp references elsewhere, so the
+     CPU path stays bitwise-identical; tests force the kernel path with
+     `use_pallas=True, interpret=True`.
 
     PYTHONPATH=src python examples/quickstart.py
     # multi-device placement demo on CPU:
@@ -175,6 +188,26 @@ def main():
           f"(whole-batch would hold every lane to the slowest)")
     assert served[2].early_stopped and served[2].iters == 4
     assert served[0].converged and not served[0].early_stopped
+    # the stepwise host protocol is device-resident: ONE blocking poll per
+    # round (the chunk's piggybacked summary, fetched a round ahead) and a
+    # retired-lanes-only gather at harvest — the counters prove it
+    rounds = max(report["blocking_polls"], 1)
+    print(f"host protocol: {report['host_fetch_bytes'] / rounds:.0f} B/round "
+          f"over {rounds} round(s), {report['gather_launches']} retired-lane "
+          f"gather(s) ({report['harvests']} harvest round(s))")
+    assert report["gather_launches"] == report["harvests"]
+
+    # --- 7. kernel routing: the solver inner loop through repro.kernels.ops -
+    # The TAA Gram/apply passes (the Theorem 3.2 update's two memory-bound
+    # HBM sweeps) dispatch through the kernel layer.  use_pallas=None (the
+    # default everywhere above) auto-selects Pallas on TPU and the pure-jnp
+    # refs elsewhere — forcing the refs explicitly is bitwise-identical, so
+    # the routing costs nothing off-TPU.
+    routed = run(get_sampler("taa", use_pallas=False), eps_fn, coeffs, xi)
+    same = bool(jnp.all(jnp.asarray(routed.x0) == jnp.asarray(par.x0)))
+    print(f"kernel routing: use_pallas=False (explicit jnp refs) bitwise-"
+          f"equal to the auto default: {same}")
+    assert same
 
 
 if __name__ == "__main__":

@@ -14,13 +14,25 @@ sums of per-timestep blocks, so ONE reverse cumulative sum over t gives all
 row blocks: O(T d m^2) total, two batched matmuls + T tiny solves — no
 gathers, MXU-shaped.  Validated against a literal per-block oracle in tests.
 
+The two memory-bound passes — the per-row Gram blocks and the history apply
+— dispatch through :mod:`repro.kernels.ops` (``taa_gram`` /
+``taa_rowwise_gamma`` / ``taa_apply``): fused Pallas HBM sweeps on TPU, the
+pure-jnp references elsewhere.  ``use_pallas=None`` (the default) lets the
+ops layer auto-select, so the CPU path runs the exact same jnp einsums as
+before and stays bitwise-identical; ``use_pallas``/``interpret`` ride on
+:class:`~repro.core.parataa.ParaTAAConfig` so tests can force the kernel
+path in interpret mode.
+
 Grams and solves run in float32 even for bf16 trajectories (the paper's
 fp16-stability observation for TAA; standard AA is the one that overflows).
 """
 from __future__ import annotations
 
-import jax
+from typing import Optional
+
 import jax.numpy as jnp
+
+from repro.kernels import ops as _ops
 
 
 def _suffix_sum(x, axis=0):
@@ -29,7 +41,9 @@ def _suffix_sum(x, axis=0):
 
 
 def anderson_update(x_rows, R, dX, dF, window_mask, *, mode: str,
-                    lam: float, safeguard_mask=None):
+                    lam: float, safeguard_mask=None,
+                    use_pallas: Optional[bool] = None,
+                    interpret: bool = False):
     """One accelerated update over the active window.
 
     x_rows: (T, D) current iterate rows 0..T-1
@@ -38,50 +52,45 @@ def anderson_update(x_rows, R, dX, dF, window_mask, *, mode: str,
     window_mask: (T,) bool — active rows [t1, t2]
     safeguard_mask: (T,) bool — rows whose *suffix* residuals have all
         converged; Theorem 3.6 forces those rows to the plain FP update.
+    use_pallas / interpret: kernel dispatch for the Gram/apply passes
+        (None = auto: Pallas on TPU, jnp refs elsewhere).
     Returns x_new rows (T, D) (only window rows are meaningful).
     """
     f32 = jnp.float32
     T, D = x_rows.shape
     m = dX.shape[0]
-    wmask = window_mask.astype(f32)[None, :, None]  # (1, T, 1)
 
     if mode == "fp":
         x_new = x_rows + R
         return jnp.where(window_mask[:, None], x_new, x_rows)
 
-    dFw = dF.astype(f32) * wmask
-    Rw = R.astype(f32) * wmask[0]
+    kw = dict(use_pallas=use_pallas, interpret=interpret)
+    wmask = window_mask.astype(f32)  # (T,)
 
-    # per-row Gram blocks: G[t] = F_t^T F_t (m,m); u[t] = F_t^T R_t (m,)
-    G = jnp.einsum("mtd,ntd->tmn", dFw, dFw)
-    u = jnp.einsum("mtd,td->tm", dFw, Rw)
-
-    eye = jnp.eye(m, dtype=f32)
     if mode == "taa":
-        M = _suffix_sum(G, axis=0) + lam * eye  # (T, m, m) suffix Grams
-        rhs = _suffix_sum(u, axis=0)            # (T, m)
-        gamma = jnp.linalg.solve(M, rhs[..., None])[..., 0]  # (T, m)
-    elif mode == "aa":
-        M = jnp.sum(G, axis=0) + lam * eye      # (m, m) global Gram
-        rhs = jnp.sum(u, axis=0)                # (m,)
-        g = jnp.linalg.solve(M, rhs)
-        gamma = jnp.broadcast_to(g[None], (T, m))
-    elif mode == "aa+":
-        # heuristic: global Gram inverse, suffix cross term (Appendix B)
-        M = jnp.sum(G, axis=0) + lam * eye
-        rhs = _suffix_sum(u, axis=0)            # (T, m)
-        gamma = jnp.linalg.solve(M[None], rhs[..., None])[..., 0]
+        # gram + suffix cumsum + T tiny solves, fused Gram pass in ops
+        gamma = _ops.taa_rowwise_gamma(dF, R, wmask, lam=lam, **kw)
     else:
-        raise ValueError(mode)
+        G, u = _ops.taa_gram(dF, R, wmask, **kw)  # (T,m,m), (T,m)
+        eye = jnp.eye(m, dtype=f32)
+        if mode == "aa":
+            M = jnp.sum(G, axis=0) + lam * eye      # (m, m) global Gram
+            rhs = jnp.sum(u, axis=0)                # (m,)
+            g = jnp.linalg.solve(M, rhs)
+            gamma = jnp.broadcast_to(g[None], (T, m))
+        elif mode == "aa+":
+            # heuristic: global Gram inverse, suffix cross term (Appendix B)
+            M = jnp.sum(G, axis=0) + lam * eye
+            rhs = _suffix_sum(u, axis=0)            # (T, m)
+            gamma = jnp.linalg.solve(M[None], rhs[..., None])[..., 0]
+        else:
+            raise ValueError(mode)
 
     if safeguard_mask is not None:
         gamma = jnp.where(safeguard_mask[:, None], 0.0, gamma)
 
-    # x_new_t = x_t + R_t - (dX_t + dF_t) @ gamma_t
-    corr = jnp.einsum("mtd,tm->td", (dX.astype(f32) + dF.astype(f32)), gamma)
-    x_new = x_rows.astype(f32) + Rw - corr * wmask[0]
-    x_new = x_new.astype(x_rows.dtype)
-    return jnp.where(window_mask[:, None], x_new, x_rows)
+    # x_new_t = x_t + R_t - (dX_t + dF_t) @ gamma_t on window rows
+    return _ops.taa_apply(x_rows, R, dX, dF, gamma, wmask, **kw)
 
 
 # ---------------------------------------------------------------------------

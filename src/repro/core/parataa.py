@@ -53,6 +53,10 @@ class ParaTAAConfig:
     s_max: int = 100           # max iterations
     safeguard: bool = True     # Theorem 3.6 post-processing
     t_init: int = 0            # 0 => fresh start (T_init = T)
+    use_pallas: Optional[bool] = None  # kernels.ops dispatch for the TAA
+                               # Gram/apply passes (None = auto: Pallas on
+                               # TPU, the bitwise-identical jnp refs elsewhere)
+    interpret: bool = False    # Pallas interpret mode (kernel tests on CPU)
 
 
 @jax.tree_util.register_dataclass
@@ -189,7 +193,8 @@ def _iterate(state: SolverState, static, cfg: ParaTAAConfig,
     mode = cfg.mode if cfg.history_m > 1 else "fp"
     x_rows_new = anderson_update(
         x[:T], R.astype(x.dtype), state.dX, dF, upd_mask,
-        mode=mode, lam=cfg.lam, safeguard_mask=guard)
+        mode=mode, lam=cfg.lam, safeguard_mask=guard,
+        use_pallas=cfg.use_pallas, interpret=cfg.interpret)
 
     x_new = jnp.concatenate([x_rows_new, x[T:]], axis=0)
 

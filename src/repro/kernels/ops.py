@@ -65,14 +65,23 @@ def rglru(a, b, *, use_pallas: Optional[bool] = None, interpret: bool = False):
     return _ref.rglru_ref(a, b)
 
 
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def taa_gram(dF, R, mask, *, use_pallas: Optional[bool] = None,
+             interpret: bool = False):
+    """Raw per-row Gram blocks G_t = F_t^T F_t, u_t = F_t^T R_t (masked) —
+    the memory-bound first pass every Anderson variant shares; the AA/AA+
+    variants reduce these blocks globally instead of via the TAA suffix
+    cumsum (see ``repro.core.anderson``)."""
+    if _pick(use_pallas):
+        return _taa_gram(dF, R, mask, interpret=interpret)
+    return _ref.taa_gram_ref(dF, R, mask)
+
+
 @functools.partial(jax.jit, static_argnames=("lam", "use_pallas", "interpret"))
 def taa_rowwise_gamma(dF, R, mask, *, lam: float = 1e-8,
                       use_pallas: Optional[bool] = None, interpret: bool = False):
     """Per-row TAA gammas via suffix-cumsum Grams (Theorem 3.2)."""
-    if _pick(use_pallas):
-        G, u = _taa_gram(dF, R, mask, interpret=interpret)
-    else:
-        G, u = _ref.taa_gram_ref(dF, R, mask)
+    G, u = taa_gram(dF, R, mask, use_pallas=use_pallas, interpret=interpret)
     m = dF.shape[0]
     Gs = jnp.flip(jnp.cumsum(jnp.flip(G, 0), 0), 0) + lam * jnp.eye(m)
     us = jnp.flip(jnp.cumsum(jnp.flip(u, 0), 0), 0)

@@ -145,13 +145,18 @@ def resolve_coeffs(args, T: int):
     return (ddim_coeffs if args.sampler == "ddim" else ddpm_coeffs)(T)
 
 
+#: --use-pallas CLI value -> SamplerSpec.use_pallas (None = backend auto)
+USE_PALLAS = {"auto": None, "on": True, "off": False}
+
+
 def resolve_spec(args, solver: str):
     """CLI solver flags -> SamplerSpec — ONE resolution shared by the sync
     and async paths, so the same flags always mean the same solver."""
     if solver == "seq":
         return get_sampler("seq")
     return get_sampler(solver, order_k=args.order_k,
-                       history_m=args.history_m, window=args.window)
+                       history_m=args.history_m, window=args.window,
+                       use_pallas=USE_PALLAS[args.use_pallas])
 
 
 def make_engine_factory(cfg, params, args, placement: Placement):
@@ -249,11 +254,15 @@ def serve_async(args, cfg, params, placement: Placement):
               f"iters={res.iters:3d} latency={ticket.latency_s:.2f}s{early}")
     if args.chunk_iters:
         for key, report in sorted(loop.bank_reports().items()):
+            rounds = max(report["blocking_polls"], 1)  # one poll per round
             print(f"{key.describe()}: {report['completed']} served over "
                   f"{report['refills']} refill(s), device iters "
                   f"{report['device_iters']} x {report['slots']} lanes, "
                   f"wasted lane-iters {report['wasted_iter_frac']:.0%}, "
-                  f"device NFE {report['device_nfe']}")
+                  f"device NFE {report['device_nfe']}; host protocol "
+                  f"{report['host_fetch_bytes'] / rounds:.0f} B/round "
+                  f"over {rounds} round(s), {report['gather_launches']} "
+                  f"retired-lane gather(s)")
     else:
         for key, engine in sorted(registry.engines().items()):
             observed = loop.batcher.observed(key) or {}
@@ -296,6 +305,12 @@ def main(argv=None):
     p.add_argument("--order-k", type=int, default=8)
     p.add_argument("--history-m", type=int, default=3)
     p.add_argument("--window", type=int, default=0)
+    p.add_argument("--use-pallas", default="auto",
+                   choices=sorted(USE_PALLAS),
+                   help="route the solver's TAA Gram/apply passes through "
+                        "the repro.kernels.ops Pallas kernels (auto = "
+                        "Pallas on TPU, bitwise-identical jnp refs "
+                        "elsewhere)")
     p.add_argument("--mesh", default="none", choices=["none"] + mesh_names(),
                    help="registered mesh to place the engine on "
                         "(none = single-device host placement)")

@@ -82,6 +82,16 @@ class LaneBank:
     not — SPMD), ``useful_iters``/``harvested_nfe`` accumulate per-lane
     progress at harvest, so ``wasted_iter_frac`` measures lane-iterations
     burned after the owning lane already finished (or on vacant lanes).
+
+    Host protocol state (the device-resident hot path): ``summary`` is the
+    packed (slots, 4) scheduling array the step program piggybacks
+    (finished/it/nfe/done) — its host copy starts asynchronously the moment
+    the chunk is enqueued, so the blocking ``device_get`` at the NEXT
+    round's harvest overlaps host scheduling with device compute.
+    ``poll_cache`` shares that ONE fetch between harvest and report within
+    a round (invalidated by step/refill).  ``host_fetch_bytes`` /
+    ``blocking_polls`` / ``gather_launches`` count what actually crossed
+    the host<->device boundary.
     """
     state: Any
     labels: Any                            # (slots,) device int32
@@ -94,6 +104,12 @@ class LaneBank:
     completed: int = 0
     refills: int = 0
     pack_s: float = 0.0
+    summary: Any = None                    # (slots, 4) device int32
+    poll_cache: Optional[Dict] = None      # this round's host-side poll
+    host_fetch_bytes: int = 0
+    blocking_polls: int = 0
+    gather_launches: int = 0
+    harvests: int = 0                      # rounds that retired >= 1 lane
 
     def free_lanes(self) -> List[int]:
         return [i for i, r in enumerate(self.requests) if r is None]
@@ -141,7 +157,9 @@ class SamplingEngine:
         self._jitted = {}   # diagnostics flag -> jitted batched program
         self._stepwise_jits = {}  # "init"/"merge"/("step", K) -> program
         self.stats = {"traces": 0, "stepwise_traces": 0, "batches": 0,
-                      "requests": 0, "wall_s": 0.0, "pack_s": 0.0}
+                      "requests": 0, "wall_s": 0.0, "pack_s": 0.0,
+                      "host_fetch_bytes": 0, "blocking_polls": 0,
+                      "gather_launches": 0}
         self.last_batch_walls = []  # per-dispatch walls of the last run_batch
         self.last_dispatches: List[Dict] = []  # per-dispatch reports
 
@@ -340,6 +358,9 @@ class SamplingEngine:
         # always has one), serializing unpack against the next dispatch
         trajs = np.asarray(pending.trajs)
         info = {k: np.asarray(v) for k, v in pending.info.items()}
+        self.stats["blocking_polls"] += 1
+        self.stats["host_fetch_bytes"] += trajs.nbytes + sum(
+            v.nbytes for v in info.values())
 
         # the vmapped program runs every slot until the SLOWEST lane's
         # iteration count: wasted_iter_frac is the fraction of lane-
@@ -350,6 +371,9 @@ class SamplingEngine:
         device_iters = int(all_iters.max()) if all_iters.size else 0
         self.last_dispatches.append(dict(
             wall_s=wall, pack_s=pending.pack_s,
+            host_fetch_bytes=trajs.nbytes + sum(v.nbytes
+                                                for v in info.values()),
+            blocking_polls=1,
             requests=n_real, slots=pending.slots,
             slot_utilization=plc.slot_utilization(n_real, pending.slots),
             devices=plc.num_devices, data_shards=plc.data_shards,
@@ -430,11 +454,14 @@ class SamplingEngine:
     # THEIR OWN solve finishes (convergence, max_iters, or a Sec 4.1
     # quality-steps early exit), and `stepwise_refill` packs fresh requests
     # into the vacated lanes of the SAME live state — so the compiled step
-    # program never retraces.  Four programs total per engine: open (vacant
+    # program never retraces.  Five programs total per engine: open (vacant
     # bank), init (ONE lane — refill packs/draws exactly one request's
     # noise, not a bank-width batch), merge (broadcast the one fresh lane
-    # into the masked slot), and step; ``stats["stepwise_traces"]`` must
-    # stay at 4 across refills.
+    # into the masked slot), step (which also emits the packed (slots, 4)
+    # scheduling summary so polling fetches ONE tiny array instead of four
+    # state fields), and gather (harvest fetches only the RETIRED lanes'
+    # trajectory rows instead of the whole bank);
+    # ``stats["stepwise_traces"]`` must stay at 5 across refills.
 
     def _stepwise_cfg(self):
         return self.spec.stepwise_config(self.coeffs.T)
@@ -510,8 +537,31 @@ class SamplingEngine:
                 self.stats["stepwise_traces"] += 1
                 state = self._constrain_state(state)
                 labels = plc.constrain_batch(labels)
-                return jax.vmap(lambda s, lab: lane_step(params, s, lab),
-                                **vmap_kw)(state, labels)
+                out = jax.vmap(lambda s, lab: lane_step(params, s, lab),
+                               **vmap_kw)(state, labels)
+                # piggybacked poll: one packed (slots, 4) scheduling array
+                # rides out of the chunk, so the host never issues a
+                # separate per-field fetch to learn who finished
+                summary = jnp.stack(
+                    [out.finished.astype(jnp.int32), out.it, out.nfe,
+                     out.done.astype(jnp.int32)], axis=-1)
+                return out, summary
+
+        elif kind == "gather":
+            # harvest-time device-side gather: only the RETIRED lanes' rows
+            # cross to the host.  idx is a fixed (slots,)-length lane-index
+            # vector (padded by repeating the first retired lane), so this
+            # compiles exactly once; the host fetches just the first
+            # len(ready) rows of the output.  Sequential specs discard
+            # residuals, so their gather program never touches r_last.
+            seq = self.spec.is_sequential
+
+            def program(x, r_last, idx):
+                self.stats["stepwise_traces"] += 1
+                xg = jnp.take(x, idx, axis=0)
+                if seq:
+                    return xg, None
+                return xg, jnp.take(r_last, idx, axis=0)
 
         else:
             raise ValueError(f"unknown stepwise program {kind!r}")
@@ -530,8 +580,9 @@ class SamplingEngine:
     def stepwise_open(self, slots: int, *, chunk_iters: int) -> LaneBank:
         """Open an all-vacant LaneBank at the engine's fixed slot geometry
         (every lane inits ``finished``, so chunks no-op it until refill).
-        Compiles the open program; init/merge compile on the first refill
-        and the step program on the first ``stepwise_step``."""
+        Compiles the open program; init/merge compile on the first refill,
+        the step program on the first ``stepwise_step``, and the gather on
+        the first harvest that retires a lane."""
         if chunk_iters < 1:
             raise ValueError(f"chunk_iters must be >= 1, got {chunk_iters}")
         B = self.placement.round_batch(slots)
@@ -586,53 +637,112 @@ class SamplingEngine:
                 bank.state, fresh, bank.labels, labels, mask)
         for lane, req in zip(lanes, requests):
             bank.requests[lane] = req
+        # the pre-merge summary no longer describes the refilled lanes —
+        # drop it; the next poll (rare: only a report issued before the
+        # next step) falls back to reading the state fields directly
+        bank.summary = None
+        bank.poll_cache = None
         bank.refills += 1
         bank.pack_s += time.time() - t0
 
     def stepwise_step(self, bank: LaneBank) -> None:
         """Advance every lane by ``bank.chunk_iters`` guarded solver
-        iterations (non-blocking: JAX async dispatch)."""
+        iterations (non-blocking: JAX async dispatch) and start the
+        piggybacked (slots, 4) scheduling summary's device->host copy —
+        by the time the NEXT round's harvest polls, the bytes are already
+        on the host and the ``device_get`` returns without stalling."""
         with self.placement.activations():
-            bank.state = self._stepwise_program(
+            bank.state, summary = self._stepwise_program(
                 "step", bank.chunk_iters)(self.params, bank.state,
                                           bank.labels)
+        bank.summary = summary
+        bank.poll_cache = None
+        if hasattr(summary, "copy_to_host_async"):
+            summary.copy_to_host_async()
         bank.device_iters += bank.chunk_iters
 
+    def _count_fetch(self, bank: LaneBank, nbytes: int, *,
+                     polls: int = 0, gathers: int = 0) -> None:
+        bank.host_fetch_bytes += nbytes
+        bank.blocking_polls += polls
+        bank.gather_launches += gathers
+        self.stats["host_fetch_bytes"] += nbytes
+        self.stats["blocking_polls"] += polls
+        self.stats["gather_launches"] += gathers
+
     def stepwise_poll(self, bank: LaneBank) -> Dict[str, np.ndarray]:
-        """Fetch the small per-lane scheduling fields (blocks on the chunk
-        in flight; trajectories stay on device until harvest)."""
-        state = bank.state
-        finished, it, nfe, done = jax.device_get(
-            (state.finished, state.it, state.nfe, state.done))
-        return dict(finished=np.asarray(finished), iters=np.asarray(it),
-                    nfe=np.asarray(nfe), done=np.asarray(done))
+        """The round's per-lane scheduling view (blocks on the chunk in
+        flight; trajectories stay on device until harvest).  ONE blocking
+        fetch per round: the first caller materializes the piggybacked
+        (slots, 4) summary the step program emitted (whose host copy was
+        started asynchronously at step time) and caches it on the bank;
+        harvest and report share the cache until step/refill invalidate
+        it."""
+        if bank.poll_cache is not None:
+            return bank.poll_cache
+        if bank.summary is not None:
+            packed = np.asarray(bank.summary)
+            polled = dict(finished=packed[:, 0].astype(bool),
+                          iters=packed[:, 1], nfe=packed[:, 2],
+                          done=packed[:, 3].astype(bool))
+            self._count_fetch(bank, packed.nbytes, polls=1)
+        else:
+            # no chunk has run since open/refill: read the state fields
+            state = bank.state
+            finished, it, nfe, done = jax.device_get(
+                (state.finished, state.it, state.nfe, state.done))
+            polled = dict(finished=np.asarray(finished),
+                          iters=np.asarray(it), nfe=np.asarray(nfe),
+                          done=np.asarray(done))
+            self._count_fetch(bank, sum(v.nbytes for v in polled.values()),
+                              polls=1)
+        bank.poll_cache = polled
+        return polled
 
     def stepwise_harvest(self, bank: LaneBank):
         """Retire every occupied lane whose OWN solve has finished: returns
         ``[(lane, SampleResult), ...]`` and vacates those lanes (their state
-        stays ``finished``, so subsequent chunks no-op them until refill)."""
+        stays ``finished``, so subsequent chunks no-op them until refill).
+
+        Device-resident: only the RETIRED lanes' trajectory rows cross to
+        the host — one gather launch + a ``len(ready) x (T+1) x D`` fetch
+        instead of the whole ``slots``-wide bank — and the residual fetch
+        is skipped entirely for sequential specs (which discard it)."""
+        if not any(req is not None for req in bank.requests):
+            return []                       # idle bank: nothing to poll
         polled = self.stepwise_poll(bank)
         ready = [i for i, req in enumerate(bank.requests)
                  if req is not None and polled["finished"][i]]
         if not ready:
             return []
         T = self.coeffs.T
-        trajs = np.asarray(bank.state.x).reshape(
-            (bank.slots, T + 1) + self.sample_shape)
-        residuals = np.asarray(bank.state.r_last)
+        n = len(ready)
+        idx = np.asarray(ready + [ready[0]] * (bank.slots - n), np.int32)
+        with self.placement.activations():
+            xg, rg = self._stepwise_program("gather")(
+                bank.state.x, bank.state.r_last, jnp.asarray(idx))
+        # fetch ONLY the first n gathered rows (the padding rows repeat
+        # ready[0] and never leave the device)
+        trajs = np.asarray(xg[:n]).reshape((n, T + 1) + self.sample_shape)
+        fetched = trajs.nbytes
+        residuals = None
+        if rg is not None:
+            residuals = np.asarray(rg[:n])
+            fetched += residuals.nbytes
+        self._count_fetch(bank, fetched, gathers=1)
+        bank.harvests += 1
         out = []
-        for lane in ready:
+        for j, lane in enumerate(ready):
             req = bank.requests[lane]
             iters = int(polled["iters"][lane])
             nfe = int(polled["nfe"][lane])
             converged = bool(polled["done"][lane])
             out.append((lane, SampleResult(
-                x0=trajs[lane, 0], trajectory=trajs[lane],
+                x0=trajs[j, 0], trajectory=trajs[j],
                 iters=iters, nfe=nfe, converged=converged,
                 early_stopped=self.spec.request_early_stopped(
                     req, T, iters, converged),
-                residuals=None if self.spec.is_sequential
-                else residuals[lane],
+                residuals=None if residuals is None else residuals[j],
                 request=req)))
             bank.requests[lane] = None
             bank.useful_iters += iters
@@ -642,7 +752,9 @@ class SamplingEngine:
 
     def stepwise_report(self, bank: LaneBank) -> Dict:
         """Work-accounting snapshot of a bank, shaped like a
-        ``last_dispatches`` entry (feeds ``Batcher.note`` / benchmarks)."""
+        ``last_dispatches`` entry (feeds ``Batcher.note`` / benchmarks).
+        Reuses the round's cached poll when harvest already paid for it —
+        reporting never adds a second blocking fetch to a round."""
         polled = self.stepwise_poll(bank)
         live_iters = int(sum(polled["iters"][i]
                              for i, r in enumerate(bank.requests)
@@ -653,6 +765,10 @@ class SamplingEngine:
             completed=bank.completed, refills=bank.refills,
             occupied=bank.occupied, pack_s=bank.pack_s,
             useful_iters=useful,
+            host_fetch_bytes=bank.host_fetch_bytes,
+            blocking_polls=bank.blocking_polls,
+            gather_launches=bank.gather_launches,
+            harvests=bank.harvests,
             devices=self.placement.num_devices,
             **self._work_report(useful, bank.device_iters, bank.slots))
 
@@ -665,7 +781,9 @@ class SamplingEngine:
         self.stats = {"traces": self.stats["traces"],
                       "stepwise_traces": self.stats["stepwise_traces"],
                       "batches": 0, "requests": 0,
-                      "wall_s": 0.0, "pack_s": 0.0}
+                      "wall_s": 0.0, "pack_s": 0.0,
+                      "host_fetch_bytes": 0, "blocking_polls": 0,
+                      "gather_launches": 0}
         self.last_batch_walls = []
         self.last_dispatches = []
 

@@ -9,7 +9,7 @@ explicitly where they differ.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Optional
 
 import numpy as np
 
@@ -32,6 +32,9 @@ class SamplerSpec:
     lam:       Gram regularizer (Remark 3.3).
     safeguard: Theorem 3.6 post-processing.
     s_max:     max iterations (0 => 2*T heuristic).
+    use_pallas: kernel routing for the solver's TAA Gram/apply passes
+               (``repro.kernels.ops``): None = auto (Pallas on TPU, the
+               bitwise-identical jnp refs elsewhere), True/False force it.
     """
     name: str
     solver: str = "taa"
@@ -42,6 +45,7 @@ class SamplerSpec:
     lam: float = 1e-8
     safeguard: bool = True
     s_max: int = 0
+    use_pallas: Optional[bool] = None
 
     @property
     def is_sequential(self) -> bool:
@@ -104,7 +108,8 @@ class SamplerSpec:
             order_k=self.order_k if self.order_k != FULL_ORDER else T,
             history_m=self.history_m, window=self.window, mode=self.solver,
             tau=self.tau, lam=self.lam, s_max=self.s_max_for(T),
-            safeguard=self.safeguard, t_init=t_init)
+            safeguard=self.safeguard, t_init=t_init,
+            use_pallas=self.use_pallas)
 
     def stepwise_config(self, T: int) -> ParaTAAConfig:
         """Resolve this spec for the resumable stepwise driver.  Unlike

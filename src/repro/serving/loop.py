@@ -121,12 +121,19 @@ class ServingLoop:
     def _pump_stepwise(self, *, flush: bool = False) -> int:
         """harvest -> refill -> advance, every live/pending key per round.
 
-        Harvest first resolves any lane whose own solve finished during the
-        previous chunk (blocking on that chunk — the step at the end of the
-        round is async, so host scheduling overlaps device compute);
-        refill admission is :meth:`Batcher.plan_refill` — free lanes of an
-        ACTIVE bank admit immediately (work-conserving: the chunk runs
-        anyway), an idle bank applies the usual fill-or-deadline gate."""
+        One-round-lag polling: ``stepwise_step`` at the END of a round both
+        enqueues the chunk (JAX async dispatch) and starts the
+        device->host copy of its piggybacked (slots, 4) scheduling
+        summary, so the blocking poll inside the NEXT round's harvest
+        finds the bytes already on the host — host scheduling (refill
+        packing, queue work, OTHER keys' rounds) overlaps device compute,
+        and each round issues exactly ONE blocking fetch per live key
+        (harvest and report share the round's cached poll).  Harvest then
+        retires finished lanes with a device-side gather of just those
+        lanes' rows; refill admission is :meth:`Batcher.plan_refill` —
+        free lanes of an ACTIVE bank admit immediately (work-conserving:
+        the chunk runs anyway), an idle bank applies the usual
+        fill-or-deadline gate."""
         now = self.queue.clock()
         admitted = 0
 
@@ -226,7 +233,14 @@ class ServingLoop:
         self._lane_tickets.pop(key, None)
 
     def bank_reports(self) -> Dict:
-        """Per-key stepwise work accounting (see ``stepwise_report``)."""
+        """Per-key stepwise work accounting (see ``stepwise_report``).
+
+        Single-consumer like ``pump``/``drain``: ``stepwise_report`` shares
+        the round's cached poll on the live bank, so reporting from a
+        foreign thread while the background pump owns the banks would race
+        the cache's step/refill invalidation — report after ``stop()`` (or
+        between synchronous pumps) instead."""
+        self._assert_not_threaded()
         return {key: self.registry.get(key).stepwise_report(bank)
                 for key, bank in self._banks.items()}
 

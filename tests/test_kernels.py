@@ -126,6 +126,67 @@ def test_ops_kernel_taa_gamma_matches_core_anderson():
                                rtol=1e-3, atol=1e-3)
 
 
+@pytest.mark.parametrize("mode", ["fp", "aa", "aa+", "taa"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_routed_anderson_update_interpret_matches_jnp(mode, dtype):
+    """The kernels.ops-routed anderson_update with the Pallas path forced
+    (interpret mode on CPU) matches the pure-jnp ref routing across every
+    Anderson mode and dtype — the acceptance gate for dispatching the
+    solver inner loop through the kernel layer."""
+    from repro.core.anderson import anderson_update
+    T, D, m = 14, 96, 3
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (T, D)).astype(dtype)
+    R = (jax.random.normal(ks[1], (T, D)) * 0.3).astype(dtype)
+    dX = (jax.random.normal(ks[2], (m, T, D)) * 0.1).astype(dtype)
+    dF = (jax.random.normal(ks[3], (m, T, D)) * 0.1).astype(dtype)
+    wmask = jnp.arange(T) >= 3
+    guard = jnp.arange(T) >= T - 2
+    kw = dict(mode=mode, lam=1e-6, safeguard_mask=guard)
+    ref_out = anderson_update(x, R, dX, dF, wmask, use_pallas=False, **kw)
+    pal_out = anderson_update(x, R, dX, dF, wmask, use_pallas=True,
+                              interpret=True, **kw)
+    err = float(jnp.max(jnp.abs(pal_out.astype(jnp.float32)
+                                - ref_out.astype(jnp.float32))))
+    assert err < _tol(dtype), (mode, err)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_routed_anderson_update_matches_literal_theorem_3_2(use_pallas):
+    """Both routings of the taa mode reproduce the literal per-row-block
+    Theorem 3.2 oracle over the full window."""
+    from repro.core.anderson import anderson_update, taa_update_literal
+    T, D, m = 10, 64, 3
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (T, D))
+    R = jax.random.normal(ks[1], (T, D)) * 0.3
+    dX = jax.random.normal(ks[2], (m, T, D)) * 0.1
+    dF = jax.random.normal(ks[3], (m, T, D)) * 0.1
+    wmask = jnp.ones((T,), bool)
+    got = anderson_update(x, R, dX, dF, wmask, mode="taa", lam=1e-6,
+                          use_pallas=use_pallas, interpret=use_pallas)
+    want = taa_update_literal(x, R, dX, dF, 0, T - 1, 1e-6)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3, atol=2e-3)
+
+
+def test_ops_taa_gram_wrapper_dispatches_to_ref_on_cpu():
+    """The new ops.taa_gram wrapper (shared by the aa/aa+ routings) auto-
+    selects the jnp ref off-TPU and matches the kernel in interpret mode."""
+    m, t, d = 3, 12, 256
+    dF = jax.random.normal(KEY, (m, t, d))
+    R = jax.random.normal(jax.random.fold_in(KEY, 1), (t, d))
+    mask = (jnp.arange(t) >= 2).astype(jnp.float32)
+    G_auto, u_auto = ops.taa_gram(dF, R, mask)           # CPU -> ref
+    G_ref, u_ref = ref.taa_gram_ref(dF, R, mask)
+    assert np.array_equal(np.asarray(G_auto), np.asarray(G_ref))
+    assert np.array_equal(np.asarray(u_auto), np.asarray(u_ref))
+    G_k, u_k = ops.taa_gram(dF, R, mask, use_pallas=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(G_k), np.asarray(G_ref),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(u_k), np.asarray(u_ref),
+                               rtol=1e-3, atol=1e-3)
+
+
 def test_ops_dispatch_cpu_uses_ref():
     q = jax.random.normal(KEY, (1, 2, 128, 64))
     k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 2, 128, 64))

@@ -139,6 +139,80 @@ def test_taa_suffix_matches_literal_theorem_3_2():
     np.testing.assert_allclose(np.asarray(ours)[3:], lit[3:], rtol=2e-3, atol=2e-3)
 
 
+@pytest.mark.parametrize("mode,m", [("fp", 1), ("aa", 3), ("aa+", 3),
+                                    ("taa", 3)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_routed_solver_interpret_matches_default(mode, m, dtype):
+    """Full-solver acceptance for the kernels.ops routing: sample() with
+    the Pallas path forced (interpret mode on CPU) converges to the same
+    trajectory as the default jnp-ref routing, every mode x dtype."""
+    coeffs = ddim_coeffs(12)
+    eps_fn = make_oracle_denoiser(D)
+    xi = draw_noises(jax.random.PRNGKey(11), coeffs, (D,))
+    kw = dict(order_k=6, history_m=m, mode=mode, tau=1e-3, s_max=60)
+    traj, info = sample(eps_fn, coeffs, ParaTAAConfig(**kw), xi, dtype=dtype)
+    traj_k, info_k = sample(eps_fn, coeffs,
+                            ParaTAAConfig(use_pallas=True, interpret=True,
+                                          **kw), xi, dtype=dtype)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-3
+    err = float(jnp.max(jnp.abs(traj_k.astype(jnp.float32)
+                                - traj.astype(jnp.float32))))
+    scale = float(jnp.max(jnp.abs(traj.astype(jnp.float32)))) + 1e-9
+    assert err < tol * scale, (mode, err, scale)
+    assert bool(info_k["converged"]) == bool(info["converged"])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cpu_default_routing_bitwise_unchanged(dtype):
+    """The CPU default (use_pallas=None -> jnp refs) is bitwise-identical
+    to the explicit jnp routing AND to an inline transcription of the
+    pre-routing einsum pipeline, for sample and sample_recording — the
+    kernels.ops dispatch layer must cost nothing numerically off-TPU."""
+    from repro.core.anderson import _suffix_sum
+    coeffs = ddim_coeffs(15)
+    eps_fn = make_oracle_denoiser(D)
+    xi = draw_noises(jax.random.PRNGKey(12), coeffs, (D,))
+    kw = dict(order_k=6, history_m=3, mode="taa", tau=1e-3, s_max=50)
+    traj, info = sample(eps_fn, coeffs, ParaTAAConfig(**kw), xi, dtype=dtype)
+    traj_r, info_r = sample(eps_fn, coeffs,
+                            ParaTAAConfig(use_pallas=False, **kw), xi,
+                            dtype=dtype)
+    np.testing.assert_array_equal(np.asarray(traj), np.asarray(traj_r))
+    assert int(info["iters"]) == int(info_r["iters"])
+    rec, irec = sample_recording(eps_fn, coeffs, ParaTAAConfig(**kw), xi,
+                                 dtype=dtype)
+    rec_r, irec_r = sample_recording(eps_fn, coeffs,
+                                     ParaTAAConfig(use_pallas=False, **kw),
+                                     xi, dtype=dtype)
+    np.testing.assert_array_equal(np.asarray(rec), np.asarray(rec_r))
+    np.testing.assert_array_equal(np.asarray(irec["res_history"]),
+                                  np.asarray(irec_r["res_history"]))
+
+    # one anderson step against the inline pre-routing einsum pipeline
+    rng = np.random.default_rng(2)
+    T, m = 9, 3
+    x = jnp.asarray(rng.normal(size=(T, D)), jnp.float32).astype(dtype)
+    R = jnp.asarray(rng.normal(size=(T, D)) * 0.3, jnp.float32).astype(dtype)
+    dX = jnp.asarray(rng.normal(size=(m, T, D)) * 0.1,
+                     jnp.float32).astype(dtype)
+    dF = jnp.asarray(rng.normal(size=(m, T, D)) * 0.1,
+                     jnp.float32).astype(dtype)
+    wmask = jnp.asarray(np.arange(T) >= 2)
+    got = anderson_update(x, R, dX, dF, wmask, mode="taa", lam=1e-8)
+    f32 = jnp.float32
+    wm = wmask.astype(f32)[None, :, None]
+    dFw = dF.astype(f32) * wm
+    Rw = R.astype(f32) * wm[0]
+    G = jnp.einsum("mtd,ntd->tmn", dFw, dFw)
+    u = jnp.einsum("mtd,td->tm", dFw, Rw)
+    M = _suffix_sum(G, axis=0) + 1e-8 * jnp.eye(m, dtype=f32)
+    gamma = jnp.linalg.solve(M, _suffix_sum(u, axis=0)[..., None])[..., 0]
+    corr = jnp.einsum("mtd,tm->td", dX.astype(f32) + dF.astype(f32), gamma)
+    want = (x.astype(f32) + Rw - corr * wm[0]).astype(x.dtype)
+    want = jnp.where(wmask[:, None], want, x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 def _drive_chunked(eps_fn, coeffs, cfg, xi, chunk, **init_kw):
     """Drive init_state/step_chunk across host boundaries until finished."""
     state = init_state(coeffs, cfg, xi, **init_kw)

@@ -312,6 +312,140 @@ def test_dispatch_reports_per_lane_iters_and_wasted_frac():
     assert report["device_nfe"] == report["device_iters"] * 2 * eng.window
 
 
+# --- stepwise host protocol (device-resident serving hot path) ---------------
+
+def _drain_bank(eng, bank):
+    """Drive a bank until every lane retires; returns [(lane, result)...]."""
+    out = []
+    guard = 0
+    while any(r is not None for r in bank.requests):
+        eng.stepwise_step(bank)
+        out.extend(eng.stepwise_harvest(bank))
+        guard += 1
+        assert guard < 1000
+    return out
+
+
+def test_stepwise_harvest_gathers_only_retired_lanes():
+    """Tentpole acceptance: harvest fetches len(ready) x (T+1) x D rows via
+    the compiled-once gather program, not the slots-wide bank, and the
+    whole protocol compiles exactly FIVE stepwise programs."""
+    T = 16
+    eng = make_engine(ddim_coeffs(T), get_sampler("taa"))
+    bank = eng.stepwise_open(4, chunk_iters=1)
+    # one lane retires long before the rest: quality_steps=1 vs tolerance
+    reqs = [SampleRequest(label=0, seed=1, quality_steps=1)] + \
+        [SampleRequest(label=i % N_LABELS, seed=2 + i) for i in range(3)]
+    eng.stepwise_refill(bank, [0, 1, 2, 3], reqs)
+    eng.stepwise_step(bank)
+    mark = bank.host_fetch_bytes
+    [(lane, res)] = eng.stepwise_harvest(bank)
+    assert lane == 0 and res.early_stopped and res.iters == 1
+    lane_bytes = (T + 1) * D * 4
+    fetched = bank.host_fetch_bytes - mark
+    # ONE retired lane's trajectory + its residual row + the (slots, 4)
+    # packed poll — nowhere near the full 4-lane bank
+    assert fetched == lane_bytes + T * 4 + bank.slots * 4 * 4
+    assert bank.gather_launches == 1 and bank.harvests == 1
+    full_bank = bank.slots * (lane_bytes + T * 4)
+    assert fetched < full_bank / 2
+    # harvested trajectory matches the lane's own solo solve bitwise
+    [solo] = make_engine(ddim_coeffs(T), get_sampler("taa")).run_batch(
+        [reqs[0]])
+    np.testing.assert_array_equal(np.asarray(res.trajectory),
+                                  np.asarray(solo.trajectory))
+    _drain_bank(eng, bank)
+    assert eng.stats["stepwise_traces"] == 5   # open/init/merge/step/gather
+    assert eng.stats["gather_launches"] == bank.gather_launches
+
+
+def test_stepwise_poll_piggybacked_cached_and_invalidated():
+    """One blocking poll per round: the step program's packed (slots, 4)
+    summary is fetched once, harvest/report share the cached copy, and
+    step/refill invalidate it."""
+    T = 12
+    eng = make_engine(ddim_coeffs(T), get_sampler("taa"))
+    bank = eng.stepwise_open(2, chunk_iters=2)
+    eng.stepwise_refill(bank, [0, 1],
+                        [SampleRequest(label=0, seed=3, quality_steps=2),
+                         SampleRequest(label=1, seed=4)])
+    eng.stepwise_step(bank)
+    assert bank.summary is not None and bank.poll_cache is None
+    polls0 = bank.blocking_polls
+    polled = eng.stepwise_poll(bank)
+    assert bank.blocking_polls == polls0 + 1
+    # second poll, harvest, and report all reuse the round's cache
+    assert eng.stepwise_poll(bank) is polled
+    harvested = eng.stepwise_harvest(bank)
+    eng.stepwise_report(bank)
+    assert bank.blocking_polls == polls0 + 1
+    assert [lane for lane, _ in harvested] == [0]
+    # stepping invalidates: the NEXT round pays exactly one fresh poll
+    eng.stepwise_step(bank)
+    assert bank.poll_cache is None
+    eng.stepwise_poll(bank)
+    assert bank.blocking_polls == polls0 + 2
+    # refill drops the stale pre-merge summary: the refilled lane must not
+    # look finished to the next poll
+    eng.stepwise_refill(bank, [0], [SampleRequest(label=2, seed=5)])
+    assert bank.summary is None and bank.poll_cache is None
+    polled = eng.stepwise_poll(bank)
+    assert not polled["finished"][0] and polled["iters"][0] == 0
+    _drain_bank(eng, bank)
+
+
+def test_stepwise_seq_spec_skips_residual_fetch():
+    """Sequential specs discard residuals: their gather program never
+    fetches r_last, and the harvested results carry residuals=None."""
+    T = 8
+    eng = make_engine(ddim_coeffs(T), get_sampler("seq"))
+    bank = eng.stepwise_open(2, chunk_iters=T)
+    eng.stepwise_refill(bank, [0, 1], [SampleRequest(label=0, seed=7),
+                                       SampleRequest(label=1, seed=8)])
+    eng.stepwise_step(bank)
+    mark = bank.host_fetch_bytes
+    results = eng.stepwise_harvest(bank)
+    assert len(results) == 2
+    assert all(res.residuals is None for _, res in results)
+    fetched = bank.host_fetch_bytes - mark
+    # 2 lanes' trajectories + packed poll; NO T x 4 residual rows
+    assert fetched == 2 * (T + 1) * D * 4 + bank.slots * 4 * 4
+    # a taa engine at the same geometry DOES fetch its residual rows
+    eng2 = make_engine(ddim_coeffs(T), get_sampler("taa"))
+    bank2 = eng2.stepwise_open(2, chunk_iters=2)
+    eng2.stepwise_refill(bank2, [0], [SampleRequest(label=0, seed=7,
+                                                    quality_steps=2)])
+    eng2.stepwise_step(bank2)
+    mark2 = bank2.host_fetch_bytes
+    [(_, res2)] = eng2.stepwise_harvest(bank2)
+    assert res2.residuals is not None and res2.residuals.shape == (T,)
+    assert bank2.host_fetch_bytes - mark2 == \
+        (T + 1) * D * 4 + T * 4 + bank2.slots * 4 * 4
+
+
+def test_stepwise_report_and_stats_expose_protocol_counters():
+    """stepwise_report and engine stats carry the host-protocol counters
+    (host_fetch_bytes / blocking_polls / gather_launches / harvests)."""
+    eng = make_engine(ddim_coeffs(10), get_sampler("taa"))
+    bank = eng.stepwise_open(2, chunk_iters=3)
+    eng.stepwise_refill(bank, [0, 1], [SampleRequest(label=0, seed=9),
+                                       SampleRequest(label=1, seed=10)])
+    _drain_bank(eng, bank)
+    report = eng.stepwise_report(bank)
+    for key in ("host_fetch_bytes", "blocking_polls", "gather_launches",
+                "harvests"):
+        assert report[key] == getattr(bank, key) > 0
+    for key in ("host_fetch_bytes", "blocking_polls", "gather_launches"):
+        assert eng.stats[key] >= report[key]
+    # whole-batch collect also accounts its one fetch per dispatch
+    eng2 = make_engine(ddim_coeffs(10), get_sampler("taa"))
+    eng2.run_batch([SampleRequest(label=1, seed=11)])
+    assert eng2.stats["blocking_polls"] == 1
+    [d] = eng2.last_dispatches
+    assert d["blocking_polls"] == 1
+    assert d["host_fetch_bytes"] == eng2.stats["host_fetch_bytes"] > 0
+
+
 # --- warm-start handles ------------------------------------------------------
 
 def test_result_exposes_warm_start_handle():

@@ -390,12 +390,24 @@ def test_stepwise_loop_bitwise_equals_run_batch_with_mixed_budgets():
             (want.iters, want.nfe, want.converged, want.early_stopped)
     # quality-steps lane early-exited
     assert tickets[4].result().early_stopped
-    # open/init/merge/step compiled exactly once each, refills included
+    # open/init/merge/step/gather compiled exactly once each, refills
+    # included
     engine = registry.get(key)
-    assert engine.stats["stepwise_traces"] == 4
+    assert engine.stats["stepwise_traces"] == 5
+    polls_before = engine.stats["blocking_polls"]
     report = loop.bank_reports()[key]
     assert report["completed"] == 6 and report["occupied"] == 0
     assert 0.0 <= report["wasted_iter_frac"] < 1.0
+    # reporting reuses the final round's cached poll (no extra fetch), and
+    # the protocol counters ride on the report
+    assert engine.stats["blocking_polls"] == polls_before
+    assert report["gather_launches"] == report["harvests"] > 0
+    assert report["blocking_polls"] > 0
+    # retired-lane-only harvest: the whole drain fetched less than ONE
+    # legacy full-bank harvest per retirement round would have
+    T_plus_1_rows = (key.T + 1) * D * 4 + key.T * 4
+    legacy = report["harvests"] * report["slots"] * T_plus_1_rows
+    assert report["host_fetch_bytes"] < legacy
 
 
 def test_stepwise_midsolve_refill_retires_late_arrivals_first():
@@ -448,7 +460,7 @@ def test_stepwise_loop_threaded_and_failure_paths():
         results = [t.result(timeout=120) for t in tickets]
     assert all(r.converged for r in results)
     assert loop.stats["completed"] == 6 and loop.stats["failed"] == 0
-    assert registry.get(key).stats["stepwise_traces"] == 4
+    assert registry.get(key).stats["stepwise_traces"] == 5
 
     seq_key = EngineKey("oracle", 8, "seq")
     queue2 = RequestQueue()
@@ -853,7 +865,7 @@ def test_stepwise_serving_sharded_matches_host_run_batch():
     assert out["equal"], \
         "sharded stepwise serving diverged from host run_batch"
     assert out["slots"] == 4 and out["devices"] == 8
-    assert out["stepwise_traces"] == 4         # open/init/merge/step, once
+    assert out["stepwise_traces"] == 5   # open/init/merge/step/gather, once
     assert out["refills"] >= 3                 # lanes recycled mid-solve
     assert out["completed"] == 10 and out["loop_completed"] == 10
     assert out["failed"] == 0

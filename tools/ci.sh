@@ -10,7 +10,10 @@
 # forced-host-device mesh; and a fourth EARLY-EXIT soak — a mixed-tau
 # Poisson stream through the iteration-level continuous-batching path
 # (chunked stepwise solver state, per-request tau/quality_steps budgets,
-# lanes retiring and refilling mid-solve).  Extra args ("$@", e.g. a test
+# lanes retiring and refilling mid-solve); and a fifth stepwise host-
+# protocol guard asserting the compiled-once stepwise program count stays
+# at five (open/init/merge/step/gather) and that a drain round issues
+# exactly one blocking poll per live key.  Extra args ("$@", e.g. a test
 # file) are forwarded to both pytest passes; a pass whose marker selects
 # nothing in that target (pytest exit 5) is not a failure.
 set -euo pipefail
@@ -42,3 +45,7 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         --requests 12 --steps-T 8 --batch-size 4 --arrival-rate 100 \
         --chunk-iters 2 --loose-tau-frac 0.5 --loose-tau 1e-2 \
         --quality-steps 3
+
+echo "--- stepwise host-protocol guard (5 programs, 1 blocking poll/round) ---"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python tools/stepwise_guard.py

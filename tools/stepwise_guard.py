@@ -1,0 +1,94 @@
+"""CI regression guard for the stepwise serving host protocol.
+
+Asserts the two properties the device-resident protocol (retired-lane-only
+harvest + piggybacked polling) is built on, so a future change that silently
+re-introduces per-round retraces or extra blocking fetches fails CI:
+
+  1. ``stats["stepwise_traces"]`` stays at the compiled-once program count —
+     FIVE (open / init / merge / step / gather) — across an entire drain
+     with mid-solve refills;
+  2. every drain round issues EXACTLY ONE blocking poll per live key
+     (harvest's fetch of the piggybacked summary; ``stepwise_report``
+     reuses the round's cached poll instead of re-fetching).
+
+Run from the repo root:  PYTHONPATH=src python tools/stepwise_guard.py
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+from repro.core import ddim_coeffs
+from repro.sampling import SampleRequest, SamplingEngine, get_sampler
+from repro.serving import (Batcher, BatchingPolicy, EngineKey, EngineRegistry,
+                           RequestQueue, ServingLoop)
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "tests"))
+from helpers import make_label_denoiser  # noqa: E402 — the tests' oracle
+
+D, N_LABELS, T = 16, 4, 10
+
+
+def main() -> int:
+    eps_apply = make_label_denoiser(dim=D, n_labels=N_LABELS)
+    key = EngineKey("oracle", T, "taa")
+    registry = EngineRegistry(lambda k: SamplingEngine(
+        eps_apply, None, ddim_coeffs(k.T), get_sampler(k.solver),
+        sample_shape=(D,)))
+    queue = RequestQueue()
+    loop = ServingLoop(registry, queue, Batcher(BatchingPolicy(max_batch=4)),
+                       chunk_iters=2)
+    # staggered budgets force several harvest+refill rounds
+    reqs = [SampleRequest(label=i % N_LABELS, seed=40 + i,
+                          **({} if i % 3 == 0
+                             else dict(tau=1e-2, quality_steps=1 + i % 4)))
+            for i in range(10)]
+    tickets = [queue.submit(r, key) for r in reqs]
+    engine = registry.get(key)
+
+    # pump round-by-round so per-round poll accounting is exact
+    rounds = 0
+    while len(queue) or loop.inflight:
+        polls_before = engine.stats["blocking_polls"]
+        live = 1 if loop.inflight else 0
+        loop.pump(flush=True)
+        delta = engine.stats["blocking_polls"] - polls_before
+        rounds += 1
+        if live and delta != 1:
+            print(f"FAIL: round {rounds} issued {delta} blocking polls "
+                  f"for 1 live key (want exactly 1)")
+            return 1
+        if not live and delta > 1:
+            print(f"FAIL: round {rounds} issued {delta} blocking polls "
+                  f"while idle")
+            return 1
+        if rounds > 10_000:
+            print("FAIL: drain did not terminate")
+            return 1
+    for t in tickets:
+        t.result()
+
+    traces = engine.stats["stepwise_traces"]
+    if traces != 5:
+        print(f"FAIL: stepwise_traces = {traces}, want 5 "
+              f"(open/init/merge/step/gather compiled once each)")
+        return 1
+
+    # report must reuse the round's cached poll, not re-fetch
+    polls_before = engine.stats["blocking_polls"]
+    loop.bank_reports()
+    if engine.stats["blocking_polls"] != polls_before:
+        print("FAIL: stepwise_report issued an extra blocking poll after "
+              "the round's harvest already polled")
+        return 1
+
+    report = loop.bank_reports()[key]
+    print(f"OK: {report['completed']} served, stepwise_traces=5, "
+          f"{report['blocking_polls']} blocking polls over {rounds} rounds, "
+          f"{report['gather_launches']} retired-lane gathers, "
+          f"{report['host_fetch_bytes']} bytes fetched")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
