@@ -39,6 +39,19 @@ DiT, placement from ``REPRO_BENCH_MESH`` like ``serving_throughput``):
     polls/round, and requests/s vs the whole-batch baseline over the same
     population.
 
+  * ``refine``      — warm-start trajectory cache + two-tier
+    draft-and-refine: a cold full-quality pass over repeat-label traffic
+    populates the per-key cache (and sets the cold device-NFE/request
+    reference); a drafted population through the plain earlyexit path sets
+    the draft-latency p50 baseline; the same draft budgets re-run through
+    a ``RefinePlanner`` (drafts resolve stage one at their
+    ``quality_steps`` exit, warm-started preemptible continuations splice
+    back into the live bank to full tolerance); and a repeat/neighbor
+    pass re-submits cached ``(label, seed)`` traffic through the queue's
+    ``warm_start`` hook.  Records cache hit rate, warm vs cold
+    device-NFE/request at fixed final quality, draft p50 vs the earlyexit
+    baseline, and that every two-tier ticket resolves both stages.
+
 Every section records ``host_fetch_bytes_per_round`` and
 ``blocking_polls_per_round`` (round = one dispatch for whole-batch modes,
 one harvest/step scheduling round for stepwise modes) so future PRs get
@@ -66,7 +79,8 @@ import numpy as np
 from benchmarks import common
 from repro.sampling import SampleRequest
 from repro.serving import (Batcher, BatchingPolicy, EngineKey, EngineRegistry,
-                           RequestQueue, ServingLoop)
+                           RefinePlanner, RefinePolicy, RequestQueue,
+                           ServingLoop)
 
 
 def _arrival_groups(requests, rng):
@@ -305,6 +319,86 @@ def run(T: int = 25, n_requests: int = 24, max_batch: int = 8):
     fetch_reduction = legacy_bytes_round / max(new_bytes_round, 1e-9)
     ov_speedup = ov_step_reqps / ov_base_reqps
 
+    # -- refine: warm-start trajectory cache + two-tier draft-and-refine ----
+    # (a) COLD reference: full-quality repeat-label traffic through the
+    # stepwise loop with cache recording on — the cold device-NFE/request
+    # bar at final tolerance, and the pass populates the per-key cache.
+    rf_chunk = chunk_iters                  # reuse the compiled geometry
+    cold_pop = [SampleRequest(label=i % 10, seed=1100 + i)
+                for i in range(n_requests)]
+    queue7 = RequestQueue()
+    loop7 = ServingLoop(registry, queue7, batcher, chunk_iters=rf_chunk,
+                        cache=True)
+    t0 = time.perf_counter()
+    tickets7 = [queue7.submit(r, key) for r in cold_pop]
+    loop7.drain()
+    cold_wall = time.perf_counter() - t0
+    cold_results = [t.result() for t in tickets7]
+    cold_nfe = loop7.bank_reports()[key]["device_nfe"]
+    cache = registry.cache(key)
+
+    # (b) draft-latency baseline: the PLAIN earlyexit path (no refiner)
+    # over a drafted population — its tickets resolve AT draft quality, so
+    # their p50 is the latency bar the two-tier draft stage must meet.
+    drafted = [SampleRequest(label=i % 10, seed=1300 + i,
+                             quality_steps=rf_chunk)
+               for i in range(n_requests)]
+    queue8 = RequestQueue()
+    loop8 = ServingLoop(registry, queue8, batcher, chunk_iters=rf_chunk)
+    t0 = time.perf_counter()
+    tickets8 = [queue8.submit(r, key) for r in drafted]
+    loop8.drain()
+    [t.result() for t in tickets8]
+    ee_draft_p50, ee_draft_p95 = _percentiles(
+        [t.latency_s for t in tickets8])
+
+    # (c) TWO-TIER: the same draft budgets with a RefinePlanner — drafts
+    # resolve stage one at their quality_steps exit, and warm-started
+    # preemptible continuations splice back into the live bank to finish
+    # the ticket at full tolerance on spare capacity.
+    two_pop = [SampleRequest(label=i % 10, seed=1500 + i,
+                             quality_steps=rf_chunk)
+               for i in range(n_requests)]
+    queue9 = RequestQueue()
+    loop9 = ServingLoop(registry, queue9, batcher, chunk_iters=rf_chunk,
+                        refiner=RefinePlanner(RefinePolicy()))
+    t0 = time.perf_counter()
+    tickets9 = [queue9.submit(r, key) for r in two_pop]
+    loop9.drain()
+    two_wall = time.perf_counter() - t0
+    two_results = [t.result() for t in tickets9]
+    draft_p50, draft_p95 = _percentiles(
+        [t.draft_latency_s for t in tickets9])
+    final_p50, _ = _percentiles([t.latency_s for t in tickets9])
+    both_stages = all(t.done() and t.draft_done() for t in tickets9)
+    n_two_tier = sum(1 for t in tickets9 if t.refines)
+    two_nfe = loop9.bank_reports()[key]["device_nfe"]
+    two_full_quality = all(r.converged and not r.early_stopped
+                           for r in two_results)
+
+    # (d) WARM repeat/neighbor traffic: the queue's warm_start hook pulls
+    # inits from the cache recorded in (a) — even indices repeat an exact
+    # (label, seed), odd ones are same-label new-seed neighbors — at full
+    # final quality, so warm device-NFE/request compares directly to (a).
+    warm_pop = [SampleRequest(label=i % 10,
+                              seed=(1100 + i) if i % 2 == 0 else (2100 + i))
+                for i in range(n_requests)]
+    hits0, miss0 = cache.stats()["hits"], cache.stats()["misses"]
+    queue10 = RequestQueue(validate=registry.validate_submit,
+                           warm_start=registry.warm_start_for)
+    loop10 = ServingLoop(registry, queue10, batcher, chunk_iters=rf_chunk,
+                         cache=True)
+    t0 = time.perf_counter()
+    tickets10 = [queue10.submit(r, key) for r in warm_pop]
+    loop10.drain()
+    warm_wall = time.perf_counter() - t0
+    warm_results = [t.result() for t in tickets10]
+    warm_nfe = loop10.bank_reports()[key]["device_nfe"]
+    cstats = cache.stats()
+    rf_lookups = (cstats["hits"] - hits0) + (cstats["misses"] - miss0)
+    hit_rate = (cstats["hits"] - hits0) / max(rf_lookups, 1)
+    n_warm = sum(1 for t in tickets10 if t.request.init is not None)
+
     tag = "mesh" if placement.is_sharded else "host"
     speedup = async_reqps / sync_reqps
     rows = [
@@ -338,6 +432,13 @@ def run(T: int = 25, n_requests: int = 24, max_batch: int = 8):
          f"lower);blocking_polls/round={new_polls_round:.2f};"
          f"reqps={ov_step_reqps:.2f} vs whole-batch {ov_base_reqps:.2f} "
          f"({ov_speedup:.2f}x);report_reuses_poll={report_reuses_poll}"),
+        (f"serve_async/ddim{T}/refine_k{rf_chunk}/{tag}",
+         two_wall / n_requests * 1e6,
+         f"draft_p50={draft_p50:.2f}s vs earlyexit {ee_draft_p50:.2f}s;"
+         f"final_p50={final_p50:.2f}s;two_tier={n_two_tier};"
+         f"both_stages={both_stages};"
+         f"warm_nfe/req={warm_nfe / n_requests:.0f} vs cold "
+         f"{cold_nfe / n_requests:.0f};cache_hit_rate={hit_rate:.0%}"),
     ]
     common.write_bench_json("async", dict(
         T=T, n_requests=n_requests, slots=slots,
@@ -407,4 +508,31 @@ def run(T: int = 25, n_requests: int = 24, max_batch: int = 8):
         stepwise_reqps=ov_step_reqps,
         whole_batch_reqps=ov_base_reqps,
         speedup_vs_whole_batch=ov_speedup))
+    common.write_bench_json("refine", dict(
+        T=T, n_requests=n_requests, slots=slots, chunk_iters=rf_chunk,
+        placement=placement.describe(), devices=placement.num_devices,
+        draft_quality_steps=rf_chunk,
+        cold_reqps=n_requests / cold_wall,
+        cold_device_nfe_per_request=cold_nfe / n_requests,
+        cold_converged=all(r.converged for r in cold_results),
+        earlyexit_draft_p50_s=ee_draft_p50,
+        earlyexit_draft_p95_s=ee_draft_p95,
+        twotier_draft_p50_s=draft_p50, twotier_draft_p95_s=draft_p95,
+        twotier_final_p50_s=final_p50,
+        twotier_tickets=n_two_tier,
+        twotier_refines=loop9.stats["refines"],
+        twotier_preemptions=loop9.stats["preemptions"],
+        twotier_device_nfe_per_request=two_nfe / n_requests,
+        every_ticket_resolved_both_stages=bool(both_stages),
+        twotier_final_full_quality=bool(two_full_quality),
+        draft_p50_vs_earlyexit=draft_p50 / max(ee_draft_p50, 1e-9),
+        warm_reqps=n_requests / warm_wall,
+        warm_device_nfe_per_request=warm_nfe / n_requests,
+        warm_started_requests=n_warm,
+        warm_converged=all(r.converged for r in warm_results),
+        warm_nfe_lower_than_cold=bool(warm_nfe < cold_nfe),
+        cache_hit_rate=hit_rate,
+        cache_hits=cstats["hits"], cache_misses=cstats["misses"],
+        cache_evictions=cstats["evictions"],
+        cache_entries=cstats["entries"], cache_bytes=cstats["bytes"]))
     return rows

@@ -38,6 +38,15 @@ Train a tiny DiT on synthetic latents, then:
      Pallas kernels on TPU, the pure-jnp references elsewhere, so the
      CPU path stays bitwise-identical; tests force the kernel path with
      `use_pallas=True, interpret=True`.
+  8. draft-and-refine serving: a `quality_steps` ticket resolves its
+     DRAFT stage the moment the budget is met (`draft_result()` /
+     `on_draft`), while a `RefinePlanner` re-enqueues a warm-started,
+     preemptible continuation at background priority on the SAME ticket —
+     refinement fills spare lanes and yields them to fresh arrivals.
+     With `cache=True` plus the registry's queue hooks
+     (`validate_submit` / `warm_start_for`), converged trajectories are
+     cached per key and repeat submissions auto-warm-start at submit
+     time (Sec 4.2).
 
     PYTHONPATH=src python examples/quickstart.py
     # multi-device placement demo on CPU:
@@ -208,6 +217,44 @@ def main():
     print(f"kernel routing: use_pallas=False (explicit jnp refs) bitwise-"
           f"equal to the auto default: {same}")
     assert same
+
+    # --- 8. draft-and-refine: two-tier tickets + warm-start cache -----------
+    # The refine tier makes the Sec 4.1 draft a first-class stage: a
+    # quality-budgeted ticket resolves its DRAFT the moment the budget is
+    # met (draft_result / on_draft), while the RefinePlanner re-enqueues a
+    # warm-started continuation — the draft trajectory is the init
+    # (Sec 4.2) — at background priority, preemptible, on the SAME ticket.
+    # With cache=True the loop records converged trajectories per key and
+    # the queue's warm_start hook auto-populates repeat submissions.
+    from repro.serving import RefinePlanner, RefinePolicy
+
+    queue = RequestQueue(validate=registry.validate_submit,
+                         warm_start=registry.warm_start_for)
+    refine = ServingLoop(registry, queue,
+                         Batcher(BatchingPolicy(max_batch=4)),
+                         chunk_iters=2,
+                         refiner=RefinePlanner(RefinePolicy()), cache=True)
+    two_tier = [SampleRequest(label=3 + i, seed=110 + i, quality_steps=2)
+                for i in range(4)]
+    tickets = [queue.submit(r, key2) for r in two_tier]
+    refine.drain()
+    for t in tickets:
+        draft, final = t.draft_result(), t.result()
+        assert final.converged and not final.early_stopped
+    n_drafted = sum(1 for t in tickets if t.refines)
+    print(f"draft-and-refine: {n_drafted}/{len(tickets)} tickets drafted "
+          f"at 2 iters then refined to full tolerance; draft latencies "
+          f"{[f'{t.draft_latency_s:.2f}s' for t in tickets]} vs final "
+          f"{[f'{t.latency_s:.2f}s' for t in tickets]}")
+    repeat = queue.submit(SampleRequest(label=3, seed=110), key2)
+    assert repeat.request.init is not None       # cache hit at submit time
+    refine.drain()
+    warm_res = repeat.result()
+    cstats = registry.cache(key2).stats()
+    print(f"warm-start cache: {cstats['hits']}/{cstats['hits'] + cstats['misses']} "
+          f"lookups hit; the repeat submission re-converged in "
+          f"{warm_res.iters} iteration(s) from its cached trajectory")
+    assert warm_res.converged
 
 
 if __name__ == "__main__":

@@ -43,6 +43,21 @@ the slowest member:
         --requests 12 --steps-T 8 --batch-size 4 --arrival-rate 100 \
         --chunk-iters 2 --loose-tau-frac 0.5 --quality-steps 6 \
         --mesh debug --data-parallel 4 --model-parallel 2
+
+``--refine`` (requires ``--chunk-iters``) upgrades the early-exit traffic to
+TWO-TIER draft-and-refine serving: an early-exited draft resolves its
+ticket's draft stage immediately and a warm-started, preemptible
+continuation splices back into the live bank as background work, completing
+the same ticket at full tolerance.  ``--cache`` turns on the Sec 4.2
+warm-start trajectory cache: converged results are recorded per key and
+later submissions auto-populate ``SampleRequest.init`` at submit time
+(with submit-time warm-start validation), so repeat/neighbor traffic
+solves in a fraction of the cold iteration count:
+
+    PYTHONPATH=src python -m repro.launch.serve --serve-async --smoke \
+        --requests 12 --steps-T 8 --batch-size 4 --arrival-rate 100 \
+        --chunk-iters 2 --loose-tau-frac 0.5 --quality-steps 3 \
+        --refine --cache --mesh debug --data-parallel 4 --model-parallel 2
 """
 from __future__ import annotations
 
@@ -95,7 +110,8 @@ from repro.runtime import StragglerMitigator
 from repro.sampling import (Placement, SampleRequest, SamplingEngine,
                             get_sampler)
 from repro.serving import (Batcher, BatchingPolicy, EngineKey, EngineRegistry,
-                           RequestQueue, ServingLoop)
+                           RefinePlanner, RefinePolicy, RequestQueue,
+                           ServingLoop)
 
 
 def make_eps_apply(cfg):
@@ -214,9 +230,22 @@ def serve_async(args, cfg, params, placement: Placement):
                                                   placement))
     policy = BatchingPolicy(max_batch=args.batch_size or 8,
                             max_wait_s=args.max_wait_ms / 1e3)
-    loop = ServingLoop(registry, RequestQueue(), Batcher(policy),
+    refiner = None
+    if args.refine:
+        if not args.chunk_iters:
+            raise SystemExit("--refine requires --chunk-iters > 0 "
+                             "(refinement splices into live stepwise lanes)")
+        refiner = RefinePlanner(RefinePolicy())
+    # --cache wires the queue's submit-time hooks: warm-start
+    # auto-population from the per-key trajectory cache, plus warm-start
+    # shape/dtype validation so a bad init fails its one ticket at submit
+    queue = RequestQueue(
+        validate=registry.validate_submit if args.cache else None,
+        warm_start=registry.warm_start_for if args.cache else None)
+    loop = ServingLoop(registry, queue, Batcher(policy),
                        depth=args.async_depth,
-                       chunk_iters=args.chunk_iters)
+                       chunk_iters=args.chunk_iters,
+                       refiner=refiner, cache=args.cache)
     for key in keys:  # compile ahead of traffic so p95 is not a jit compile
         engine = registry.get(key)
         registry.warmup(key, slots=loop.batcher.slots_for(engine),
@@ -248,10 +277,15 @@ def serve_async(args, cfg, params, placement: Placement):
         stats.append({"key": ticket.key.describe(), "label": res.request.label,
                       "iters": res.iters, "nfe": res.nfe,
                       "early_stopped": res.early_stopped,
-                      "latency_s": ticket.latency_s})
+                      "latency_s": ticket.latency_s,
+                      "draft_latency_s": ticket.draft_latency_s,
+                      "refines": ticket.refines})
         early = " early-exit" if res.early_stopped else ""
+        two_tier = (f" draft@{ticket.draft_latency_s:.2f}s"
+                    if ticket.refines else "")
         print(f"{ticket.key.describe():>24s} label={res.request.label:4d} "
-              f"iters={res.iters:3d} latency={ticket.latency_s:.2f}s{early}")
+              f"iters={res.iters:3d} latency={ticket.latency_s:.2f}s"
+              f"{early}{two_tier}")
     if args.chunk_iters:
         for key, report in sorted(loop.bank_reports().items()):
             rounds = max(report["blocking_polls"], 1)  # one poll per round
@@ -278,6 +312,26 @@ def serve_async(args, cfg, params, placement: Placement):
           f"p95 {np.percentile(latencies, 95):.2f}s; "
           f"mean NFE/request {np.mean([r.nfe for r in results]):.0f}; "
           f"{n_early} early-exit(s); loop stats {loop.stats}")
+    if args.refine:
+        two_tier = [t for t in tickets if t.refines]
+        unresolved = [t for t in tickets
+                      if not (t.done() and t.draft_done())]
+        assert not unresolved, \
+            f"{len(unresolved)} ticket(s) missing a resolved stage"
+        draft_lat = np.asarray([t.draft_latency_s for t in tickets])
+        print(f"refine tier: {len(two_tier)} two-tier ticket(s), every "
+              f"stage resolved; draft latency p50 "
+              f"{np.percentile(draft_lat, 50):.2f}s p95 "
+              f"{np.percentile(draft_lat, 95):.2f}s; "
+              f"{loop.stats['preemptions']} preemption(s)")
+    if args.cache:
+        for key in keys:
+            c = registry.cache(key).stats()
+            total = max(c["hits"] + c["misses"], 1)
+            print(f"{key.describe()} cache: {c['hits']}/{total} hits "
+                  f"({c['hits'] / total:.0%}), {c['evictions']} "
+                  f"eviction(s), {c['entries']} entries "
+                  f"({c['bytes']} B)")
     return jnp.stack([res.x0 for res in results]), stats
 
 
@@ -356,6 +410,17 @@ def main(argv=None):
                    help="per-request quality-steps budget (Sec 4.1 early "
                         "exit) attached to --loose-tau-frac traffic "
                         "(0 = tolerance-only)")
+    p.add_argument("--refine", action="store_true",
+                   help="two-tier draft-and-refine serving (requires "
+                        "--chunk-iters): early-exited drafts resolve their "
+                        "ticket's draft stage immediately and a "
+                        "warm-started preemptible continuation completes "
+                        "the same ticket at full tolerance")
+    p.add_argument("--cache", action="store_true",
+                   help="per-key Sec 4.2 warm-start trajectory cache: "
+                        "record converged results, auto-populate "
+                        "SampleRequest.init at submit time (with "
+                        "submit-time warm-start validation)")
     p.add_argument("--ckpt", default=None, help="trained DiT checkpoint dir")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)

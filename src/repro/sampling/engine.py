@@ -275,7 +275,11 @@ class SamplingEngine:
                 x0s.append(xi)          # cold start: noise-initialized
                 t_inits.append(T)
             else:
-                x0s.append(jnp.asarray(req.init.trajectory).reshape(xi.shape))
+                # cast to the pack dtype (f32, like the drawn noises): a
+                # warm start recorded from a reduced-precision solve must
+                # not change the packed program's signature
+                x0s.append(jnp.asarray(req.init.trajectory, jnp.float32)
+                           .reshape(xi.shape))
                 # None => full restart (all T rows active); an explicit 0 is
                 # a fully-solved warm start the solver merely verifies
                 t_inits.append(T if req.init.t_init is None
@@ -380,6 +384,8 @@ class SamplingEngine:
             model_shards=plc.model_shards,
             iters=[int(i) for i in all_iters[:n_real]],
             nfe=[int(n) for n in info["nfe"][:n_real]],
+            warm_start_depth=[self._warm_depth(r)
+                              for r in pending.requests],
             **self._work_report(int(all_iters[:n_real].sum()),
                                 device_iters, pending.slots)))
         del self.last_dispatches[:-self.MAX_DISPATCH_REPORTS]
@@ -402,6 +408,15 @@ class SamplingEngine:
                 residuals=None if res is None else res[i],
                 diagnostics=diag, request=req, wall_s=wall))
         return results
+
+    def _warm_depth(self, request: Optional[SampleRequest]) -> int:
+        """Restart depth T_init of a request's warm start: -1 = cold start
+        (or vacant lane), T = full restart from a warm trajectory, 0..T-1 =
+        a partial resume with that many rows still active."""
+        if request is None or request.init is None:
+            return -1
+        return self.coeffs.T if request.init.t_init is None \
+            else int(request.init.t_init)
 
     def _work_report(self, useful_iters: int, device_iters: int,
                      slots: int) -> Dict:
@@ -571,11 +586,45 @@ class SamplingEngine:
 
     def validate_request(self, request: SampleRequest) -> None:
         """Raise exactly what a dispatch carrying ``request`` would raise —
-        lets a serving loop fail ONE incompatible request's ticket instead
-        of a whole admission group."""
+        lets a serving loop (or ``RequestQueue.submit`` via
+        ``EngineRegistry.validate_submit``) fail ONE incompatible request's
+        ticket instead of a whole admission group.  Warm starts are checked
+        structurally (shape/dtype metadata only — no host transfer): a
+        mismatched trajectory would otherwise poison a packed dispatch at
+        trace time."""
         self.spec.check_request_flags(
             warm_start=request.init is not None,
             solver_overrides=request.has_solver_overrides)
+        if request.init is not None:
+            self._validate_init(request.init)
+
+    def _validate_init(self, init) -> None:
+        """Structural warm-start checks against this engine's geometry —
+        shape/dtype METADATA only, so validating a device-resident
+        trajectory never forces a host transfer."""
+        T = self.coeffs.T
+        traj = init.trajectory
+        shape = tuple(getattr(traj, "shape", None) or np.shape(traj))
+        want_shape = (T + 1,) + self.sample_shape
+        if not shape or shape[0] != T + 1 or \
+                int(np.prod(shape, dtype=np.int64)) != \
+                int(np.prod(want_shape, dtype=np.int64)):
+            raise ValueError(
+                f"warm-start trajectory shape {shape} does not match this "
+                f"engine's (T+1, *sample_shape) = {want_shape} "
+                f"(T={T}, sample_shape={self.sample_shape})")
+        dtype = getattr(traj, "dtype", None)
+        if dtype is None:
+            dtype = np.asarray(traj).dtype
+        if not jnp.issubdtype(dtype, jnp.floating):
+            raise ValueError(
+                f"warm-start trajectory dtype {dtype} is not a floating "
+                f"type; pack casts warm starts to float32 (reduced-"
+                f"precision floats are fine, integer/bool buffers are not)")
+        t_init = init.t_init
+        if t_init is not None and not 0 <= int(t_init) <= T:
+            raise ValueError(
+                f"warm-start t_init={t_init} outside [0, T={T}]")
 
     def stepwise_open(self, slots: int, *, chunk_iters: int) -> LaneBank:
         """Open an all-vacant LaneBank at the engine's fixed slot geometry
@@ -765,6 +814,7 @@ class SamplingEngine:
             completed=bank.completed, refills=bank.refills,
             occupied=bank.occupied, pack_s=bank.pack_s,
             useful_iters=useful,
+            warm_start_depth=[self._warm_depth(r) for r in bank.requests],
             host_fetch_bytes=bank.host_fetch_bytes,
             blocking_polls=bank.blocking_polls,
             gather_launches=bank.gather_launches,

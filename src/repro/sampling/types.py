@@ -45,12 +45,18 @@ class SampleRequest:
     """One sampling request: (conditioning, seed, optional warm start,
     optional per-request solver budget).
 
-    ``arrival_time`` and ``priority`` are serving metadata carried on the
-    request itself so batching layers never need a side-channel dict keyed
-    by request identity: the engine ignores both.  ``arrival_time`` is the
-    queue clock reading at submission (``repro.serving.RequestQueue.submit``
-    stamps it when unset); ``priority`` orders requests within one engine
-    key — higher dispatches first, FIFO among equals.
+    ``arrival_time``, ``priority``, and ``preemptible`` are serving
+    metadata carried on the request itself so batching layers never need a
+    side-channel dict keyed by request identity: the engine ignores all
+    three.  ``arrival_time`` is the queue clock reading at submission
+    (``repro.serving.RequestQueue.submit`` stamps it when unset);
+    ``priority`` orders requests within one engine key — higher dispatches
+    first, FIFO among equals.  ``preemptible`` marks a background-tier
+    request (e.g. a draft-and-refine continuation,
+    ``repro.serving.refine``): its lane fills otherwise-wasted slots, is
+    excluded from deadline promotion and fill-or-deadline occupancy, and
+    may be vacated mid-solve when fresh non-preemptible arrivals need the
+    slot.
 
     ``tau`` / ``max_iters`` / ``quality_steps`` are per-request SOLVER
     overrides, packed as batched arrays into the one compiled program (no
@@ -69,6 +75,7 @@ class SampleRequest:
     init: Optional[WarmStart] = None
     arrival_time: Optional[float] = None
     priority: int = 0
+    preemptible: bool = False
     tau: Optional[float] = None
     max_iters: Optional[int] = None
     quality_steps: Optional[int] = None

@@ -26,8 +26,16 @@ serving layer for live traffic:
     request converges (or early-exits at its ``tau``/``quality_steps``/
     ``max_iters`` budget, Sec 4.1) and freed lanes refilled mid-solve —
     per-iteration scheduling instead of per-batch scheduling.
-  * :class:`TrajectoryCache` — per-key solved-trajectory store (Sec 4.2
-    warm-start cache skeleton), hanging off the registry like the engines.
+  * :class:`TrajectoryCache` — per-key byte-bounded LRU of solved
+    trajectories (Sec 4.2 warm starts) with (label, seed) identity and
+    neighborhood lookup, hanging off the registry like the engines; the
+    queue's ``warm_start``/``validate`` hooks auto-populate
+    ``SampleRequest.init`` from it at submit time.
+  * :class:`RefinePlanner` / :class:`RefinePolicy` — two-tier
+    draft-and-refine serving (``repro.serving.refine``): an early-exited
+    draft resolves the ticket's DRAFT stage immediately and a warm-started,
+    preemptible continuation splices back into the live bank as background
+    work, completing the same ticket at full tolerance.
 
 Results are bitwise-identical to ``engine.run_batch`` over the same
 requests at the same slot geometry — batching is a scheduling concern, not
@@ -37,13 +45,16 @@ the live driver and ``benchmarks/serving_async.py`` for throughput /
 latency / NFE-per-request measurements against the blocking loop.
 """
 from repro.serving.batcher import Batcher, BatchingPolicy, Dispatch
+from repro.serving.cache import TrajectoryCache
 from repro.serving.loop import ServingLoop
 from repro.serving.queue import EngineKey, RequestQueue, Ticket
-from repro.serving.registry import EngineRegistry, TrajectoryCache
+from repro.serving.refine import RefinePlanner, RefinePolicy
+from repro.serving.registry import EngineRegistry
 
 __all__ = [
     "Batcher", "BatchingPolicy", "Dispatch",
     "ServingLoop",
     "EngineKey", "RequestQueue", "Ticket",
     "EngineRegistry", "TrajectoryCache",
+    "RefinePlanner", "RefinePolicy",
 ]

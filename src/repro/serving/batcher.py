@@ -151,6 +151,13 @@ class Batcher:
         them immediately is free work — no fill-or-deadline wait.  Only a
         fully idle bank (a cold start, where admission is what lights up
         the device) applies the usual fill / deadline / flush gate.
+
+        ``free_slots`` is the caller's ADMITTABLE capacity, not raw lane
+        vacancy: preemptible (refine-tier) lanes are background occupancy,
+        so the loop adds as many of them as urgent pending demand requires
+        (``ServingLoop._pump_stepwise``) — the fill-or-deadline occupancy
+        count never lets background refinement starve fresh-arrival
+        admission.
         """
         if free_slots <= 0 or queue.pending(key) == 0:
             return []

@@ -46,24 +46,45 @@ class ServingLoop:
               (or hits its per-request ``quality_steps``/``max_iters``
               budget — Sec 4.1 early exit), and freed lanes are refilled
               from the queue into the live solver state without a retrace.
+    refiner:  optional :class:`~repro.serving.RefinePlanner` enabling the
+              two-tier draft-and-refine path (stepwise mode only): a
+              harvested result the planner takes as a DRAFT resolves the
+              ticket's draft stage and re-enqueues a warm-started,
+              preemptible continuation instead of completing.  Refine
+              lanes are background occupancy — they fill otherwise-wasted
+              slots, never gate admission, and are vacated (ticket
+              re-enqueued, warm start intact) when fresh non-preemptible
+              arrivals need their slot.
+    cache:    record converged final results into the registry's per-key
+              :class:`~repro.serving.TrajectoryCache` at harvest/collect,
+              so later submissions warm-start via the queue's
+              ``warm_start`` hook (``EngineRegistry.warm_start_for``).
     """
 
     def __init__(self, registry: EngineRegistry, queue: RequestQueue,
                  batcher: Optional[Batcher] = None, *, depth: int = 2,
-                 chunk_iters: int = 0):
+                 chunk_iters: int = 0, refiner=None, cache: bool = False):
         if depth < 1:
             raise ValueError(f"depth must be >= 1, got {depth}")
         if chunk_iters < 0:
             raise ValueError(
                 f"chunk_iters must be >= 0, got {chunk_iters}")
+        if refiner is not None and not chunk_iters:
+            raise ValueError(
+                "refiner requires chunk_iters > 0: refinement splices "
+                "continuations into live LaneBank lanes (stepwise mode)")
         self.registry = registry
         self.queue = queue
         self.batcher = batcher or Batcher()
         self.depth = depth
         self.chunk_iters = chunk_iters
+        self.refiner = refiner
+        self.cache = cache
         self.stats = {"dispatches": 0, "completed": 0, "failed": 0}
         if chunk_iters:
             self.stats.update(chunks=0, refills=0)
+        if refiner is not None:
+            self.stats.update(drafts=0, refines=0, preemptions=0)
         self.error: Optional[BaseException] = None
         self._inflight: Deque[Tuple[Dispatch, object]] = collections.deque()
         self._banks: Dict = {}          # EngineKey -> LaneBank
@@ -174,14 +195,41 @@ class ServingLoop:
                 for lane, result in engine.stepwise_harvest(bank):
                     ticket = tickets[lane]
                     tickets[lane] = None
-                    if ticket is not None:
-                        ticket.resolve(result)
-                        self.stats["completed"] += 1
+                    if ticket is None:
+                        continue
+                    if self.refiner is not None and self.refiner.plan(
+                            self.queue, ticket, result):
+                        # taken as a DRAFT: stage one resolved, a warm-
+                        # started continuation re-enqueued on this ticket
+                        self.stats["drafts"] += 1
+                        self.stats["refines"] += 1
+                        continue
+                    ticket.resolve(result)
+                    self.stats["completed"] += 1
+                    if self.cache and result.converged \
+                            and not result.early_stopped:
+                        self.registry.cache(key).record(result)
                 free = bank.free_lanes()
+                # preemptible (refine) lanes are BACKGROUND occupancy: when
+                # fresh non-preemptible arrivals outnumber the free lanes,
+                # count enough refine lanes as admission slots and vacate
+                # them below — background refinement never starves
+                # fresh-arrival admission (their warm start rides the
+                # re-enqueued ticket, so preempted progress degrades to the
+                # draft init, never to a cold start)
+                background = [i for i, r in enumerate(bank.requests)
+                              if r is not None and r.preemptible] \
+                    if self.refiner is not None else []
+                extra = min(len(background),
+                            max(self.queue.pending_urgent(key)
+                                - len(free), 0))
                 admit = self.batcher.plan_refill(
-                    self.queue, key, len(free), now=now,
+                    self.queue, key, len(free) + extra, now=now,
                     active=bank.occupied > 0, flush=flush)
-                admitted += self._refill(engine, bank, tickets, free, admit)
+                for lane in background[:max(len(admit) - len(free), 0)]:
+                    self._preempt(key, bank, tickets, lane)
+                admitted += self._refill(engine, bank, tickets,
+                                         bank.free_lanes(), admit)
                 if bank.occupied:
                     engine.stepwise_step(bank)
                     self.stats["chunks"] += 1
@@ -223,6 +271,19 @@ class ServingLoop:
         self.stats["refills"] += 1
         self.stats["dispatches"] += 1
         return len(valid)
+
+    def _preempt(self, key, bank, tickets, lane) -> None:
+        """Vacate one preemptible (refine) lane for an urgent admission:
+        its ticket re-enters the queue with its warm-started request
+        intact (the lane's in-flight device iterations since the splice
+        are forfeited — the continuation restarts from its draft init),
+        and the lane is overwritten by the same round's refill merge."""
+        ticket = tickets[lane]
+        tickets[lane] = None
+        bank.requests[lane] = None
+        self.stats["preemptions"] += 1
+        if ticket is not None:
+            self.queue.resubmit(ticket)
 
     def _fail_bank(self, key, error: BaseException) -> None:
         for ticket in self._lane_tickets.get(key, []):
@@ -299,6 +360,8 @@ class ServingLoop:
             self.batcher.note(plan.key, engine.last_dispatches[-1])
         for ticket, result in zip(plan.tickets, results):
             ticket.resolve(result)
+            if self.cache and result.converged and not result.early_stopped:
+                self.registry.cache(plan.key).record(result)
         self.stats["completed"] += len(results)
 
     def _abort(self, error: BaseException) -> None:

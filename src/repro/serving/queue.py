@@ -43,11 +43,21 @@ class EngineKey:
 
 
 class Ticket:
-    """Future for one submitted request (thread-safe).
+    """Future for one submitted request (thread-safe), with an optional
+    DRAFT stage for two-tier draft-and-refine serving.
 
     ``result()`` blocks until a serving loop collects the dispatch carrying
     the request (or fails it); ``latency_s`` is completion time minus the
     request's ``arrival_time``, on the queue's clock.
+
+    Two-tier tickets (``repro.serving.refine``): when the request
+    early-exits at its ``quality_steps`` budget and a RefinePlanner takes
+    the result as a draft, the DRAFT stage resolves immediately —
+    ``draft_result()`` unblocks (and ``on_draft``, when set before
+    submission, fires on the serving thread) — while the ticket stays open
+    for the warm-started refinement that later resolves ``result()``.
+    Single-stage tickets resolve both stages at once, so
+    ``draft_result()`` never hangs on a request that was never drafted.
     """
 
     def __init__(self, key: EngineKey, request: SampleRequest, seqno: int,
@@ -56,13 +66,21 @@ class Ticket:
         self.request = request
         self.seqno = seqno
         self.completed_time: Optional[float] = None
+        self.draft_time: Optional[float] = None
+        self.refines = 0                 # refine rounds already planned
+        self.on_draft: Optional[Callable[[SampleResult], None]] = None
         self._clock = clock
         self._event = threading.Event()
+        self._draft_event = threading.Event()
         self._result: Optional[SampleResult] = None
+        self._draft: Optional[SampleResult] = None
         self._error: Optional[BaseException] = None
 
     def done(self) -> bool:
         return self._event.is_set()
+
+    def draft_done(self) -> bool:
+        return self._draft_event.is_set()
 
     def result(self, timeout: Optional[float] = None) -> SampleResult:
         if not self._event.wait(timeout):
@@ -73,24 +91,73 @@ class Ticket:
             raise self._error
         return self._result
 
+    def draft_result(self, timeout: Optional[float] = None) -> SampleResult:
+        """The draft-stage result — the early-exited iterate a refine tier
+        took as stage one, or the final result itself for a ticket that
+        never drafted.  Blocks until the draft stage resolves."""
+        if not self._draft_event.wait(timeout):
+            raise TimeoutError(
+                f"request {self.key.describe()}#{self.seqno} draft not "
+                f"served within {timeout}s")
+        if self._draft is not None:
+            return self._draft
+        if self._error is not None:
+            raise self._error
+        return self._result
+
     @property
     def latency_s(self) -> Optional[float]:
-        """Queue-clock latency (arrival -> completion); None while pending."""
+        """Queue-clock latency (arrival -> completion); None while pending.
+        For a two-tier ticket this spans the request's WHOLE life — the
+        refine continuation keeps the original arrival time."""
         if self.completed_time is None or self.request.arrival_time is None:
             return None
         return self.completed_time - self.request.arrival_time
 
+    @property
+    def draft_latency_s(self) -> Optional[float]:
+        """Arrival -> draft-stage latency (the interactive-tier number)."""
+        if self.draft_time is None or self.request.arrival_time is None:
+            return None
+        return self.draft_time - self.request.arrival_time
+
     # resolution (serving-loop side) -----------------------------------------
+
+    def resolve_draft(self, result: SampleResult) -> None:
+        """Resolve the DRAFT stage only; the ticket stays open for the
+        refined result."""
+        self._draft = result
+        self.draft_time = self._clock()
+        callback = self.on_draft
+        if callback is not None:
+            try:
+                callback(result)
+            except Exception:  # noqa: BLE001 — a client callback must not
+                pass           # kill the serving loop
+        self._draft_event.set()
 
     def resolve(self, result: SampleResult) -> None:
         self._result = result
         self.completed_time = self._clock()
+        if not self._draft_event.is_set():
+            # single-stage ticket: the final result IS the draft stage
+            self.draft_time = self.completed_time
+            callback = self.on_draft
+            if callback is not None:
+                try:
+                    callback(result)
+                except Exception:  # noqa: BLE001
+                    pass
+            self._draft_event.set()
         self._event.set()
 
     def fail(self, error: BaseException) -> None:
         self._error = error
         self.completed_time = self._clock()
         self._event.set()
+        # a draft that already resolved stays deliverable; otherwise the
+        # draft stage fails with the ticket
+        self._draft_event.set()
 
 
 class RequestQueue:
@@ -99,14 +166,34 @@ class RequestQueue:
     clock: timestamp source for arrival stamping and latency accounting
            (``time.monotonic`` by default; tests inject a fake clock to
            exercise deadline policies deterministically).
+    validate: optional ``(request, key) -> None`` hook run at submit time
+           (AFTER warm-start population) — a raise fails THAT ticket with
+           the error instead of enqueueing it, so a malformed warm start
+           never reaches a packed dispatch (see
+           ``EngineRegistry.validate_submit``).
+    warm_start: optional ``(request, key) -> Optional[WarmStart]`` hook —
+           when set and the request carries no ``init``, its return value
+           (if any) is spliced in at submit time.  This is the Sec 4.2
+           cache auto-population point (``EngineRegistry.warm_start_for``).
     """
 
-    def __init__(self, clock: Callable[[], float] = time.monotonic):
+    def __init__(self, clock: Callable[[], float] = time.monotonic, *,
+                 validate: Optional[Callable] = None,
+                 warm_start: Optional[Callable] = None):
         self.clock = clock
+        self.validate = validate
+        self.warm_start = warm_start
         self._lock = threading.Lock()
         self._buckets: Dict[EngineKey, List[Ticket]] = {}
         self._seq = itertools.count()
         self._closed: Optional[BaseException] = None
+
+    @staticmethod
+    def _order(ticket: Ticket):
+        # (priority desc, seqno asc): FIFO-fair among equal priorities;
+        # the sort key is immutable while enqueued, so one insertion
+        # keeps the bucket ordered
+        return (-ticket.request.priority, ticket.seqno)
 
     def submit(self, request: SampleRequest, key: EngineKey) -> Ticket:
         """Enqueue one request under ``key``; returns its Ticket future.
@@ -115,7 +202,9 @@ class RequestQueue:
         ``ServingLoop._abort``) the ticket comes back already failed with
         the loop's error, so clients surface it immediately instead of
         blocking out their ``result`` timeout on a request nobody will
-        ever serve."""
+        ever serve.  A ``validate``/``warm_start`` hook failure likewise
+        fails only the returned ticket — never the submitting thread or
+        the queue."""
         if request.arrival_time is None:
             request = dataclasses.replace(request,
                                           arrival_time=self.clock())
@@ -124,11 +213,42 @@ class RequestQueue:
             if self._closed is not None:
                 ticket.fail(self._closed)
                 return ticket
-            # (priority desc, seqno asc): FIFO-fair among equal priorities;
-            # the sort key is immutable after submit, so one insertion
-            # keeps the bucket ordered
-            bisect.insort(self._buckets.setdefault(key, []), ticket,
-                          key=lambda t: (-t.request.priority, t.seqno))
+        try:
+            if self.warm_start is not None and request.init is None:
+                init = self.warm_start(request, key)
+                if init is not None:
+                    request = dataclasses.replace(request, init=init)
+                    ticket.request = request
+            if self.validate is not None:
+                self.validate(request, key)
+        except Exception as error:  # noqa: BLE001 — fail the one ticket
+            ticket.fail(error)
+            return ticket
+        return self._enqueue(ticket)
+
+    def resubmit(self, ticket: Ticket,
+                 request: Optional[SampleRequest] = None) -> Ticket:
+        """Re-enqueue an OPEN ticket — the refine tier's continuation path:
+        the ticket keeps its identity (draft future, seqno, original
+        ``arrival_time``) while ``request`` (when given) replaces what the
+        next dispatch will run.  Also the preemption path: a vacated
+        preemptible lane's ticket re-enters the queue with its warm-started
+        request intact."""
+        if ticket.done():
+            raise ValueError(
+                f"ticket {ticket.key.describe()}#{ticket.seqno} already "
+                f"resolved; cannot resubmit")
+        if request is not None:
+            ticket.request = request
+        return self._enqueue(ticket)
+
+    def _enqueue(self, ticket: Ticket) -> Ticket:
+        with self._lock:
+            if self._closed is not None:
+                ticket.fail(self._closed)
+                return ticket
+            bisect.insort(self._buckets.setdefault(ticket.key, []), ticket,
+                          key=self._order)
         return ticket
 
     def close(self, error: BaseException) -> None:
@@ -146,17 +266,21 @@ class RequestQueue:
         traffic could starve an old low-priority request forever: every
         deadline-triggered dispatch would fill with newer, higher-priority
         tickets and never include the one whose deadline fired.
+        Preemptible (background/refine) tickets never deadline-promote:
+        they keep the original request's arrival time, which is NOT a
+        service deadline for the background tier.
         """
         with self._lock:
             bucket = self._buckets.get(key, [])
             if promote_before is not None:
                 bucket = sorted(bucket, key=lambda t: (
-                    t.request.arrival_time > promote_before,
+                    t.request.preemptible
+                    or t.request.arrival_time > promote_before,
                     -t.request.priority, t.seqno))
             taken, rest = bucket[:n], bucket[n:]
             if rest:
                 # restore the submit order invariant (priority desc, seqno)
-                rest.sort(key=lambda t: (-t.request.priority, t.seqno))
+                rest.sort(key=self._order)
                 self._buckets[key] = rest
             else:
                 self._buckets.pop(key, None)
@@ -165,6 +289,13 @@ class RequestQueue:
     def pending(self, key: EngineKey) -> int:
         with self._lock:
             return len(self._buckets.get(key, ()))
+
+    def pending_urgent(self, key: EngineKey) -> int:
+        """Pending NON-preemptible tickets — the fresh-arrival demand the
+        loop sizes its admission (and refine-lane preemption) against."""
+        with self._lock:
+            return sum(not t.request.preemptible
+                       for t in self._buckets.get(key, ()))
 
     def keys(self) -> List[EngineKey]:
         """Keys with at least one pending ticket."""

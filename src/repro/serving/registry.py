@@ -10,65 +10,15 @@ never see meshes, shardings, or denoiser parameters.
 """
 from __future__ import annotations
 
-import collections
 import threading
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, Optional
 
 from repro.sampling.engine import SamplingEngine
-from repro.sampling.types import SampleRequest, SampleResult, WarmStart
+from repro.sampling.types import SampleRequest, WarmStart
+from repro.serving.cache import TrajectoryCache
 from repro.serving.queue import EngineKey
 
-
-class TrajectoryCache:
-    """Per-:class:`EngineKey` store of solved trajectories (Sec 4.2 warm-
-    start cache SKELETON).
-
-    Trajectories are (T+1, ...)-shaped per key, which is exactly why the
-    cache hangs off the registry: one cache per key, like one engine per
-    key.  The minimal policy here keys by conditioning label (LRU,
-    capacity-bounded) and hands back a ready-to-submit :class:`WarmStart`;
-    the "seed neighborhood" similarity metric and submit-time
-    auto-population are the remaining ROADMAP work this scaffolds.
-    Early-stopped results are not cached — a warm start should descend
-    from a fully-converged trajectory.
-    """
-
-    def __init__(self, capacity: int = 64):
-        if capacity < 1:
-            raise ValueError(f"capacity must be >= 1, got {capacity}")
-        self.capacity = capacity
-        self._lock = threading.Lock()
-        self._store: "collections.OrderedDict" = collections.OrderedDict()
-
-    def record(self, result: SampleResult) -> bool:
-        """Offer one solved result; returns True if it was cached."""
-        if not result.converged or result.request is None:
-            return False
-        with self._lock:
-            label = result.request.label
-            self._store.pop(label, None)
-            self._store[label] = result.trajectory
-            while len(self._store) > self.capacity:
-                self._store.popitem(last=False)
-        return True
-
-    def lookup(self, label: int,
-               t_init: Optional[int] = None) -> Optional[WarmStart]:
-        """A WarmStart for ``label``'s condition, or None (LRU-refreshes)."""
-        with self._lock:
-            traj = self._store.get(label)
-            if traj is None:
-                return None
-            self._store.move_to_end(label)
-        return WarmStart(trajectory=traj, t_init=t_init)
-
-    def labels(self) -> List[int]:
-        with self._lock:
-            return list(self._store)
-
-    def __len__(self) -> int:
-        with self._lock:
-            return len(self._store)
+__all__ = ["EngineRegistry", "TrajectoryCache"]
 
 
 class EngineRegistry:
@@ -81,12 +31,16 @@ class EngineRegistry:
     """
 
     def __init__(self, factory: Callable[[EngineKey], SamplingEngine], *,
-                 cache_capacity: int = 64):
+                 cache_capacity: int = 64,
+                 cache_max_bytes: Optional[int] = None,
+                 cache_neighborhood: float = 0.0):
         self._factory = factory
         self._lock = threading.Lock()
         self._engines: Dict[EngineKey, SamplingEngine] = {}
         self._caches: Dict[EngineKey, TrajectoryCache] = {}
         self._cache_capacity = cache_capacity
+        self._cache_max_bytes = cache_max_bytes
+        self._cache_neighborhood = cache_neighborhood
 
     def get(self, key: EngineKey) -> SamplingEngine:
         with self._lock:
@@ -105,9 +59,33 @@ class EngineRegistry:
         with self._lock:
             cache = self._caches.get(key)
             if cache is None:
-                cache = self._caches[key] = \
-                    TrajectoryCache(self._cache_capacity)
+                cache = self._caches[key] = TrajectoryCache(
+                    self._cache_capacity,
+                    max_bytes=self._cache_max_bytes,
+                    neighborhood=self._cache_neighborhood)
             return cache
+
+    # -- RequestQueue submit-time hooks --------------------------------------
+
+    def validate_submit(self, request: SampleRequest,
+                        key: EngineKey) -> None:
+        """``RequestQueue(validate=...)`` hook: raise exactly what a
+        dispatch carrying ``request`` would raise — including warm-start
+        shape/dtype mismatches against ``key``'s engine geometry — so a
+        bad request fails its one ticket at submit time instead of
+        poisoning a packed dispatch at trace time."""
+        self.get(key).validate_request(request)
+
+    def warm_start_for(self, request: SampleRequest,
+                       key: EngineKey) -> Optional[WarmStart]:
+        """``RequestQueue(warm_start=...)`` hook: the Sec 4.2 cache
+        auto-population point.  A request that already carries an ``init``
+        keeps it; otherwise the key's cache answers with its best match
+        (exact (label, seed) -> same label -> neighborhood), or None for a
+        cold start."""
+        if request.init is not None:
+            return None
+        return self.cache(key).lookup(request.label, seed=request.seed)
 
     def warmup(self, key: EngineKey, *, slots: int,
                request: Optional[SampleRequest] = None,

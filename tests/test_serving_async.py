@@ -21,7 +21,8 @@ from repro.sampling import (SampleRequest, SamplingEngine, WarmStart,
                             get_sampler)
 from repro.sampling.engine import PendingBatch
 from repro.serving import (Batcher, BatchingPolicy, EngineKey, EngineRegistry,
-                           RequestQueue, ServingLoop)
+                           RefinePlanner, RefinePolicy, RequestQueue,
+                           ServingLoop, TrajectoryCache)
 from tests.helpers import make_label_denoiser
 
 D = 24
@@ -528,6 +529,219 @@ def test_trajectory_cache_skeleton_on_registry():
     assert len(cache) == 2 and cache.lookup(1) is None  # evicted
     with pytest.raises(ValueError, match="capacity"):
         TrajectoryCache(capacity=0)
+
+
+def _solved(label, seed, n=8):
+    """Minimal converged stand-in result for direct cache tests."""
+    from types import SimpleNamespace
+    value = label if isinstance(label, (int, float)) else 0.0
+    return SimpleNamespace(
+        request=SampleRequest(label=label, seed=seed),
+        trajectory=np.full((n,), value, np.float32),     # 4*n bytes
+        converged=True, early_stopped=False)
+
+
+def test_trajectory_cache_byte_bound_and_counters():
+    """Matured cache policy: LRU eviction under BOTH the entry-count and
+    ``max_bytes`` bounds, hit/miss/evict counters, LRU refresh on hit,
+    and refusal of entries that cannot fit the byte bound alone."""
+    cache = TrajectoryCache(capacity=8, max_bytes=3 * 32)
+    for label, seed in ((0, 1), (1, 2), (2, 3)):
+        assert cache.record(_solved(label, seed))
+    assert cache.stats() == dict(hits=0, misses=0, evictions=0,
+                                 entries=3, bytes=3 * 32)
+    # the byte bound (not capacity) evicts the LRU entry
+    assert cache.record(_solved(3, 4))
+    stats = cache.stats()
+    assert stats["entries"] == 3 and stats["bytes"] == 3 * 32
+    assert stats["evictions"] == 1
+    assert cache.lookup(0) is None and cache.stats()["misses"] == 1
+    # a hit LRU-refreshes: label 1 survives the next eviction, label 2 goes
+    assert cache.lookup(1, seed=2) is not None
+    assert cache.stats()["hits"] == 1
+    assert cache.record(_solved(4, 5))
+    assert cache.lookup(1) is not None and cache.lookup(2) is None
+    # an entry that cannot fit alone is refused without evicting anything
+    assert not cache.record(_solved(5, 6, n=100))
+    assert cache.stats()["entries"] == 3
+    with pytest.raises(ValueError, match="max_bytes"):
+        TrajectoryCache(max_bytes=0)
+    with pytest.raises(ValueError, match="neighborhood"):
+        TrajectoryCache(neighborhood=-1)
+
+
+def test_trajectory_cache_neighborhood_lookup():
+    """Similarity beyond exact labels: exact ``(label, seed)`` is preferred,
+    then the most-recent same-label entry, then the nearest label within
+    the ``neighborhood`` distance threshold."""
+    cache = TrajectoryCache(capacity=8, neighborhood=2)
+    cache.record(_solved(0, 1))
+    cache.record(_solved(5, 2))
+    ws = cache.lookup(4)                    # |4-5| = 1 within threshold
+    assert ws is not None and np.all(np.asarray(ws.trajectory) == 5)
+    ws = cache.lookup(1)                    # |1-0| = 1 beats |1-5| = 4
+    assert ws is not None and np.all(np.asarray(ws.trajectory) == 0)
+    assert cache.lookup(8) is None          # |8-5| = 3 > neighborhood
+    # exact (label, seed) wins over a nearer OTHER label
+    cache.record(_solved(5, 9))
+    exact = cache.lookup(5, seed=2)
+    assert exact is not None
+    # same-label fallback picks the most recent entry when the seed misses
+    recent = cache.lookup(5, seed=404)
+    assert recent is not None
+    # non-numeric conditioning labels only ever match on equality
+    cache.record(_solved("cat", 3))
+    assert cache.lookup("cat") is not None
+    assert cache.lookup("dog") is None
+
+
+def test_submit_time_validation_and_cache_warm_start():
+    """Tentpole: a malformed warm start fails ITS ticket at submit time —
+    never reaching a packed dispatch — and the registry's cache
+    auto-populates ``init`` for repeat submissions via the queue's
+    ``warm_start`` hook (explicit inits win over the cache)."""
+    T = 10
+    key = EngineKey("oracle", T, "taa")
+    registry = EngineRegistry(make_factory())
+    queue = RequestQueue(validate=registry.validate_submit,
+                         warm_start=registry.warm_start_for)
+
+    bad_shape = queue.submit(SampleRequest(
+        label=1, seed=2, init=WarmStart(np.zeros((3, D), np.float32))), key)
+    assert bad_shape.done() and queue.pending(key) == 0    # not enqueued
+    with pytest.raises(ValueError, match="trajectory shape"):
+        bad_shape.result()
+    bad_depth = queue.submit(SampleRequest(
+        label=1, seed=2,
+        init=WarmStart(np.zeros((T + 1, D), np.float32),
+                       t_init=T + 3)), key)
+    with pytest.raises(ValueError, match="t_init"):
+        bad_depth.result()
+    bad_dtype = queue.submit(SampleRequest(
+        label=1, seed=2, init=WarmStart(np.zeros((T + 1, D), np.int32))),
+        key)
+    with pytest.raises(ValueError, match="floating"):
+        bad_dtype.result()
+
+    # populate the cache through a recording loop, then a repeat
+    # submission warm-starts at submit time and a fresh label stays cold
+    loop = ServingLoop(registry, queue, Batcher(BatchingPolicy(max_batch=2)),
+                       chunk_iters=2, cache=True)
+    cold = queue.submit(SampleRequest(label=1, seed=7), key)
+    assert cold.request.init is None        # nothing cached yet
+    loop.drain()
+    cold_res = cold.result()
+    assert cold_res.converged
+    warm = queue.submit(SampleRequest(label=1, seed=7), key)
+    assert warm.request.init is not None    # spliced in at submit
+    assert np.array_equal(np.asarray(warm.request.init.trajectory),
+                          np.asarray(cold_res.trajectory))
+    other = queue.submit(SampleRequest(label=3, seed=8), key)
+    assert other.request.init is None       # cache miss stays cold
+    loop.drain()
+    assert warm.result().converged
+    assert warm.result().iters <= cold_res.iters
+    assert other.result().converged
+    stats = registry.cache(key).stats()
+    assert stats["hits"] >= 1 and stats["misses"] >= 1
+    # an explicit init wins over the cache hook
+    explicit = WarmStart(cold_res.trajectory, t_init=0)
+    keep = queue.submit(SampleRequest(label=1, seed=7, init=explicit), key)
+    assert keep.request.init is explicit
+    loop.drain()
+    assert keep.result().converged
+
+
+# --- two-tier draft-and-refine ----------------------------------------------
+
+def test_two_tier_ticket_drafts_then_refines():
+    """Tentpole: a quality-budgeted request resolves its DRAFT stage at the
+    early exit (``on_draft`` + ``draft_result``), the planner re-enqueues
+    a warm-started preemptible continuation on the SAME ticket, and the
+    final result reaches full tolerance — with zero extra stepwise
+    traces for the refine splices."""
+    T = 12
+    key = EngineKey("oracle", T, "taa")
+    registry = EngineRegistry(make_factory())
+    queue = RequestQueue()
+    loop = ServingLoop(registry, queue, Batcher(BatchingPolicy(max_batch=4)),
+                       chunk_iters=2, refiner=RefinePlanner(RefinePolicy()))
+    drafts_seen = []
+    tickets = []
+    for i in range(6):
+        req = SampleRequest(label=i % N_LABELS, seed=60 + i,
+                            **({} if i % 3 == 0
+                               else dict(quality_steps=1)))
+        ticket = queue.submit(req, key)
+        ticket.on_draft = drafts_seen.append
+        tickets.append(ticket)
+    loop.drain()
+    assert registry.get(key).stats["stepwise_traces"] == 5
+    for i, ticket in enumerate(tickets):
+        final = ticket.result(timeout=0)
+        draft = ticket.draft_result(timeout=0)
+        assert ticket.done() and ticket.draft_done()
+        assert final.converged and not final.early_stopped
+        if i % 3 == 0:
+            # single-stage: the final result IS the draft stage
+            assert ticket.refines == 0 and draft is final
+        else:
+            assert ticket.refines == 1
+            assert draft.early_stopped and draft.iters == 1
+            assert ticket.draft_time <= ticket.completed_time
+            # the continuation rode the same ticket at background tier
+            assert ticket.request.preemptible
+            assert ticket.request.priority == -1
+            assert ticket.request.init is not None
+            assert ticket.request.quality_steps is None
+    assert len(drafts_seen) == 6           # fires for single-stage too
+    assert loop.stats["drafts"] == 4 and loop.stats["refines"] == 4
+    assert loop.stats["completed"] == 6
+    # the refined final lands on the same fixed point as a cold solve
+    [ref] = reference_engine(T).run_batch([SampleRequest(label=1, seed=61)])
+    got = tickets[1].result()
+    assert np.allclose(np.asarray(got.x0), np.asarray(ref.x0), atol=1e-2)
+
+
+def test_urgent_arrivals_preempt_refine_lanes():
+    """Satellite: refine lanes are background occupancy — when fresh
+    non-preemptible arrivals outnumber the free lanes, the loop vacates
+    preemptible refine lanes (tickets re-enqueued, warm start intact) so
+    refinement never starves admission, and the preempted tickets still
+    complete both stages."""
+    T = 16
+    key = EngineKey("oracle", T, "taa")
+    registry = EngineRegistry(make_factory())
+    queue = RequestQueue()
+    loop = ServingLoop(registry, queue, Batcher(BatchingPolicy(max_batch=2)),
+                       chunk_iters=1, refiner=RefinePlanner(RefinePolicy()))
+    draft_tix = [queue.submit(SampleRequest(label=i, seed=10 + i,
+                                            quality_steps=1), key)
+                 for i in range(2)]
+    # pump until both drafts resolved and their continuations occupy the
+    # bank's (only) two lanes
+    for _ in range(50):
+        loop.pump(flush=True)
+        if all(t.draft_done() for t in draft_tix) \
+                and queue.pending(key) == 0 and loop.inflight == 2:
+            break
+    else:
+        pytest.fail("refine continuations never occupied the lanes")
+    assert all(t.request.preemptible for t in draft_tix)
+    assert loop.stats["preemptions"] == 0
+    urgent = [queue.submit(SampleRequest(label=2 + i, seed=20 + i), key)
+              for i in range(2)]
+    loop.pump(flush=True)
+    assert loop.stats["preemptions"] >= 1   # refine lanes vacated
+    loop.drain()
+    for ticket in draft_tix + urgent:
+        res = ticket.result(timeout=0)
+        assert res.converged and not res.early_stopped
+        assert ticket.done() and ticket.draft_done()
+    assert all(t.refines == 1 for t in draft_tix)
+    # preempted continuations kept their warm start (no cold restart)
+    assert all(t.request.init is not None for t in draft_tix)
+    assert registry.get(key).stats["stepwise_traces"] == 5
 
 
 def test_serving_loop_threaded_live_arrivals():

@@ -10,12 +10,17 @@
 # forced-host-device mesh; and a fourth EARLY-EXIT soak — a mixed-tau
 # Poisson stream through the iteration-level continuous-batching path
 # (chunked stepwise solver state, per-request tau/quality_steps budgets,
-# lanes retiring and refilling mid-solve); and a fifth stepwise host-
+# lanes retiring and refilling mid-solve); a fifth stepwise host-
 # protocol guard asserting the compiled-once stepwise program count stays
 # at five (open/init/merge/step/gather) and that a drain round issues
-# exactly one blocking poll per live key.  Extra args ("$@", e.g. a test
-# file) are forwarded to both pytest passes; a pass whose marker selects
-# nothing in that target (pytest exit 5) is not a failure.
+# exactly one blocking poll per live key (including refine-lane splices);
+# and a sixth REFINE-TIER soak — mixed draft/refine Poisson traffic
+# through the two-tier draft-and-refine path (drafts resolve at their
+# quality_steps exit, warm-started preemptible continuations splice back
+# into the live bank, the warm-start cache auto-populates repeat
+# submissions).  Extra args ("$@", e.g. a test file) are forwarded to
+# both pytest passes; a pass whose marker selects nothing in that target
+# (pytest exit 5) is not a failure.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -49,3 +54,12 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 echo "--- stepwise host-protocol guard (5 programs, 1 blocking poll/round) ---"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python tools/stepwise_guard.py
+
+echo "--- refine-tier soak (two-tier draft-and-refine + warm-start cache) ---"
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.launch.serve --serve-async --smoke \
+        --mesh debug --data-parallel 4 --model-parallel 2 \
+        --requests 12 --steps-T 8 --batch-size 4 --arrival-rate 100 \
+        --chunk-iters 1 --loose-tau-frac 0.6 --loose-tau 1e-3 \
+        --quality-steps 1 --refine --cache

@@ -11,6 +11,12 @@ re-introduces per-round retraces or extra blocking fetches fails CI:
      (harvest's fetch of the piggybacked summary; ``stepwise_report``
      reuses the round's cached poll instead of re-fetching).
 
+Two phases: a plain early-exit drain (the PR-5 guard), then a TWO-TIER
+draft-and-refine drain — refine-lane splices (warm-started continuations
+re-entering the live bank) must add ZERO retraces and keep the
+one-poll-per-key-per-round invariant, and every two-tier ticket must
+resolve both stages.
+
 Run from the repo root:  PYTHONPATH=src python tools/stepwise_guard.py
 """
 from __future__ import annotations
@@ -21,7 +27,8 @@ from pathlib import Path
 from repro.core import ddim_coeffs
 from repro.sampling import SampleRequest, SamplingEngine, get_sampler
 from repro.serving import (Batcher, BatchingPolicy, EngineKey, EngineRegistry,
-                           RequestQueue, ServingLoop)
+                           RefinePlanner, RefinePolicy, RequestQueue,
+                           ServingLoop)
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "tests"))
 from helpers import make_label_denoiser  # noqa: E402 — the tests' oracle
@@ -29,12 +36,48 @@ from helpers import make_label_denoiser  # noqa: E402 — the tests' oracle
 D, N_LABELS, T = 16, 4, 10
 
 
-def main() -> int:
+def make_registry():
     eps_apply = make_label_denoiser(dim=D, n_labels=N_LABELS)
-    key = EngineKey("oracle", T, "taa")
-    registry = EngineRegistry(lambda k: SamplingEngine(
+    return EngineRegistry(lambda k: SamplingEngine(
         eps_apply, None, ddim_coeffs(k.T), get_sampler(k.solver),
         sample_shape=(D,)))
+
+
+def drain_with_poll_accounting(loop, queue, engine, phase: str) -> int:
+    """Pump round-by-round; FAIL unless each live round polls exactly once."""
+    rounds = 0
+    while len(queue) or loop.inflight:
+        polls_before = engine.stats["blocking_polls"]
+        live = 1 if loop.inflight else 0
+        loop.pump(flush=True)
+        delta = engine.stats["blocking_polls"] - polls_before
+        rounds += 1
+        if live and delta != 1:
+            print(f"FAIL[{phase}]: round {rounds} issued {delta} blocking "
+                  f"polls for 1 live key (want exactly 1)")
+            return -1
+        if not live and delta > 1:
+            print(f"FAIL[{phase}]: round {rounds} issued {delta} blocking "
+                  f"polls while idle")
+            return -1
+        if rounds > 10_000:
+            print(f"FAIL[{phase}]: drain did not terminate")
+            return -1
+    return rounds
+
+
+def check_traces(engine, phase: str) -> bool:
+    traces = engine.stats["stepwise_traces"]
+    if traces != 5:
+        print(f"FAIL[{phase}]: stepwise_traces = {traces}, want 5 "
+              f"(open/init/merge/step/gather compiled once each)")
+        return False
+    return True
+
+
+def phase_earlyexit() -> int:
+    key = EngineKey("oracle", T, "taa")
+    registry = make_registry()
     queue = RequestQueue()
     loop = ServingLoop(registry, queue, Batcher(BatchingPolicy(max_batch=4)),
                        chunk_iters=2)
@@ -46,48 +89,85 @@ def main() -> int:
     tickets = [queue.submit(r, key) for r in reqs]
     engine = registry.get(key)
 
-    # pump round-by-round so per-round poll accounting is exact
-    rounds = 0
-    while len(queue) or loop.inflight:
-        polls_before = engine.stats["blocking_polls"]
-        live = 1 if loop.inflight else 0
-        loop.pump(flush=True)
-        delta = engine.stats["blocking_polls"] - polls_before
-        rounds += 1
-        if live and delta != 1:
-            print(f"FAIL: round {rounds} issued {delta} blocking polls "
-                  f"for 1 live key (want exactly 1)")
-            return 1
-        if not live and delta > 1:
-            print(f"FAIL: round {rounds} issued {delta} blocking polls "
-                  f"while idle")
-            return 1
-        if rounds > 10_000:
-            print("FAIL: drain did not terminate")
-            return 1
+    rounds = drain_with_poll_accounting(loop, queue, engine, "earlyexit")
+    if rounds < 0:
+        return 1
     for t in tickets:
         t.result()
-
-    traces = engine.stats["stepwise_traces"]
-    if traces != 5:
-        print(f"FAIL: stepwise_traces = {traces}, want 5 "
-              f"(open/init/merge/step/gather compiled once each)")
+    if not check_traces(engine, "earlyexit"):
         return 1
 
     # report must reuse the round's cached poll, not re-fetch
     polls_before = engine.stats["blocking_polls"]
     loop.bank_reports()
     if engine.stats["blocking_polls"] != polls_before:
-        print("FAIL: stepwise_report issued an extra blocking poll after "
-              "the round's harvest already polled")
+        print("FAIL[earlyexit]: stepwise_report issued an extra blocking "
+              "poll after the round's harvest already polled")
         return 1
 
     report = loop.bank_reports()[key]
-    print(f"OK: {report['completed']} served, stepwise_traces=5, "
+    print(f"OK[earlyexit]: {report['completed']} served, stepwise_traces=5, "
           f"{report['blocking_polls']} blocking polls over {rounds} rounds, "
           f"{report['gather_launches']} retired-lane gathers, "
           f"{report['host_fetch_bytes']} bytes fetched")
     return 0
+
+
+def phase_refine() -> int:
+    key = EngineKey("oracle", T, "taa")
+    registry = make_registry()
+    queue = RequestQueue(validate=registry.validate_submit,
+                         warm_start=registry.warm_start_for)
+    loop = ServingLoop(registry, queue, Batcher(BatchingPolicy(max_batch=4)),
+                       chunk_iters=2,
+                       refiner=RefinePlanner(RefinePolicy()), cache=True)
+    # mixed population: full-quality requests interleaved with drafts whose
+    # continuations splice back into the live bank mid-drain
+    reqs = [SampleRequest(label=i % N_LABELS, seed=70 + i,
+                          **({} if i % 2 == 0 else dict(quality_steps=1)))
+            for i in range(10)]
+    tickets = [queue.submit(r, key) for r in reqs]
+    engine = registry.get(key)
+
+    rounds = drain_with_poll_accounting(loop, queue, engine, "refine")
+    if rounds < 0:
+        return 1
+    if not check_traces(engine, "refine"):
+        return 1
+    two_tier = 0
+    for t in tickets:
+        final = t.result()
+        draft = t.draft_result()
+        if not (t.done() and t.draft_done()):
+            print(f"FAIL[refine]: ticket #{t.seqno} missing a stage")
+            return 1
+        if final.early_stopped:
+            print(f"FAIL[refine]: ticket #{t.seqno} final result is still "
+                  f"a draft (early_stopped)")
+            return 1
+        if t.refines:
+            two_tier += 1
+            if not draft.early_stopped:
+                print(f"FAIL[refine]: ticket #{t.seqno} drafted without an "
+                      f"early exit")
+                return 1
+    if not two_tier:
+        print("FAIL[refine]: no two-tier ticket exercised the refine splice")
+        return 1
+
+    report = loop.bank_reports()[key]
+    print(f"OK[refine]: {report['completed']} served ({two_tier} two-tier, "
+          f"{loop.stats['refines']} refine splices, "
+          f"{loop.stats['preemptions']} preemptions), stepwise_traces=5, "
+          f"{report['blocking_polls']} blocking polls over {rounds} rounds")
+    return 0
+
+
+def main() -> int:
+    rc = phase_earlyexit()
+    if rc:
+        return rc
+    return phase_refine()
 
 
 if __name__ == "__main__":
