@@ -70,9 +70,10 @@ def bench_placement():
     """The placement serving benchmarks measure on: ``REPRO_BENCH_MESH``
     names a registered mesh (e.g. ``debug`` under
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8``), with
-    ``REPRO_BENCH_DATA_PARALLEL`` / ``REPRO_BENCH_MODEL_PARALLEL`` axis-size
-    overrides (``debug`` + 4/2 spans all 8 forced host devices); unset means
-    the single-device host placement."""
+    ``REPRO_BENCH_DATA_PARALLEL`` / ``REPRO_BENCH_MODEL_PARALLEL`` /
+    ``REPRO_BENCH_TIME_PARALLEL`` axis-size overrides (``debug`` + 4/2
+    spans all 8 forced host devices); unset means the single-device host
+    placement."""
     name = os.environ.get("REPRO_BENCH_MESH", "")
     if not name:
         return Placement.host()
@@ -82,10 +83,27 @@ def bench_placement():
         data_parallel=int(os.environ.get("REPRO_BENCH_DATA_PARALLEL", 0))
         or None,
         model_parallel=int(os.environ.get("REPRO_BENCH_MODEL_PARALLEL", 0))
+        or None,
+        time_parallel=int(os.environ.get("REPRO_BENCH_TIME_PARALLEL", 0))
         or None)
     # for_mesh: the canonical serving placement (spans ("pod", "data") on
     # multi-pod meshes), so benches time the program serve.py dispatches
     return Placement.for_mesh(mesh)
+
+
+def mesh_geometry(placement: Placement = None) -> dict:
+    """Mesh-geometry record merged into every BENCH_serving.json section so
+    cross-run comparisons are interpretable: the mesh name the run was
+    configured with (``REPRO_BENCH_MESH`` or ``host``) and the per-axis
+    shard counts of the placement actually measured."""
+    plc = placement or bench_placement()
+    return {"mesh_geometry": {
+        "mesh": os.environ.get("REPRO_BENCH_MESH", "") or "host",
+        "data_shards": plc.data_shards,
+        "model_shards": plc.model_shards,
+        "time_shards": plc.time_shards,
+        "devices": plc.num_devices,
+    }}
 
 
 #: machine-readable serving-benchmark results, tracked across PRs

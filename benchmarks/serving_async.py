@@ -52,6 +52,25 @@ DiT, placement from ``REPRO_BENCH_MESH`` like ``serving_throughput``):
     device-NFE/request at fixed final quality, draft p50 vs the earlyexit
     baseline, and that every two-tier ticket resolves both stages.
 
+  * ``time_shard``  — the third mesh axis: the SAME stepwise population
+    on the data-only debug mesh (4 devices, data=2 x model=2) vs the
+    debug-time mesh (8 devices, data=2 x time=2 x model=2 — identical
+    slot geometry, ``time`` is the only extra resource).  Window rows
+    within one solve shard over ``time``, so per-device window evals
+    drop ~``time_shards``x while rounds-to-converge, per-request iters,
+    stepwise traces (still 5) and blocking polls per round are all
+    unchanged.  Window sharding is bitwise-identical to the SAME program
+    unsharded (the subprocess mesh tests check that); across these two
+    distinct TP-sharded XLA programs only ulp-level partial-sum
+    reordering remains, recorded as ``max_rel_err`` like the ``async``
+    section does vs sync.
+    Needs 8 devices (``XLA_FLAGS=--xla_force_host_platform_device_count=8``);
+    records a ``skipped`` marker otherwise.
+
+Every section also embeds ``mesh_geometry`` (mesh name + per-axis shard
+counts of the placement actually measured, via ``common.mesh_geometry``)
+so cross-run comparisons in ``BENCH_serving.json`` are interpretable.
+
 Every section records ``host_fetch_bytes_per_round`` and
 ``blocking_polls_per_round`` (round = one dispatch for whole-batch modes,
 one harvest/step scheduling round for stepwise modes) so future PRs get
@@ -74,6 +93,7 @@ from __future__ import annotations
 
 import time
 
+import jax
 import numpy as np
 
 from benchmarks import common
@@ -112,8 +132,109 @@ def _per_round(engine, mark, rounds):
         blocking_polls_per_round=(polls_now - mark[1]) / rounds)
 
 
+def _measure_stepwise_on(placement, T, requests, max_batch, chunk_iters):
+    """Drain ``requests`` through the stepwise loop on ``placement`` and
+    return the work/protocol record the ``time_shard`` section compares."""
+    key = EngineKey("dit-xl", T, "taa")
+    registry = EngineRegistry(
+        lambda k: common.serving_engine(common.scenario("ddim", k.T),
+                                        placement=placement))
+    batcher = Batcher(BatchingPolicy(max_batch=max_batch))
+    slots = batcher.slots_for(registry.get(key))
+    registry.warmup(key, slots=slots, chunk_iters=chunk_iters)
+    engine = registry.get(key)
+    traces_after_warmup = engine.stats["stepwise_traces"]
+    queue = RequestQueue()
+    loop = ServingLoop(registry, queue, batcher, chunk_iters=chunk_iters)
+    t0 = time.perf_counter()
+    tickets = [queue.submit(r, key) for r in requests]
+    loop.drain()
+    wall = time.perf_counter() - t0
+    results = [t.result() for t in tickets]
+    report = loop.bank_reports()[key]
+    rounds = loop.stats["chunks"] + 1      # + final harvest-only round
+    # one solve's window rows are split over data (slot replicas) AND time
+    # (row shards), so each device evaluates device_nfe / (data * time)
+    eval_shards = placement.data_shards * placement.time_shards
+    return dict(
+        placement=placement.describe(),
+        devices=placement.num_devices,
+        data_shards=placement.data_shards,
+        model_shards=placement.model_shards,
+        time_shards=placement.time_shards,
+        slots=slots,
+        reqps=len(requests) / wall,
+        rounds=rounds,
+        device_nfe=report["device_nfe"],
+        window_evals_per_device=report["device_nfe"] / eval_shards,
+        gather_launches=report["gather_launches"],
+        blocking_polls_per_round=report["blocking_polls"] / rounds,
+        stepwise_traces=engine.stats["stepwise_traces"],
+        extra_traces=engine.stats["stepwise_traces"] - traces_after_warmup,
+        iters=[r.iters for r in results],
+        converged=all(r.converged or r.early_stopped for r in results),
+        x0s=[np.asarray(r.x0) for r in results])
+
+
+def _time_shard(T, n_requests, max_batch):
+    """``time_shard`` section: data-only mesh vs the debug-time mesh at the
+    same slot geometry (data=2), time=2 as the only added resource."""
+    if jax.device_count() < 8:
+        common.write_bench_json("time_shard", dict(
+            skipped=True, devices=jax.device_count(),
+            reason="needs 8 devices: rerun under "
+                   "XLA_FLAGS=--xla_force_host_platform_device_count=8"))
+        return []
+    from repro.launch.mesh import make_mesh
+    from repro.sampling import Placement
+
+    chunk_iters = 3
+    requests = [SampleRequest(label=i % 10, seed=4100 + i)
+                for i in range(n_requests)]
+    data_plc = Placement.for_mesh(make_mesh(
+        "debug", data_parallel=2, model_parallel=2,
+        devices=jax.devices()[:4]))
+    time_plc = Placement.for_mesh(make_mesh(
+        "debug-time", devices=jax.devices()[:8]))
+    base = _measure_stepwise_on(data_plc, T, requests, max_batch,
+                                chunk_iters)
+    shard = _measure_stepwise_on(time_plc, T, requests, max_batch,
+                                 chunk_iters)
+    eval_scaledown = base["window_evals_per_device"] \
+        / max(shard["window_evals_per_device"], 1e-9)
+    rel_err = max(
+        float(np.linalg.norm(a - b) / (np.linalg.norm(b) + 1e-9))
+        for a, b in zip(shard.pop("x0s"), base.pop("x0s")))
+    iters_equal = base["iters"] == shard["iters"]
+    common.write_bench_json("time_shard", dict(
+        T=T, n_requests=n_requests, chunk_iters=chunk_iters,
+        data_only={k: v for k, v in base.items() if k != "iters"},
+        time_sharded={k: v for k, v in shard.items() if k != "iters"},
+        window_evals_per_device_scaledown=eval_scaledown,
+        rounds_equal=base["rounds"] == shard["rounds"],
+        iters_equal=bool(iters_equal),
+        max_rel_err=rel_err,
+        extra_traces=shard["extra_traces"],
+        blocking_polls_per_round_delta=shard["blocking_polls_per_round"]
+        - base["blocking_polls_per_round"]))
+    return [(
+        f"serve_async/ddim{T}/time_shard_k{chunk_iters}/"
+        f"t{shard['time_shards']}",
+        1e6 / shard["reqps"],
+        f"window_evals/device={shard['window_evals_per_device']:.0f} vs "
+        f"data-only {base['window_evals_per_device']:.0f} "
+        f"({eval_scaledown:.2f}x lower);rounds={shard['rounds']} vs "
+        f"{base['rounds']};iters_equal={iters_equal};"
+        f"stepwise_traces={shard['stepwise_traces']};"
+        f"extra_traces={shard['extra_traces']};"
+        f"polls/round={shard['blocking_polls_per_round']:.2f} vs "
+        f"{base['blocking_polls_per_round']:.2f};"
+        f"max_rel_err={rel_err:.1e}")]
+
+
 def run(T: int = 25, n_requests: int = 24, max_batch: int = 8):
     placement = common.bench_placement()
+    geometry = common.mesh_geometry(placement)
     key = EngineKey("dit-xl", T, "taa")
 
     def factory(k):
@@ -443,6 +564,7 @@ def run(T: int = 25, n_requests: int = 24, max_batch: int = 8):
     common.write_bench_json("async", dict(
         T=T, n_requests=n_requests, slots=slots,
         placement=placement.describe(), devices=placement.num_devices,
+        **geometry,
         sync_reqps=sync_reqps, sync_p50_s=sync_p50, sync_p95_s=sync_p95,
         sync_dispatches=len(groups),
         sync_host_fetch_bytes_per_round=sync_rounds[
@@ -470,6 +592,7 @@ def run(T: int = 25, n_requests: int = 24, max_batch: int = 8):
     common.write_bench_json("earlyexit", dict(
         T=T, n_requests=n_requests, slots=slots, chunk_iters=chunk_iters,
         placement=placement.describe(), devices=placement.num_devices,
+        **geometry,
         tight_tau=tight["tau"], loose_tau=loose["tau"],
         quality_steps=loose["quality_steps"], loose_frac=loose_frac,
         iters_equal_vs_whole_batch=bool(ee_iters_equal),
@@ -498,6 +621,7 @@ def run(T: int = 25, n_requests: int = 24, max_batch: int = 8):
     common.write_bench_json("stepwise_overhead", dict(
         T=T, n_requests=n_requests, slots=slots, chunk_iters=ov_chunk,
         placement=placement.describe(), devices=placement.num_devices,
+        **geometry,
         rounds=ov_rounds, harvests=ov_report["harvests"],
         gather_launches=ov_report["gather_launches"],
         host_fetch_bytes_per_round=new_bytes_round,
@@ -511,6 +635,7 @@ def run(T: int = 25, n_requests: int = 24, max_batch: int = 8):
     common.write_bench_json("refine", dict(
         T=T, n_requests=n_requests, slots=slots, chunk_iters=rf_chunk,
         placement=placement.describe(), devices=placement.num_devices,
+        **geometry,
         draft_quality_steps=rf_chunk,
         cold_reqps=n_requests / cold_wall,
         cold_device_nfe_per_request=cold_nfe / n_requests,
@@ -535,4 +660,5 @@ def run(T: int = 25, n_requests: int = 24, max_batch: int = 8):
         cache_hits=cstats["hits"], cache_misses=cstats["misses"],
         cache_evictions=cstats["evictions"],
         cache_entries=cstats["entries"], cache_bytes=cstats["bytes"]))
+    rows += _time_shard(T, n_requests, max_batch)
     return rows

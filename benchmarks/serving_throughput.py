@@ -48,5 +48,6 @@ def run(T: int = 25, n_requests: int = 8):
             min_slot_utilization=util)
     common.write_bench_json("throughput", dict(
         T=T, n_requests=n_requests, placement=placement.describe(),
-        devices=placement.num_devices, **series))
+        devices=placement.num_devices,
+        **common.mesh_geometry(placement), **series))
     return rows

@@ -43,7 +43,8 @@ def _suffix_sum(x, axis=0):
 def anderson_update(x_rows, R, dX, dF, window_mask, *, mode: str,
                     lam: float, safeguard_mask=None,
                     use_pallas: Optional[bool] = None,
-                    interpret: bool = False):
+                    interpret: bool = False,
+                    time_axis: Optional[str] = None):
     """One accelerated update over the active window.
 
     x_rows: (T, D) current iterate rows 0..T-1
@@ -54,6 +55,10 @@ def anderson_update(x_rows, R, dX, dF, window_mask, *, mode: str,
         converged; Theorem 3.6 forces those rows to the plain FP update.
     use_pallas / interpret: kernel dispatch for the Gram/apply passes
         (None = auto: Pallas on TPU, jnp refs elsewhere).
+    time_axis: mesh axis the caller's solve window shards over; ops pins
+        every reduction operand/output replicated over it, so any
+        time_axis value keeps the update bitwise-identical (see the
+        dispatch notes in ``repro.kernels.ops``).
     Returns x_new rows (T, D) (only window rows are meaningful).
     """
     f32 = jnp.float32
@@ -64,7 +69,8 @@ def anderson_update(x_rows, R, dX, dF, window_mask, *, mode: str,
         x_new = x_rows + R
         return jnp.where(window_mask[:, None], x_new, x_rows)
 
-    kw = dict(use_pallas=use_pallas, interpret=interpret)
+    kw = dict(use_pallas=use_pallas, interpret=interpret,
+              time_axis=time_axis)
     wmask = window_mask.astype(f32)  # (T,)
 
     if mode == "taa":

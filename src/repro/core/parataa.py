@@ -40,6 +40,7 @@ import numpy as np
 from repro.core.coeffs import SolverCoeffs, system_matrices
 from repro.core.system import noise_term, first_order_residuals
 from repro.core.anderson import anderson_update
+from repro.models.shardctx import window_constrain
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,6 +58,14 @@ class ParaTAAConfig:
                                # Gram/apply passes (None = auto: Pallas on
                                # TPU, the bitwise-identical jnp refs elsewhere)
     interpret: bool = False    # Pallas interpret mode (kernel tests on CPU)
+    time_axis: Optional[str] = None  # mesh axis the solve window shards
+                               # over (None = unsharded window; resolved
+                               # against the ambient shardctx mesh at trace
+                               # time, so the config stays a pure pytree-
+                               # static value).  Sharded: the window eps
+                               # eval only; every cross-row reduction stays
+                               # replicated, so the time_shards > 1 program
+                               # is bitwise-identical to the unsharded one.
 
 
 @jax.tree_util.register_dataclass
@@ -140,15 +149,24 @@ def _iterate(state: SolverState, static, cfg: ParaTAAConfig,
     t1 = jnp.maximum(0, t2 - w + 1)
 
     # --- line 3: evaluate eps at window timesteps t1+1 .. t1+w in parallel --
+    # The w window rows are independent in this pass, so they shard over the
+    # `time` mesh axis: each time shard evaluates w / time_shards denoiser
+    # rows.  The downstream replicate pins (e, R, the updated rows) make the
+    # collective back an all-gather — exact, so bitwise vs unsharded.
+    ta = cfg.time_axis
     xs = jax.lax.dynamic_slice(x, (t1 + 1, 0), (w, D))
     taus_w = jax.lax.dynamic_slice(static["taus"], (t1 + 1,), (w,))
-    e_w = eps_fn(xs, taus_w).astype(e.dtype)
+    xs = window_constrain(xs, ta)
+    taus_w = window_constrain(taus_w, ta)
+    e_w = window_constrain(eps_fn(xs, taus_w).astype(e.dtype), ta)
     e = jax.lax.dynamic_update_slice(e, e_w, (t1 + 1, 0))
+    e = window_constrain(e, ta, replicate=True)
 
     # --- update residual R = F^(k)(x, e) - x (rows 0..T-1) ------------------
+    # lift_k/weps_k contract OVER rows (triangular system) — replicated.
     F = static["lift_k"] @ x.astype(jnp.float32) \
         + static["weps_k"] @ e.astype(jnp.float32) + state.noise_k
-    R = F - x[:T].astype(jnp.float32)
+    R = window_constrain(F - x[:T].astype(jnp.float32), ta, replicate=True)
 
     # --- lines 4-9: first-order residuals, window bookkeeping ---------------
     # Deviation from Algorithm 1 (robustness fix, see DESIGN §7): rows above
@@ -194,7 +212,9 @@ def _iterate(state: SolverState, static, cfg: ParaTAAConfig,
     x_rows_new = anderson_update(
         x[:T], R.astype(x.dtype), state.dX, dF, upd_mask,
         mode=mode, lam=cfg.lam, safeguard_mask=guard,
-        use_pallas=cfg.use_pallas, interpret=cfg.interpret)
+        use_pallas=cfg.use_pallas, interpret=cfg.interpret,
+        time_axis=ta)
+    x_rows_new = window_constrain(x_rows_new, ta, replicate=True)
 
     x_new = jnp.concatenate([x_rows_new, x[T:]], axis=0)
 

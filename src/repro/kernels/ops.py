@@ -65,32 +65,119 @@ def rglru(a, b, *, use_pallas: Optional[bool] = None, interpret: bool = False):
     return _ref.rglru_ref(a, b)
 
 
+def _row_pin(x, time_axis, dim=0, *, replicate=False):
+    """Time-axis constraint pin (lazy import keeps kernels<->models acyclic)."""
+    if time_axis is None:
+        return x
+    from repro.models.shardctx import window_constrain
+    return window_constrain(x, time_axis, dim, replicate=replicate)
+
+
+# Time-sharded dispatch notes (both caught by the bitwise suite):
+#
+#  * When ``time_axis`` is set the public wrappers run the implementation
+#    INLINE in the caller's trace instead of through their jit wrapper —
+#    sharding-constraint pins inside a nested pjit miscompile under
+#    ``lax.while_loop`` on the CPU partitioner (values, not just layouts,
+#    go wrong).
+#  * The pins are REPLICATE pins only.  Row-sharding the full-T operands
+#    (dF/dX/R/x/mask) back-propagates a time sharding onto the solver's
+#    loop carry, and ``dynamic_slice`` at a traced offset on a row-sharded
+#    carry miscompiles the same way.  The window slice values the solver
+#    feeds the denoiser ARE safely sharded (pins in
+#    ``repro.core.parataa._iterate``) — that is the dominant cost; the
+#    replicate pins here hold every cross-row reduction (suffix cumsum,
+#    global Gram, gamma solve) to the unsharded f32 summation order, so the
+#    only collective over ``time`` is the exact all-gather at the window
+#    boundary.
+
+
+def _taa_gram_impl(dF, R, mask, use_pallas, interpret, time_axis):
+    if _pick(use_pallas):
+        G, u = _taa_gram(dF, R, mask, interpret=interpret)
+    else:
+        G, u = _ref.taa_gram_ref(dF, R, mask)
+    return (_row_pin(G, time_axis, replicate=True),
+            _row_pin(u, time_axis, replicate=True))
+
+
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def _taa_gram_jit(dF, R, mask, *, use_pallas, interpret):
+    return _taa_gram_impl(dF, R, mask, use_pallas, interpret, None)
+
+
 def taa_gram(dF, R, mask, *, use_pallas: Optional[bool] = None,
-             interpret: bool = False):
+             interpret: bool = False, time_axis: Optional[str] = None):
     """Raw per-row Gram blocks G_t = F_t^T F_t, u_t = F_t^T R_t (masked) —
     the memory-bound first pass every Anderson variant shares; the AA/AA+
     variants reduce these blocks globally instead of via the TAA suffix
-    cumsum (see ``repro.core.anderson``)."""
-    if _pick(use_pallas):
-        return _taa_gram(dF, R, mask, interpret=interpret)
-    return _ref.taa_gram_ref(dF, R, mask)
+    cumsum (see ``repro.core.anderson``).
+
+    ``time_axis`` pins the G/u outputs replicated over that mesh axis, so
+    the AA/TAA cross-row reductions downstream keep the unsharded f32
+    summation order — bitwise-identical to the unsharded pass.
+    """
+    if time_axis is not None:
+        return _taa_gram_impl(dF, R, mask, use_pallas, interpret, time_axis)
+    return _taa_gram_jit(dF, R, mask, use_pallas=use_pallas,
+                         interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("lam", "use_pallas", "interpret"))
-def taa_rowwise_gamma(dF, R, mask, *, lam: float = 1e-8,
-                      use_pallas: Optional[bool] = None, interpret: bool = False):
-    """Per-row TAA gammas via suffix-cumsum Grams (Theorem 3.2)."""
-    G, u = taa_gram(dF, R, mask, use_pallas=use_pallas, interpret=interpret)
+def _taa_rowwise_gamma_impl(dF, R, mask, lam, use_pallas, interpret,
+                            time_axis):
+    # The suffix cumsum is a cross-row reduction: taa_gram hands back
+    # REPLICATED G/u, so the f32 summation order here is the unsharded one
+    # regardless of time_axis — the bitwise contract.
+    G, u = _taa_gram_impl(dF, R, mask, use_pallas, interpret, time_axis)
     m = dF.shape[0]
     Gs = jnp.flip(jnp.cumsum(jnp.flip(G, 0), 0), 0) + lam * jnp.eye(m)
     us = jnp.flip(jnp.cumsum(jnp.flip(u, 0), 0), 0)
-    return jnp.linalg.solve(Gs, us[..., None])[..., 0]
+    Gs = _row_pin(Gs, time_axis, replicate=True)
+    us = _row_pin(us, time_axis, replicate=True)
+    gamma = jnp.linalg.solve(Gs, us[..., None])[..., 0]
+    return _row_pin(gamma, time_axis, replicate=True)
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "use_pallas", "interpret"))
+def _taa_rowwise_gamma_jit(dF, R, mask, *, lam, use_pallas, interpret):
+    return _taa_rowwise_gamma_impl(dF, R, mask, lam, use_pallas, interpret,
+                                   None)
+
+
+def taa_rowwise_gamma(dF, R, mask, *, lam: float = 1e-8,
+                      use_pallas: Optional[bool] = None,
+                      interpret: bool = False,
+                      time_axis: Optional[str] = None):
+    """Per-row TAA gammas via suffix-cumsum Grams (Theorem 3.2)."""
+    if time_axis is not None:
+        return _taa_rowwise_gamma_impl(dF, R, mask, lam, use_pallas,
+                                       interpret, time_axis)
+    return _taa_rowwise_gamma_jit(dF, R, mask, lam=lam,
+                                  use_pallas=use_pallas, interpret=interpret)
+
+
+def _taa_apply_impl(x, R, dX, dF, gamma, mask, use_pallas, interpret,
+                    time_axis):
+    if _pick(use_pallas):
+        out = _taa_apply(x, R, dX, dF, gamma, mask, interpret=interpret)
+    else:
+        out = _ref.taa_apply_ref(x, R, dX, dF, gamma, mask)
+    return _row_pin(out, time_axis, replicate=True)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def _taa_apply_jit(x, R, dX, dF, gamma, mask, *, use_pallas, interpret):
+    return _taa_apply_impl(x, R, dX, dF, gamma, mask, use_pallas, interpret,
+                           None)
+
+
 def taa_apply(x, R, dX, dF, gamma, mask, *,
-              use_pallas: Optional[bool] = None, interpret: bool = False):
-    if _pick(use_pallas):
-        return _taa_apply(x, R, dX, dF, gamma, mask, interpret=interpret)
-    return _ref.taa_apply_ref(x, R, dX, dF, gamma, mask)
+              use_pallas: Optional[bool] = None, interpret: bool = False,
+              time_axis: Optional[str] = None):
+    """Per-row history apply x_t + R_t - (dX_t + dF_t) @ gamma_t;
+    ``time_axis`` pins the output replicated (see dispatch notes above)."""
+    if time_axis is not None:
+        return _taa_apply_impl(x, R, dX, dF, gamma, mask, use_pallas,
+                               interpret, time_axis)
+    return _taa_apply_jit(x, R, dX, dF, gamma, mask, use_pallas=use_pallas,
+                          interpret=interpret)

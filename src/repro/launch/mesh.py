@@ -41,8 +41,9 @@ class MeshSpec:
         return int(np.prod(self.shape))
 
     def with_sizes(self, *, data_parallel: Optional[int] = None,
-                   model_parallel: Optional[int] = None) -> "MeshSpec":
-        """Override the data/model axis sizes (None keeps the default)."""
+                   model_parallel: Optional[int] = None,
+                   time_parallel: Optional[int] = None) -> "MeshSpec":
+        """Override the data/model/time axis sizes (None keeps the default)."""
         sizes = dict(zip(self.axes, self.shape))
         if data_parallel:
             if "data" not in sizes:
@@ -52,6 +53,13 @@ class MeshSpec:
             if "model" not in sizes:
                 raise ValueError(f"mesh '{self.name}' has no 'model' axis")
             sizes["model"] = model_parallel
+        if time_parallel:
+            if "time" not in sizes:
+                raise ValueError(
+                    f"mesh '{self.name}' has no 'time' axis; pick a "
+                    f"*-time mesh ({', '.join(time_mesh_names())}) to "
+                    f"shard solve windows")
+            sizes["time"] = time_parallel
         return dataclasses.replace(
             self, shape=tuple(sizes[a] for a in self.axes))
 
@@ -76,9 +84,10 @@ class MeshSpec:
                 f"mesh '{self.name}' {dict(zip(self.axes, self.shape))} "
                 f"needs {n} devices but jax.device_count()={avail}; pick a "
                 f"smaller registered mesh ({', '.join(mesh_names())}), "
-                f"override --data-parallel/--model-parallel, or force host "
-                f"devices with XLA_FLAGS=--xla_force_host_platform_"
-                f"device_count={n}")
+                f"override --data-parallel/--model-parallel"
+                f"{'/--time-parallel' if 'time' in self.axes else ''}, or "
+                f"force host devices with XLA_FLAGS=--xla_force_host_"
+                f"platform_device_count={n}")
         return jax.make_mesh(self.shape, self.axes)
 
 
@@ -102,13 +111,20 @@ def mesh_names():
     return sorted(_REGISTRY)
 
 
+def time_mesh_names():
+    """Registered meshes carrying a 'time' axis (window sharding)."""
+    return sorted(n for n, s in _REGISTRY.items() if "time" in s.axes)
+
+
 def make_mesh(name: str = "debug", *, data_parallel: Optional[int] = None,
               model_parallel: Optional[int] = None,
+              time_parallel: Optional[int] = None,
               devices: Optional[Sequence] = None) -> Mesh:
     """Resolve a registered mesh by name, apply axis-size overrides,
     validate against the device count, and build it."""
     spec = get_mesh_spec(name).with_sizes(
-        data_parallel=data_parallel, model_parallel=model_parallel)
+        data_parallel=data_parallel, model_parallel=model_parallel,
+        time_parallel=time_parallel)
     return spec.build(devices=devices)
 
 
@@ -120,6 +136,17 @@ register_mesh(MeshSpec("pod", (16, 16), ("data", "model"),
                        "one pod slice"))
 register_mesh(MeshSpec("multi-pod", (2, 16, 16), ("pod", "data", "model"),
                        "two pod slices, FSDP over (pod, data)"))
+
+# time-axis geometries: the solve window of ONE request shards over `time`
+# (devices >> slots regime; see repro.sampling.Placement.window_spec)
+register_mesh(MeshSpec("debug-time", (2, 2, 2), ("data", "time", "model"),
+                       "CPU integration tests with window sharding "
+                       "(8 forced host devices)"))
+register_mesh(MeshSpec("single-host-time", (2, 2, 2),
+                       ("data", "time", "model"),
+                       "one 8-accelerator host, windows split two ways"))
+register_mesh(MeshSpec("pod-time", (8, 2, 16), ("data", "time", "model"),
+                       "one pod slice with window sharding"))
 
 
 # -- legacy constructors (thin wrappers over the registry) -------------------

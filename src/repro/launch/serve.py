@@ -4,9 +4,11 @@ Each request is (class label | conditioning, seed, optional warm start).
 Requests run through one ``repro.sampling.SamplingEngine`` per
 (arch, T, solver) configuration, and the engine owns its device placement:
 ``--mesh`` resolves a named mesh from ``repro.launch.mesh`` (with
-``--data-parallel`` / ``--model-parallel`` axis overrides) into a
-``Placement`` that shards the request axis over `data` and TP-shards the
-denoiser over `model`; without ``--mesh`` the engine runs the bitwise-
+``--data-parallel`` / ``--model-parallel`` / ``--time-parallel`` axis
+overrides) into a ``Placement`` that shards the request axis over `data`,
+TP-shards the denoiser over `model`, and — on the ``*-time`` meshes —
+shards each request's solve window over `time` (bitwise-identical to the
+unsharded window); without ``--mesh`` the engine runs the bitwise-
 identical host placement.  Sequential DDIM/DDPM is the same engine with the
 "seq" spec.  Every dispatch reports device utilization (request slots filled
 x devices engaged) without retracing — one compilation per engine.
@@ -75,6 +77,7 @@ def _force_host_devices(argv):
     p.add_argument("--mesh", default="none")
     p.add_argument("--data-parallel", type=int, default=0)
     p.add_argument("--model-parallel", type=int, default=0)
+    p.add_argument("--time-parallel", type=int, default=0)
     args, _ = p.parse_known_args(argv)
     if args.mesh == "none":
         return
@@ -85,7 +88,8 @@ def _force_host_devices(argv):
     try:
         spec = get_mesh_spec(args.mesh).with_sizes(
             data_parallel=args.data_parallel or None,
-            model_parallel=args.model_parallel or None)
+            model_parallel=args.model_parallel or None,
+            time_parallel=args.time_parallel or None)
     except (KeyError, ValueError):
         return  # let main() raise the informative registry error
     os.environ["XLA_FLAGS"] = (
@@ -122,12 +126,14 @@ def make_eps_apply(cfg):
 
 
 def make_placement(mesh_name: str = "none", *, data_parallel: int = 0,
-                   model_parallel: int = 0, donate: bool = False) -> Placement:
+                   model_parallel: int = 0, time_parallel: int = 0,
+                   donate: bool = False) -> Placement:
     """Resolve serving CLI placement flags into a Placement."""
     if mesh_name == "none":
         return Placement.host()
     mesh = make_mesh(mesh_name, data_parallel=data_parallel or None,
-                     model_parallel=model_parallel or None)
+                     model_parallel=model_parallel or None,
+                     time_parallel=time_parallel or None)
     return Placement.for_mesh(mesh, donate=donate)
 
 
@@ -340,7 +346,8 @@ def report_dispatches(engine: SamplingEngine, *, out=print):
     for i, d in enumerate(engine.last_dispatches):
         out(f"dispatch {i}: {d['requests']}/{d['slots']} request slots "
             f"({d['slot_utilization']:.0%}) on {d['devices']} device(s) "
-            f"[data={d['data_shards']} x model={d['model_shards']}], "
+            f"[data={d['data_shards']} x model={d['model_shards']}"
+            f" x time={d['time_shards']}], "
             f"wall {d['wall_s']:.2f}s")
 
 
@@ -374,6 +381,11 @@ def main(argv=None):
     p.add_argument("--model-parallel", type=int, default=0,
                    help="override the mesh's `model` axis size "
                         "(denoiser TP shards; 0 = registry default)")
+    p.add_argument("--time-parallel", type=int, default=0,
+                   help="override a *-time mesh's `time` axis size (solve-"
+                        "window shards within one request — bitwise-"
+                        "identical to the unsharded window; 0 = registry "
+                        "default)")
     p.add_argument("--donate", action="store_true",
                    help="donate packed input buffers to the compiled "
                         "program (pods; CPU ignores donation)")
@@ -427,6 +439,7 @@ def main(argv=None):
 
     placement = make_placement(args.mesh, data_parallel=args.data_parallel,
                                model_parallel=args.model_parallel,
+                               time_parallel=args.time_parallel,
                                donate=args.donate)
     print(f"placement: {placement.describe()}")
 

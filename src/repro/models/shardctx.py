@@ -101,3 +101,36 @@ def constrain(x, *logical_axes):
     assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
     spec = P(*[_resolve(ax, d, mesh) for ax, d in zip(logical_axes, x.shape)])
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def window_constrain(x, axis: Optional[str], dim: int = 0, *,
+                     replicate: bool = False):
+    """Pin ``x`` row-sharded over mesh axis ``axis`` along ``dim`` — or pin
+    it fully replicated (``replicate=True``).
+
+    The ParaTAA time-axis sharding discipline (bitwise-safety contract):
+    only per-row-independent passes — the window eps eval, the per-row Gram
+    blocks, the per-row history apply — are sharded over ``time``; every
+    cross-row reduction (suffix cumsums, global Grams, the triangular
+    ``lift_k @ x``) runs on REPLICATED operands.  The collective between the
+    two regimes is therefore an all-gather (exact data movement), never a
+    psum of partial f32 sums, so summation order — and the bits — match the
+    unsharded program.  The explicit ``replicate=True`` pins are what hold
+    XLA to that contract.
+
+    No-op when there is no ambient mesh, ``axis`` is ``None`` or absent from
+    the mesh, or (sharding only) ``x.shape[dim]`` is not divisible by the
+    axis size — e.g. ``seq`` mode's w=1 window, or T+1-row pytrees.
+    """
+    mesh = _MESH.get()
+    if mesh is None or axis is None:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if axis not in sizes:
+        return x
+    spec = [None] * x.ndim
+    if not replicate:
+        if x.shape[dim] % sizes[axis] != 0:
+            return x
+        spec[dim] = axis
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

@@ -171,6 +171,15 @@ class SamplingEngine:
             return 1
         return min(self.spec.window or T, T)
 
+    def _solver_cfg(self, cfg):
+        """Thread the placement's time axis into a solver config: when the
+        mesh carries time shards, the solve window's denoiser evals shard
+        over them (bitwise-identical — see ``ParaTAAConfig.time_axis``)."""
+        plc = self.placement
+        if plc.time_shards > 1:
+            return dataclasses.replace(cfg, time_axis=plc.time_axis)
+        return cfg
+
     # -- program construction ------------------------------------------------
 
     def _batched_fn(self, diagnostics: bool):
@@ -187,7 +196,7 @@ class SamplingEngine:
                 traj = _sequential_sample(eps_fn, coeffs, xi, return_traj=True)
                 return traj, dict(iters=jnp.int32(T), nfe=jnp.int32(T),
                                   converged=jnp.asarray(True))
-            solver = spec.solver_config(T)
+            solver = self._solver_cfg(spec.solver_config(T))
             fn = _parataa.sample_recording if diagnostics else _parataa.sample
             traj, info = fn(eps_fn, coeffs, solver, xi, x_init=x0,
                             dtype=self.dtype, t_init=t_init,
@@ -292,8 +301,15 @@ class SamplingEngine:
     def pack(self, requests: Sequence[SampleRequest]):
         """Pack requests into the program's (xis, labels, x0s, t_inits,
         tau_sqs, iter_caps) arrays, placed onto the request-axis sharding
-        when meshed."""
-        return self.placement.place_batch(*self._pack(requests))
+        when meshed — the (slots, T+1, ...) trajectory arrays additionally
+        land on the window sharding when the mesh carries time shards (and
+        their row count divides them)."""
+        xis, labels, x0s, t_inits, tau_sqs, iter_caps = \
+            self._pack(requests)
+        xis, x0s = self.placement.place_window(xis, x0s)
+        labels, t_inits, tau_sqs, iter_caps = self.placement.place_batch(
+            labels, t_inits, tau_sqs, iter_caps)
+        return xis, labels, x0s, t_inits, tau_sqs, iter_caps
 
     # -- execution -----------------------------------------------------------
 
@@ -380,8 +396,10 @@ class SamplingEngine:
             blocking_polls=1,
             requests=n_real, slots=pending.slots,
             slot_utilization=plc.slot_utilization(n_real, pending.slots),
+            axis_utilization=plc.axis_utilization(n_real, pending.slots,
+                                                  self.window),
             devices=plc.num_devices, data_shards=plc.data_shards,
-            model_shards=plc.model_shards,
+            model_shards=plc.model_shards, time_shards=plc.time_shards,
             iters=[int(i) for i in all_iters[:n_real]],
             nfe=[int(n) for n in info["nfe"][:n_real]],
             warm_start_depth=[self._warm_depth(r)
@@ -479,7 +497,7 @@ class SamplingEngine:
     # ``stats["stepwise_traces"]`` must stay at 5 across refills.
 
     def _stepwise_cfg(self):
-        return self.spec.stepwise_config(self.coeffs.T)
+        return self._solver_cfg(self.spec.stepwise_config(self.coeffs.T))
 
     def _constrain_state(self, tree):
         plc = self.placement
@@ -675,9 +693,9 @@ class SamplingEngine:
         # lanes outside the refill keep their OLD state (merge mask), so the
         # repeated filler rows never land anywhere
         untouched = np.asarray([j not in pos for j in range(bank.slots)])
-        xis, x0s, t_inits, tau_sqs, iter_caps, labels, mask = \
-            self.placement.place_batch(xis, x0s, t_inits, tau_sqs,
-                                       iter_caps, labels,
+        xis, x0s = self.placement.place_window(xis, x0s)
+        t_inits, tau_sqs, iter_caps, labels, mask = \
+            self.placement.place_batch(t_inits, tau_sqs, iter_caps, labels,
                                        jnp.asarray(~untouched))
         with self.placement.activations():
             fresh = self._stepwise_program("init")(
@@ -820,6 +838,13 @@ class SamplingEngine:
             gather_launches=bank.gather_launches,
             harvests=bank.harvests,
             devices=self.placement.num_devices,
+            slot_utilization=self.placement.slot_utilization(
+                bank.occupied, bank.slots),
+            axis_utilization=self.placement.axis_utilization(
+                bank.occupied, bank.slots, self.window),
+            data_shards=self.placement.data_shards,
+            model_shards=self.placement.model_shards,
+            time_shards=self.placement.time_shards,
             **self._work_report(useful, bank.device_iters, bank.slots))
 
     def reset_stats(self) -> None:

@@ -42,6 +42,13 @@ class Placement:
     data_axis:  mesh axis (or tuple of axes) the request dimension shards
                 over.
     model_axis: mesh axis the denoiser TP-shards over (via shardctx rules).
+    time_axis:  mesh axis the solve WINDOW of one request shards over
+                (None = window replicated within a data shard, the pre-time
+                behavior).  Window rows are per-row-independent in the eps
+                eval, Gram, and apply passes, so this axis multiplies
+                per-request parallelism without touching the cross-row
+                reductions — see ``repro.core.parataa`` for the bitwise
+                contract.
     donate:     donate packed input buffers to the compiled program (saves
                 one batch of HBM on real pods; leave False on CPU, whose
                 backend ignores donation).
@@ -49,6 +56,7 @@ class Placement:
     mesh: Optional[Mesh] = None
     data_axis: AxisName = "data"
     model_axis: str = "model"
+    time_axis: Optional[str] = None
     donate: bool = False
 
     def __post_init__(self):
@@ -63,6 +71,16 @@ class Placement:
             raise ValueError(
                 f"model_axis {self.model_axis!r} not in mesh axes "
                 f"{sorted(names)}")
+        if self.time_axis is not None:
+            if self.time_axis not in names:
+                raise ValueError(
+                    f"time_axis {self.time_axis!r} not in mesh axes "
+                    f"{sorted(names)}")
+            claimed = set(self.data_axes) | {self.model_axis}
+            if self.time_axis in claimed:
+                raise ValueError(
+                    f"time_axis {self.time_axis!r} already claimed by "
+                    f"data/model ({sorted(claimed)})")
 
     # -- constructors --------------------------------------------------------
 
@@ -75,9 +93,12 @@ class Placement:
     def for_mesh(cls, mesh, *, donate: bool = False) -> "Placement":
         """Canonical placement for a registry mesh: the request axis spans
         every data-parallel dimension — ``("pod", "data")`` on multi-pod
-        meshes, plain ``"data"`` otherwise."""
+        meshes, plain ``"data"`` otherwise — and a ``time`` mesh axis, when
+        present, shards the solve window within each request."""
         data_axis = ("pod", "data") if "pod" in mesh.axis_names else "data"
-        return cls(mesh=mesh, data_axis=data_axis, donate=donate)
+        time_axis = "time" if "time" in mesh.axis_names else None
+        return cls(mesh=mesh, data_axis=data_axis, time_axis=time_axis,
+                   donate=donate)
 
     # -- topology ------------------------------------------------------------
 
@@ -112,6 +133,13 @@ class Placement:
         return self._axis_sizes().get(self.model_axis, 1)
 
     @property
+    def time_shards(self) -> int:
+        """Number of shards one request's solve window splits into."""
+        if not self.is_sharded or self.time_axis is None:
+            return 1
+        return self._axis_sizes().get(self.time_axis, 1)
+
+    @property
     def num_devices(self) -> int:
         return self.mesh.devices.size if self.is_sharded else 1
 
@@ -131,6 +159,27 @@ class Placement:
         assert self.is_sharded, "host placement has no shardings"
         return NamedSharding(self.mesh, P())
 
+    def window_spec(self, shape, dim: int = 1) -> P:
+        """PartitionSpec sharding the leading (request) axis over data AND
+        dimension ``dim`` (the trajectory-row / window axis) over time.
+
+        ``shape`` is the concrete array shape: the time entry divisibility-
+        guards against it (T+1-row pytrees with T+1 % time_shards != 0 fall
+        back to the plain batch spec, matching the in-program
+        ``window_constrain`` no-op)."""
+        ax = self.data_axis if isinstance(self.data_axis, str) \
+            else tuple(self.data_axis)
+        spec = [ax] + [None] * (len(shape) - 1)
+        t = self.time_shards
+        if self.time_axis is not None and t > 1 and len(shape) > dim \
+                and shape[dim] % t == 0:
+            spec[dim] = self.time_axis
+        return P(*spec)
+
+    def window_sharding(self, shape, dim: int = 1) -> NamedSharding:
+        assert self.is_sharded, "host placement has no shardings"
+        return NamedSharding(self.mesh, self.window_spec(shape, dim))
+
     def spmd_axes(self) -> AxisName:
         """`spmd_axis_name` for jax.vmap over the request axis."""
         return self.data_axis
@@ -145,6 +194,24 @@ class Placement:
     def slot_utilization(self, n_real: int, slots: int) -> float:
         return n_real / max(slots, 1)
 
+    def axis_utilization(self, n_real: int, slots: int,
+                         window: int) -> dict:
+        """Per-mesh-axis utilization of the request grid.
+
+        data: fraction of request slots holding real work.
+        time: fraction of each window shard holding real rows — 1.0 when the
+              window divides time_shards (or the axis is off), < 1.0 when a
+              non-divisible window falls back to replicated rows (shards
+              then redo the full window).
+        """
+        t = self.time_shards
+        if t > 1 and window % t == 0:
+            time_util = 1.0
+        else:
+            time_util = 1.0 / t
+        return {"data": self.slot_utilization(n_real, slots),
+                "time": time_util}
+
     # -- data movement -------------------------------------------------------
 
     def place_batch(self, *arrays):
@@ -153,6 +220,16 @@ class Placement:
             return arrays
         return tuple(jax.device_put(a, self.batch_sharding(a.ndim))
                      for a in arrays)
+
+    def place_window(self, *arrays, dim: int = 1):
+        """device_put packed (slots, rows, ...) trajectory arrays onto the
+        batch x window sharding (time entry divisibility-guarded per array;
+        identical to ``place_batch`` when ``time_axis`` is off)."""
+        if not self.is_sharded:
+            return arrays
+        return tuple(
+            jax.device_put(a, self.window_sharding(a.shape, dim))
+            for a in arrays)
 
     def constrain_batch(self, x):
         """with_sharding_constraint of the request axis (inside jit)."""
@@ -196,6 +273,8 @@ class Placement:
             return "host (no mesh, 1 program replica)"
         sizes = self._axis_sizes()
         axes = " x ".join(f"{a}={n}" for a, n in sizes.items())
+        window = "" if self.time_axis is None else \
+            f", windows over {self.time_axis}"
         return (f"mesh[{axes}] ({self.num_devices} devices; requests over "
                 f"{'/'.join(self.data_axes)}, denoiser over "
-                f"{self.model_axis})")
+                f"{self.model_axis}{window})")

@@ -18,7 +18,12 @@
 # through the two-tier draft-and-refine path (drafts resolve at their
 # quality_steps exit, warm-started preemptible continuations splice back
 # into the live bank, the warm-start cache auto-populates repeat
-# submissions).  Extra args ("$@", e.g. a test file) are forwarded to
+# submissions); and a seventh TIME-SHARDED soak — the same stepwise
+# stream on the debug-time mesh (data=2 x time=2 x model=2: each
+# request's solve window shards over the `time` axis) plus the stepwise
+# guard's `time` phase, asserting window sharding keeps the five
+# compiled-once programs and one blocking poll per key per round.
+# Extra args ("$@", e.g. a test file) are forwarded to
 # both pytest passes; a pass whose marker selects nothing in that target
 # (pytest exit 5) is not a failure.
 set -euo pipefail
@@ -63,3 +68,15 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         --requests 12 --steps-T 8 --batch-size 4 --arrival-rate 100 \
         --chunk-iters 1 --loose-tau-frac 0.6 --loose-tau 1e-3 \
         --quality-steps 1 --refine --cache
+
+echo "--- time-sharded soak (window sharding over the time axis) ---"
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.launch.serve --serve-async --smoke \
+        --mesh debug-time \
+        --requests 12 --steps-T 8 --batch-size 4 --arrival-rate 100 \
+        --chunk-iters 2 --loose-tau-frac 0.5 --loose-tau 1e-2 \
+        --quality-steps 3
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python tools/stepwise_guard.py --phase time

@@ -11,16 +11,25 @@ re-introduces per-round retraces or extra blocking fetches fails CI:
      (harvest's fetch of the piggybacked summary; ``stepwise_report``
      reuses the round's cached poll instead of re-fetching).
 
-Two phases: a plain early-exit drain (the PR-5 guard), then a TWO-TIER
+Default phases: a plain early-exit drain (the PR-5 guard), then a TWO-TIER
 draft-and-refine drain — refine-lane splices (warm-started continuations
 re-entering the live bank) must add ZERO retraces and keep the
 one-poll-per-key-per-round invariant, and every two-tier ticket must
 resolve both stages.
 
+``--phase time`` runs the early-exit drain under a time-sharded placement
+(the ``debug-time`` mesh, 8 forced host devices): window sharding over the
+``time`` axis must compile the SAME five stepwise programs and keep one
+blocking poll per key per round — a sharding change that retraces per
+round or adds fetches fails here before it reaches a pod.
+
 Run from the repo root:  PYTHONPATH=src python tools/stepwise_guard.py
+Time phase:  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python tools/stepwise_guard.py --phase time
 """
 from __future__ import annotations
 
+import argparse
 import sys
 from pathlib import Path
 
@@ -36,11 +45,11 @@ from helpers import make_label_denoiser  # noqa: E402 — the tests' oracle
 D, N_LABELS, T = 16, 4, 10
 
 
-def make_registry():
+def make_registry(placement=None):
     eps_apply = make_label_denoiser(dim=D, n_labels=N_LABELS)
     return EngineRegistry(lambda k: SamplingEngine(
         eps_apply, None, ddim_coeffs(k.T), get_sampler(k.solver),
-        sample_shape=(D,)))
+        sample_shape=(D,), placement=placement))
 
 
 def drain_with_poll_accounting(loop, queue, engine, phase: str) -> int:
@@ -75,9 +84,9 @@ def check_traces(engine, phase: str) -> bool:
     return True
 
 
-def phase_earlyexit() -> int:
+def phase_earlyexit(placement=None, phase: str = "earlyexit") -> int:
     key = EngineKey("oracle", T, "taa")
-    registry = make_registry()
+    registry = make_registry(placement)
     queue = RequestQueue()
     loop = ServingLoop(registry, queue, Batcher(BatchingPolicy(max_batch=4)),
                        chunk_iters=2)
@@ -89,28 +98,49 @@ def phase_earlyexit() -> int:
     tickets = [queue.submit(r, key) for r in reqs]
     engine = registry.get(key)
 
-    rounds = drain_with_poll_accounting(loop, queue, engine, "earlyexit")
+    rounds = drain_with_poll_accounting(loop, queue, engine, phase)
     if rounds < 0:
         return 1
     for t in tickets:
         t.result()
-    if not check_traces(engine, "earlyexit"):
+    if not check_traces(engine, phase):
         return 1
 
     # report must reuse the round's cached poll, not re-fetch
     polls_before = engine.stats["blocking_polls"]
     loop.bank_reports()
     if engine.stats["blocking_polls"] != polls_before:
-        print("FAIL[earlyexit]: stepwise_report issued an extra blocking "
-              "poll after the round's harvest already polled")
+        print(f"FAIL[{phase}]: stepwise_report issued an extra blocking "
+              f"poll after the round's harvest already polled")
         return 1
 
     report = loop.bank_reports()[key]
-    print(f"OK[earlyexit]: {report['completed']} served, stepwise_traces=5, "
+    extra = "" if placement is None else \
+        f", time_shards={report['time_shards']}"
+    print(f"OK[{phase}]: {report['completed']} served, stepwise_traces=5, "
           f"{report['blocking_polls']} blocking polls over {rounds} rounds, "
           f"{report['gather_launches']} retired-lane gathers, "
-          f"{report['host_fetch_bytes']} bytes fetched")
+          f"{report['host_fetch_bytes']} bytes fetched{extra}")
     return 0
+
+
+def phase_time() -> int:
+    """The early-exit drain on the debug-time mesh: window sharding must
+    keep the five compiled-once stepwise programs and the one-blocking-
+    poll-per-key-per-round protocol."""
+    import jax
+    if jax.device_count() < 8:
+        print("FAIL[time]: the debug-time mesh needs 8 devices; rerun "
+              "under XLA_FLAGS=--xla_force_host_platform_device_count=8")
+        return 1
+    from repro.launch.mesh import make_mesh
+    from repro.sampling import Placement
+
+    plc = Placement.for_mesh(make_mesh("debug-time"))
+    if plc.time_shards < 2:
+        print(f"FAIL[time]: placement {plc.describe()} has no time shards")
+        return 1
+    return phase_earlyexit(placement=plc, phase="time")
 
 
 def phase_refine() -> int:
@@ -164,10 +194,21 @@ def phase_refine() -> int:
 
 
 def main() -> int:
-    rc = phase_earlyexit()
-    if rc:
-        return rc
-    return phase_refine()
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--phase", default="all",
+                   choices=("all", "earlyexit", "refine", "time"),
+                   help="all (default: earlyexit + refine), or one phase; "
+                        "`time` needs 8 devices (forced host devices on "
+                        "CPU) and drains under the debug-time mesh")
+    args = p.parse_args()
+    phases = {"earlyexit": phase_earlyexit, "refine": phase_refine,
+              "time": phase_time}
+    run = ("earlyexit", "refine") if args.phase == "all" else (args.phase,)
+    for name in run:
+        rc = phases[name]()
+        if rc:
+            return rc
+    return 0
 
 
 if __name__ == "__main__":
