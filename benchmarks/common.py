@@ -110,11 +110,17 @@ def mesh_geometry(placement: Placement = None) -> dict:
 BENCH_SERVING_JSON = Path(__file__).resolve().parent.parent \
     / "BENCH_serving.json"
 
+#: top-level BENCH_serving.json schema: bump when a section's fields change
+#: meaning (not when sections are added), so cross-PR tooling can refuse to
+#: diff incompatible files instead of comparing renamed numbers
+BENCH_SCHEMA_VERSION = 2
+
 
 def write_bench_json(section: str, payload: dict, path: Path = None) -> Path:
     """Merge one benchmark's results into ``BENCH_serving.json`` at the repo
     root under ``section`` (each serving benchmark owns one section, so the
-    file accumulates the full serving trajectory per run)."""
+    file accumulates the full serving trajectory per run).  Every write
+    (re)stamps the top-level ``schema_version``."""
     path = Path(path or BENCH_SERVING_JSON)
     data = {}
     if path.exists():
@@ -123,6 +129,7 @@ def write_bench_json(section: str, payload: dict, path: Path = None) -> Path:
         except json.JSONDecodeError:
             data = {}
     data[section] = payload
+    data["schema_version"] = BENCH_SCHEMA_VERSION
     path.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
     return path
 

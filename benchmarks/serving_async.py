@@ -67,9 +67,21 @@ DiT, placement from ``REPRO_BENCH_MESH`` like ``serving_throughput``):
     Needs 8 devices (``XLA_FLAGS=--xla_force_host_platform_device_count=8``);
     records a ``skipped`` marker otherwise.
 
+  * ``observability`` — the cost of watching: the SAME staggered stepwise
+    population drained untraced (the default off bundle) and traced
+    (``repro.obs.Observability.enabled()`` — span tracing + per-lane
+    residual telemetry).  Records requests/s, blocking polls per round,
+    and host-fetch bytes per round for both, the traced/untraced req/s
+    ratio, bitwise equality of the solves, and that every traced ticket
+    retired with a residual-vs-round curve — telemetry rides the widened
+    packed summary, so polls and bytes must match exactly.
+
 Every section also embeds ``mesh_geometry`` (mesh name + per-axis shard
 counts of the placement actually measured, via ``common.mesh_geometry``)
-so cross-run comparisons in ``BENCH_serving.json`` are interpretable.
+so cross-run comparisons in ``BENCH_serving.json`` are interpretable, and
+the file carries a top-level ``schema_version`` stamp
+(``common.BENCH_SCHEMA_VERSION``) so cross-PR tooling can detect field
+renames instead of silently comparing them.
 
 Every section records ``host_fetch_bytes_per_round`` and
 ``blocking_polls_per_round`` (round = one dispatch for whole-batch modes,
@@ -97,6 +109,7 @@ import jax
 import numpy as np
 
 from benchmarks import common
+from repro.obs import Observability
 from repro.sampling import SampleRequest
 from repro.serving import (Batcher, BatchingPolicy, EngineKey, EngineRegistry,
                            RefinePlanner, RefinePolicy, RequestQueue,
@@ -520,6 +533,42 @@ def run(T: int = 25, n_requests: int = 24, max_batch: int = 8):
     hit_rate = (cstats["hits"] - hits0) / max(rf_lookups, 1)
     n_warm = sum(1 for t in tickets10 if t.request.init is not None)
 
+    # -- observability: tracing on vs off over the same stepwise drain ------
+    # staggered budgets (like stepwise_overhead) keep lanes retiring a few
+    # at a time, so the traced drain exercises per-round residual recording
+    # across genuinely multi-round lifecycles
+    obs_pop = [SampleRequest(label=i % 10, seed=2500 + i,
+                             **({} if i % 4 == 0
+                                else dict(tau=1e-2,
+                                          quality_steps=1 + i % 4)))
+               for i in range(n_requests)]
+
+    def _drain_observed(obs):
+        q = RequestQueue(obs=obs)
+        lp = ServingLoop(registry, q, batcher, chunk_iters=chunk_iters,
+                         obs=obs)
+        t0 = time.perf_counter()
+        tk = [q.submit(r, key) for r in obs_pop]
+        lp.drain()
+        wall = time.perf_counter() - t0
+        results = [t.result() for t in tk]
+        rep = lp.bank_reports()[key]
+        rounds = lp.stats["chunks"] + 1    # + final harvest-only round
+        return dict(tickets=tk, results=results, wall=wall,
+                    reqps=n_requests / wall, rounds=rounds,
+                    polls_per_round=rep["blocking_polls"] / rounds,
+                    bytes_per_round=rep["host_fetch_bytes"] / rounds,
+                    gathers=rep["gather_launches"])
+
+    off = _drain_observed(None)
+    tracer_bundle = Observability.enabled()
+    on = _drain_observed(tracer_bundle)
+    obs_bitwise = all(
+        np.array_equal(np.asarray(a.x0), np.asarray(b.x0))
+        for a, b in zip(on["results"], off["results"]))
+    obs_curves = sum(1 for t in on["tickets"] if t.residual_curve)
+    obs_ratio = on["reqps"] / off["reqps"]
+
     tag = "mesh" if placement.is_sharded else "host"
     speedup = async_reqps / sync_reqps
     rows = [
@@ -560,6 +609,16 @@ def run(T: int = 25, n_requests: int = 24, max_batch: int = 8):
          f"both_stages={both_stages};"
          f"warm_nfe/req={warm_nfe / n_requests:.0f} vs cold "
          f"{cold_nfe / n_requests:.0f};cache_hit_rate={hit_rate:.0%}"),
+        (f"serve_async/ddim{T}/observability_k{chunk_iters}/{tag}",
+         on["wall"] / n_requests * 1e6,
+         f"traced_reqps={on['reqps']:.2f} vs untraced {off['reqps']:.2f} "
+         f"({obs_ratio:.2f}x);polls/round={on['polls_per_round']:.2f} vs "
+         f"{off['polls_per_round']:.2f};"
+         f"fetched/round={on['bytes_per_round'] / 1024:.1f}KiB vs "
+         f"{off['bytes_per_round'] / 1024:.1f}KiB;"
+         f"bitwise_equal={obs_bitwise};"
+         f"residual_curves={obs_curves}/{n_requests};"
+         f"trace_events={len(tracer_bundle.tracer.events())}"),
     ]
     common.write_bench_json("async", dict(
         T=T, n_requests=n_requests, slots=slots,
@@ -660,5 +719,26 @@ def run(T: int = 25, n_requests: int = 24, max_batch: int = 8):
         cache_hits=cstats["hits"], cache_misses=cstats["misses"],
         cache_evictions=cstats["evictions"],
         cache_entries=cstats["entries"], cache_bytes=cstats["bytes"]))
+    common.write_bench_json("observability", dict(
+        T=T, n_requests=n_requests, slots=slots, chunk_iters=chunk_iters,
+        placement=placement.describe(), devices=placement.num_devices,
+        **geometry,
+        untraced_reqps=off["reqps"],
+        untraced_blocking_polls_per_round=off["polls_per_round"],
+        untraced_host_fetch_bytes_per_round=off["bytes_per_round"],
+        untraced_gather_launches=off["gathers"],
+        traced_reqps=on["reqps"],
+        traced_blocking_polls_per_round=on["polls_per_round"],
+        traced_host_fetch_bytes_per_round=on["bytes_per_round"],
+        traced_gather_launches=on["gathers"],
+        traced_over_untraced_reqps=obs_ratio,
+        polls_per_round_equal=on["polls_per_round"]
+        == off["polls_per_round"],
+        host_fetch_bytes_per_round_equal=on["bytes_per_round"]
+        == off["bytes_per_round"],
+        bitwise_equal_traced_vs_untraced=bool(obs_bitwise),
+        residual_curves=obs_curves,
+        trace_events=len(tracer_bundle.tracer.events()),
+        trace_events_dropped=tracer_bundle.tracer.dropped))
     rows += _time_shard(T, n_requests, max_batch)
     return rows

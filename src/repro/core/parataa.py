@@ -358,6 +358,19 @@ def state_info(state: SolverState) -> dict:
                 residuals=state.r_last)
 
 
+def lane_residual(state: SolverState) -> jax.Array:
+    """Scalar per-lane convergence telemetry: the WORST row's latest
+    first-order residual (the quantity each row's threshold gates, so the
+    max is the lane's distance from its stopping criterion).  Shape
+    follows the leading batch axes of ``r_last`` — a scalar for one lane,
+    ``(slots,)`` for a vmapped bank — and rides the stepwise step
+    program's packed poll summary (f32, bitcast into the int32 payload so
+    the host still fetches ONE array per round).  Fresh lanes report +inf
+    (``r_last`` init) until their first parallel iterate; sequential
+    lanes report +inf forever (eq. 6 has no fixed-point residual)."""
+    return jnp.max(state.r_last, axis=-1)
+
+
 def sample(eps_fn: Callable, coeffs: SolverCoeffs, cfg: ParaTAAConfig, xi,
            x_init: Optional[jax.Array] = None, dtype=jnp.float32,
            t_init=None, tau_sq=None, iter_cap=None):

@@ -36,7 +36,7 @@ runconfig.set_unroll_scans(True)
 def _lower_and_compile(cfg, shape, mesh):
     """Lower + compile one step for (cfg, shape) on mesh.  Returns
     (compiled, t_lower, t_compile)."""
-    t0 = time.time()
+    t0 = time.monotonic()
     params, opt = S.abstract_model_state(cfg, mesh, with_opt=(shape.kind == "train"))
     inputs = S.input_specs(cfg, shape, mesh)
     if shape.kind == "train":
@@ -52,10 +52,10 @@ def _lower_and_compile(cfg, shape, mesh):
         cache = S.abstract_cache(cfg, shape, mesh)
         jitted = jax.jit(S.make_decode_step(cfg), donate_argnums=(2,))
         lowered = jitted.lower(params, inputs["token"], cache)
-    t_lower = time.time() - t0
-    t0 = time.time()
+    t_lower = time.monotonic() - t0
+    t0 = time.monotonic()
     compiled = lowered.compile()
-    return compiled, t_lower, time.time() - t0
+    return compiled, t_lower, time.monotonic() - t0
 
 
 def _loss_cost(cfg, shape, mesh):
@@ -304,9 +304,9 @@ def run_parataa_cell(multi_pod: bool, *, T: int = 100, window: int = 64,
         engine = SamplingEngine(make_eps_apply(cfg), params, coeffs, spec,
                                 sample_shape=(n_tok, latent),
                                 placement=placement)
-        t0 = time.time()
+        t0 = time.monotonic()
         compiled = engine.lower_batch(n_samples).compile()
-        t_compile = time.time() - t0
+        t_compile = time.monotonic() - t0
         mem = compiled.memory_analysis()
 
         # per-iteration cost below uses the engine's request-axis sharding

@@ -110,6 +110,7 @@ from repro.configs.registry import get_arch
 from repro.core import ddim_coeffs, ddpm_coeffs
 from repro.diffusion import dit as dit_mod
 from repro.launch.mesh import make_mesh, mesh_names
+from repro.obs import Observability
 from repro.runtime import StragglerMitigator
 from repro.sampling import (Placement, SampleRequest, SamplingEngine,
                             get_sampler)
@@ -237,21 +238,28 @@ def serve_async(args, cfg, params, placement: Placement):
     policy = BatchingPolicy(max_batch=args.batch_size or 8,
                             max_wait_s=args.max_wait_ms / 1e3)
     refiner = None
+    # ONE observability bundle spans queue + loop + registry (engines,
+    # caches): --trace-out turns on span tracing + convergence curves;
+    # metrics mirror either way.  Protocol-neutral by construction — see
+    # tools/stepwise_guard.py --phase obs.
+    obs = Observability.enabled() if getattr(args, "trace_out", None) \
+        else Observability()
     if args.refine:
         if not args.chunk_iters:
             raise SystemExit("--refine requires --chunk-iters > 0 "
                              "(refinement splices into live stepwise lanes)")
-        refiner = RefinePlanner(RefinePolicy())
+        refiner = RefinePlanner(RefinePolicy(), metrics=obs.metrics)
     # --cache wires the queue's submit-time hooks: warm-start
     # auto-population from the per-key trajectory cache, plus warm-start
     # shape/dtype validation so a bad init fails its one ticket at submit
     queue = RequestQueue(
         validate=registry.validate_submit if args.cache else None,
-        warm_start=registry.warm_start_for if args.cache else None)
-    loop = ServingLoop(registry, queue, Batcher(policy),
+        warm_start=registry.warm_start_for if args.cache else None,
+        obs=obs)
+    loop = ServingLoop(registry, queue, Batcher(policy, metrics=obs.metrics),
                        depth=args.async_depth,
                        chunk_iters=args.chunk_iters,
-                       refiner=refiner, cache=args.cache)
+                       refiner=refiner, cache=args.cache, obs=obs)
     for key in keys:  # compile ahead of traffic so p95 is not a jit compile
         engine = registry.get(key)
         registry.warmup(key, slots=loop.batcher.slots_for(engine),
@@ -338,6 +346,15 @@ def serve_async(args, cfg, params, placement: Placement):
                   f"({c['hits'] / total:.0%}), {c['evictions']} "
                   f"eviction(s), {c['entries']} entries "
                   f"({c['bytes']} B)")
+    if getattr(args, "trace_out", None):
+        path = obs.tracer.export(args.trace_out)
+        curves = sum(1 for t in tickets if t.residual_curve)
+        wait = obs.metrics.histogram("loop.queue_wait_s").merged() \
+            or {"p50": 0.0, "p95": 0.0}
+        print(f"trace: {len(obs.tracer.events())} event(s) -> {path} "
+              f"({obs.tracer.dropped} dropped); residual curves on "
+              f"{curves}/{len(tickets)} ticket(s); queue wait "
+              f"p50 {wait['p50'] * 1e3:.1f}ms p95 {wait['p95'] * 1e3:.1f}ms")
     return jnp.stack([res.x0 for res in results]), stats
 
 
@@ -433,6 +450,12 @@ def main(argv=None):
                         "record converged results, auto-populate "
                         "SampleRequest.init at submit time (with "
                         "submit-time warm-start validation)")
+    p.add_argument("--trace-out", default=None, metavar="PATH",
+                   help="write a Chrome-trace JSON (Perfetto/about:tracing "
+                        "loadable) of the --serve-async drain: per-ticket "
+                        "submit->resolve span chains, engine pack/dispatch/"
+                        "stepwise spans, and per-lane residual-vs-round "
+                        "convergence curves (see tools/obs_report.py)")
     p.add_argument("--ckpt", default=None, help="trained DiT checkpoint dir")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)

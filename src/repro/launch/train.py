@@ -85,17 +85,17 @@ def main(argv=None):
     losses = []
 
     def do_step(step):
-        t0 = time.time()
+        t0 = time.monotonic()
         batch = get_batch(step)
         state["params"], state["opt"], metrics = train_step(
             state["params"], state["opt"], batch, jnp.asarray(step, jnp.int32))
         loss = float(metrics["loss"])
         losses.append(loss)
-        straggler.record(time.time() - t0)
+        straggler.record(time.monotonic() - t0)
         if step % args.log_every == 0:
             print(f"step {step:5d} loss {loss:.4f} "
                   f"gnorm {float(metrics['grad_norm']):.3f} "
-                  f"({time.time()-t0:.2f}s)", flush=True)
+                  f"({time.monotonic()-t0:.2f}s)", flush=True)
 
     def save(step):
         if ckpt:

@@ -42,6 +42,7 @@ import numpy as np
 from repro.core.coeffs import SolverCoeffs
 from repro.core import parataa as _parataa
 from repro.diffusion.samplers import _sequential_sample, draw_noises
+from repro.obs import Observability, StatsView
 from repro.sampling.placement import Placement
 from repro.sampling.specs import SamplerSpec
 from repro.sampling.types import DIAG_KEYS, SampleRequest, SampleResult
@@ -84,8 +85,10 @@ class LaneBank:
     burned after the owning lane already finished (or on vacant lanes).
 
     Host protocol state (the device-resident hot path): ``summary`` is the
-    packed (slots, 4) scheduling array the step program piggybacks
-    (finished/it/nfe/done) — its host copy starts asynchronously the moment
+    packed (slots, 5) scheduling array the step program piggybacks
+    (finished/it/nfe/done + the per-lane max first-order residual, f32
+    bitcast into the int32 payload — convergence telemetry rides the SAME
+    fetch) — its host copy starts asynchronously the moment
     the chunk is enqueued, so the blocking ``device_get`` at the NEXT
     round's harvest overlaps host scheduling with device compute.
     ``poll_cache`` shares that ONE fetch between harvest and report within
@@ -104,7 +107,7 @@ class LaneBank:
     completed: int = 0
     refills: int = 0
     pack_s: float = 0.0
-    summary: Any = None                    # (slots, 4) device int32
+    summary: Any = None                    # (slots, 5) device int32
     poll_cache: Optional[Dict] = None      # this round's host-side poll
     host_fetch_bytes: int = 0
     blocking_polls: int = 0
@@ -133,6 +136,17 @@ class SamplingEngine:
                   (and sharded), params are placed by their logical-axis
                   rules (TP over `model`, FSDP over `data`) instead of
                   replicated
+    clock:        monotonic timestamp source for every duration the engine
+                  records (``wall_s``/``pack_s``/span timing) — injectable
+                  for deterministic tests, and NEVER wall-clock
+                  (``time.time`` steps under NTP, folding durations
+                  negative)
+    obs:          optional :class:`repro.obs.Observability` bundle; default
+                  is a private disabled bundle (``Observability.off()``),
+                  so instrumentation never branches.  ``bind_obs`` re-homes
+                  the engine onto a shared bundle after construction.
+    name:         label for this engine's metric series / trace track
+                  (``EngineRegistry`` binds the engine key's description)
     """
 
     #: ``last_dispatches`` cap — ``run_batch`` resets the list per call, but
@@ -143,7 +157,9 @@ class SamplingEngine:
     def __init__(self, eps_apply: Callable, params, coeffs: SolverCoeffs,
                  spec: SamplerSpec, *, sample_shape: Sequence[int],
                  dtype=jnp.float32, placement: Optional[Placement] = None,
-                 param_defs=None):
+                 param_defs=None, clock: Callable[[], float] = time.monotonic,
+                 obs: Optional[Observability] = None,
+                 name: Optional[str] = None):
         self.eps_apply = eps_apply
         self.coeffs = coeffs
         self.spec = spec
@@ -154,14 +170,33 @@ class SamplingEngine:
                 and not _is_abstract(params):
             params = self.placement.shard_params(params, param_defs)
         self.params = params
+        self._clock = clock
+        self.obs = obs if obs is not None else Observability.off()
+        self.name = name or "engine"
         self._jitted = {}   # diagnostics flag -> jitted batched program
         self._stepwise_jits = {}  # "init"/"merge"/("step", K) -> program
-        self.stats = {"traces": 0, "stepwise_traces": 0, "batches": 0,
-                      "requests": 0, "wall_s": 0.0, "pack_s": 0.0,
-                      "host_fetch_bytes": 0, "blocking_polls": 0,
-                      "gather_launches": 0}
+        self.stats = StatsView(
+            self.obs.metrics, "engine", labels={"engine": self.name},
+            initial={"traces": 0, "stepwise_traces": 0, "batches": 0,
+                     "requests": 0, "wall_s": 0.0, "pack_s": 0.0,
+                     "host_fetch_bytes": 0, "blocking_polls": 0,
+                     "gather_launches": 0})
         self.last_batch_walls = []  # per-dispatch walls of the last run_batch
         self.last_dispatches: List[Dict] = []  # per-dispatch reports
+
+    def bind_obs(self, obs: Observability, name: Optional[str] = None) -> None:
+        """Re-home this engine onto a shared observability bundle: its
+        ``stats`` view starts mirroring into the shared registry (replaying
+        current values) and its spans land on the shared tracer.  Stats keep
+        their identity — callers holding ``engine.stats`` see no change."""
+        self.obs = obs
+        if name is not None:
+            self.name = name
+        self.stats.rebind(obs.metrics, labels={"engine": self.name})
+
+    @property
+    def _tracer(self):
+        return self.obs.tracer
 
     @property
     def window(self) -> int:
@@ -343,11 +378,14 @@ class SamplingEngine:
                 f"{len(requests)} requests exceed {B} request slots")
         chunk = requests + [requests[-1]] * (B - len(requests))
         fn = self._program(diagnostics)
-        t0 = time.time()
-        packed = self.pack(chunk)
-        t1 = time.time()
-        with self.placement.activations():
-            trajs, info = fn(self.params, *packed)
+        t0 = self._clock()
+        with self._tracer.span("engine.pack", tid=self.name,
+                               requests=len(requests), slots=B):
+            packed = self.pack(chunk)
+        t1 = self._clock()
+        with self._tracer.span("engine.dispatch", tid=self.name, slots=B):
+            with self.placement.activations():
+                trajs, info = fn(self.params, *packed)
         return PendingBatch(trajs=trajs, info=info, requests=requests,
                             slots=B, diagnostics=diagnostics,
                             pack_s=t1 - t0, t_dispatch=t1)
@@ -361,8 +399,10 @@ class SamplingEngine:
         occupancy window of this batch.  ``pack_s`` is reported separately
         in ``last_dispatches``.
         """
-        jax.block_until_ready(pending.trajs)
-        wall = time.time() - pending.t_dispatch
+        with self._tracer.span("engine.collect", tid=self.name,
+                               requests=len(pending.requests)):
+            jax.block_until_ready(pending.trajs)
+        wall = self._clock() - pending.t_dispatch
         plc = self.placement
         n_real = len(pending.requests)
         self.stats["batches"] += 1
@@ -389,7 +429,11 @@ class SamplingEngine:
         # path reclaims by retiring/refilling lanes mid-solve
         all_iters = np.asarray(info["iters"], np.int64)
         device_iters = int(all_iters.max()) if all_iters.size else 0
+        res_batch = info.get("residuals")
         self.last_dispatches.append(dict(
+            residual=[_finite_or_none(np.max(res_batch[i]))
+                      for i in range(n_real)]
+            if res_batch is not None else [None] * n_real,
             wall_s=wall, pack_s=pending.pack_s,
             host_fetch_bytes=trajs.nbytes + sum(v.nbytes
                                                 for v in info.values()),
@@ -490,7 +534,7 @@ class SamplingEngine:
     # program never retraces.  Five programs total per engine: open (vacant
     # bank), init (ONE lane — refill packs/draws exactly one request's
     # noise, not a bank-width batch), merge (broadcast the one fresh lane
-    # into the masked slot), step (which also emits the packed (slots, 4)
+    # into the masked slot), step (which also emits the packed (slots, 5)
     # scheduling summary so polling fetches ONE tiny array instead of four
     # state fields), and gather (harvest fetches only the RETIRED lanes'
     # trajectory rows instead of the whole bank);
@@ -572,12 +616,17 @@ class SamplingEngine:
                 labels = plc.constrain_batch(labels)
                 out = jax.vmap(lambda s, lab: lane_step(params, s, lab),
                                **vmap_kw)(state, labels)
-                # piggybacked poll: one packed (slots, 4) scheduling array
+                # piggybacked poll: one packed (slots, 5) scheduling array
                 # rides out of the chunk, so the host never issues a
-                # separate per-field fetch to learn who finished
+                # separate per-field fetch to learn who finished; column 4
+                # is the per-lane convergence residual, bitcast f32->int32
+                # so telemetry shares the one int32 fetch instead of
+                # adding a second host copy
                 summary = jnp.stack(
                     [out.finished.astype(jnp.int32), out.it, out.nfe,
-                     out.done.astype(jnp.int32)], axis=-1)
+                     out.done.astype(jnp.int32),
+                     jax.lax.bitcast_convert_type(
+                         _parataa.lane_residual(out), jnp.int32)], axis=-1)
                 return out, summary
 
         elif kind == "gather":
@@ -653,14 +702,16 @@ class SamplingEngine:
         if chunk_iters < 1:
             raise ValueError(f"chunk_iters must be >= 1, got {chunk_iters}")
         B = self.placement.round_batch(slots)
-        t0 = time.time()
-        xi = self.draw_request_noise(SampleRequest())
-        with self.placement.activations():
-            state = self._stepwise_program("open", B)(xi)
-        (labels,) = self.placement.place_batch(jnp.zeros((B,), jnp.int32))
+        t0 = self._clock()
+        with self._tracer.span("stepwise.open", tid=self.name, slots=B):
+            xi = self.draw_request_noise(SampleRequest())
+            with self.placement.activations():
+                state = self._stepwise_program("open", B)(xi)
+            (labels,) = self.placement.place_batch(
+                jnp.zeros((B,), jnp.int32))
         bank = LaneBank(state=state, labels=labels, requests=[None] * B,
                         slots=B, chunk_iters=chunk_iters)
-        bank.pack_s += time.time() - t0
+        bank.pack_s += self._clock() - t0
         return bank
 
     def stepwise_refill(self, bank: LaneBank, lanes: Sequence[int],
@@ -684,24 +735,27 @@ class SamplingEngine:
         self.spec.check_request_flags(
             warm_start=any(r.init is not None for r in requests),
             solver_overrides=any(r.has_solver_overrides for r in requests))
-        t0 = time.time()
-        packed = self._pack(requests)           # (k, ...) — k PRNG draws
-        pos = {lane: i for i, lane in enumerate(lanes)}
-        idx = np.asarray([pos.get(j, 0) for j in range(bank.slots)])
-        xis, labels, x0s, t_inits, tau_sqs, iter_caps = (
-            jnp.take(a, idx, axis=0) for a in packed)
-        # lanes outside the refill keep their OLD state (merge mask), so the
-        # repeated filler rows never land anywhere
-        untouched = np.asarray([j not in pos for j in range(bank.slots)])
-        xis, x0s = self.placement.place_window(xis, x0s)
-        t_inits, tau_sqs, iter_caps, labels, mask = \
-            self.placement.place_batch(t_inits, tau_sqs, iter_caps, labels,
-                                       jnp.asarray(~untouched))
-        with self.placement.activations():
-            fresh = self._stepwise_program("init")(
-                xis, x0s, t_inits, tau_sqs, iter_caps)
-            bank.state, bank.labels = self._stepwise_program("merge")(
-                bank.state, fresh, bank.labels, labels, mask)
+        t0 = self._clock()
+        with self._tracer.span("stepwise.refill", tid=self.name,
+                               lanes=len(lanes)):
+            packed = self._pack(requests)       # (k, ...) — k PRNG draws
+            pos = {lane: i for i, lane in enumerate(lanes)}
+            idx = np.asarray([pos.get(j, 0) for j in range(bank.slots)])
+            xis, labels, x0s, t_inits, tau_sqs, iter_caps = (
+                jnp.take(a, idx, axis=0) for a in packed)
+            # lanes outside the refill keep their OLD state (merge mask), so
+            # the repeated filler rows never land anywhere
+            untouched = np.asarray([j not in pos
+                                    for j in range(bank.slots)])
+            xis, x0s = self.placement.place_window(xis, x0s)
+            t_inits, tau_sqs, iter_caps, labels, mask = \
+                self.placement.place_batch(t_inits, tau_sqs, iter_caps,
+                                           labels, jnp.asarray(~untouched))
+            with self.placement.activations():
+                fresh = self._stepwise_program("init")(
+                    xis, x0s, t_inits, tau_sqs, iter_caps)
+                bank.state, bank.labels = self._stepwise_program("merge")(
+                    bank.state, fresh, bank.labels, labels, mask)
         for lane, req in zip(lanes, requests):
             bank.requests[lane] = req
         # the pre-merge summary no longer describes the refilled lanes —
@@ -710,18 +764,21 @@ class SamplingEngine:
         bank.summary = None
         bank.poll_cache = None
         bank.refills += 1
-        bank.pack_s += time.time() - t0
+        bank.pack_s += self._clock() - t0
 
     def stepwise_step(self, bank: LaneBank) -> None:
         """Advance every lane by ``bank.chunk_iters`` guarded solver
         iterations (non-blocking: JAX async dispatch) and start the
-        piggybacked (slots, 4) scheduling summary's device->host copy —
+        piggybacked (slots, 5) scheduling summary's device->host copy —
         by the time the NEXT round's harvest polls, the bytes are already
         on the host and the ``device_get`` returns without stalling."""
-        with self.placement.activations():
-            bank.state, summary = self._stepwise_program(
-                "step", bank.chunk_iters)(self.params, bank.state,
-                                          bank.labels)
+        with self._tracer.span("stepwise.step", tid=self.name,
+                               chunk_iters=bank.chunk_iters,
+                               occupied=bank.occupied):
+            with self.placement.activations():
+                bank.state, summary = self._stepwise_program(
+                    "step", bank.chunk_iters)(self.params, bank.state,
+                                              bank.labels)
         bank.summary = summary
         bank.poll_cache = None
         if hasattr(summary, "copy_to_host_async"):
@@ -741,26 +798,35 @@ class SamplingEngine:
         """The round's per-lane scheduling view (blocks on the chunk in
         flight; trajectories stay on device until harvest).  ONE blocking
         fetch per round: the first caller materializes the piggybacked
-        (slots, 4) summary the step program emitted (whose host copy was
+        (slots, 5) summary the step program emitted (whose host copy was
         started asynchronously at step time) and caches it on the bank;
         harvest and report share the cache until step/refill invalidate
         it."""
         if bank.poll_cache is not None:
             return bank.poll_cache
         if bank.summary is not None:
-            packed = np.asarray(bank.summary)
+            with self._tracer.span("stepwise.poll", tid=self.name):
+                packed = np.asarray(bank.summary)
+            # column 4 carries the f32 per-lane residual bitcast into the
+            # int32 payload; .copy() first — a column slice is
+            # non-contiguous, which .view cannot reinterpret
             polled = dict(finished=packed[:, 0].astype(bool),
                           iters=packed[:, 1], nfe=packed[:, 2],
-                          done=packed[:, 3].astype(bool))
+                          done=packed[:, 3].astype(bool),
+                          residual=packed[:, 4].copy().view(np.float32))
             self._count_fetch(bank, packed.nbytes, polls=1)
         else:
             # no chunk has run since open/refill: read the state fields
             state = bank.state
-            finished, it, nfe, done = jax.device_get(
-                (state.finished, state.it, state.nfe, state.done))
+            with self._tracer.span("stepwise.poll", tid=self.name,
+                                   fallback=True):
+                finished, it, nfe, done, res = jax.device_get(
+                    (state.finished, state.it, state.nfe, state.done,
+                     _parataa.lane_residual(state)))
             polled = dict(finished=np.asarray(finished),
                           iters=np.asarray(it), nfe=np.asarray(nfe),
-                          done=np.asarray(done))
+                          done=np.asarray(done),
+                          residual=np.asarray(res, np.float32))
             self._count_fetch(bank, sum(v.nbytes for v in polled.values()),
                               polls=1)
         bank.poll_cache = polled
@@ -785,17 +851,19 @@ class SamplingEngine:
         T = self.coeffs.T
         n = len(ready)
         idx = np.asarray(ready + [ready[0]] * (bank.slots - n), np.int32)
-        with self.placement.activations():
-            xg, rg = self._stepwise_program("gather")(
-                bank.state.x, bank.state.r_last, jnp.asarray(idx))
-        # fetch ONLY the first n gathered rows (the padding rows repeat
-        # ready[0] and never leave the device)
-        trajs = np.asarray(xg[:n]).reshape((n, T + 1) + self.sample_shape)
-        fetched = trajs.nbytes
-        residuals = None
-        if rg is not None:
-            residuals = np.asarray(rg[:n])
-            fetched += residuals.nbytes
+        with self._tracer.span("stepwise.harvest", tid=self.name, retired=n):
+            with self.placement.activations():
+                xg, rg = self._stepwise_program("gather")(
+                    bank.state.x, bank.state.r_last, jnp.asarray(idx))
+            # fetch ONLY the first n gathered rows (the padding rows repeat
+            # ready[0] and never leave the device)
+            trajs = np.asarray(xg[:n]).reshape(
+                (n, T + 1) + self.sample_shape)
+            fetched = trajs.nbytes
+            residuals = None
+            if rg is not None:
+                residuals = np.asarray(rg[:n])
+                fetched += residuals.nbytes
         self._count_fetch(bank, fetched, gathers=1)
         bank.harvests += 1
         out = []
@@ -832,6 +900,9 @@ class SamplingEngine:
             completed=bank.completed, refills=bank.refills,
             occupied=bank.occupied, pack_s=bank.pack_s,
             useful_iters=useful,
+            residual=[_finite_or_none(polled["residual"][i])
+                      if bank.requests[i] is not None else None
+                      for i in range(bank.slots)],
             warm_start_depth=[self._warm_depth(r) for r in bank.requests],
             host_fetch_bytes=bank.host_fetch_bytes,
             blocking_polls=bank.blocking_polls,
@@ -851,14 +922,14 @@ class SamplingEngine:
         """Rewind the serving counters and dispatch reports — e.g. after a
         warmup or compile-only pass — keeping ``traces`` (and its stepwise
         twin): compilations are a property of the program cache, not of
-        traffic.  Owns the key list, so callers never enumerate stats
-        fields by hand."""
-        self.stats = {"traces": self.stats["traces"],
-                      "stepwise_traces": self.stats["stepwise_traces"],
-                      "batches": 0, "requests": 0,
-                      "wall_s": 0.0, "pack_s": 0.0,
-                      "host_fetch_bytes": 0, "blocking_polls": 0,
-                      "gather_launches": 0}
+        traffic.  Zeroes EVERY traffic key the dict currently holds (not a
+        hand-enumerated list, so counters added later rewind too) and
+        zeroes them THROUGH the view, keeping the dict's identity and its
+        registry mirror consistent."""
+        for key, value in list(self.stats.items()):
+            if key in ("traces", "stepwise_traces"):
+                continue
+            self.stats[key] = 0.0 if isinstance(value, float) else 0
         self.last_batch_walls = []
         self.last_dispatches = []
 
@@ -870,3 +941,11 @@ class SamplingEngine:
 def _is_abstract(params) -> bool:
     leaves = jax.tree.leaves(params)
     return bool(leaves) and isinstance(leaves[0], jax.ShapeDtypeStruct)
+
+
+def _finite_or_none(value) -> Optional[float]:
+    """Report-friendly residual: +inf (a lane that never produced a
+    first-order residual — sequential, or polled before its first parallel
+    iterate) becomes None so reports stay strict-JSON-serializable."""
+    value = float(value)
+    return value if np.isfinite(value) else None

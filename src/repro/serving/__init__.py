@@ -37,6 +37,16 @@ serving layer for live traffic:
     preemptible continuation splices back into the live bank as background
     work, completing the same ticket at full tolerance.
 
+Observability (``repro.obs``) threads through every layer: wire ONE
+:class:`repro.obs.Observability` into the queue and the loop and the whole
+stack mirrors its counters into one metrics registry, traces each ticket's
+submit -> validate -> admit -> splice -> draft -> resolve lifecycle plus
+every engine span onto one Chrome-trace timeline, and records per-lane
+residual-vs-round convergence curves off the stepwise poll — all
+protocol-neutral (same 5 stepwise programs, same one blocking poll per
+live key per round, bitwise-identical solves; ``tools/stepwise_guard.py
+--phase obs`` enforces it).
+
 Results are bitwise-identical to ``engine.run_batch`` over the same
 requests at the same slot geometry — batching is a scheduling concern, not
 a numerics one (iteration-level refill included: a lane's state evolves
@@ -44,6 +54,7 @@ exactly as if it ran alone).  See ``launch/serve.py --serve-async`` for
 the live driver and ``benchmarks/serving_async.py`` for throughput /
 latency / NFE-per-request measurements against the blocking loop.
 """
+from repro.obs import Observability
 from repro.serving.batcher import Batcher, BatchingPolicy, Dispatch
 from repro.serving.cache import TrajectoryCache
 from repro.serving.loop import ServingLoop
@@ -57,4 +68,5 @@ __all__ = [
     "EngineKey", "RequestQueue", "Ticket",
     "EngineRegistry", "TrajectoryCache",
     "RefinePlanner", "RefinePolicy",
+    "Observability",
 ]

@@ -75,8 +75,12 @@ class Batcher:
     #: per-key history window of observed dispatch reports
     OBSERVED_WINDOW = 32
 
-    def __init__(self, policy: Optional[BatchingPolicy] = None):
+    def __init__(self, policy: Optional[BatchingPolicy] = None, *,
+                 metrics=None):
         self.policy = policy or BatchingPolicy()
+        #: optional :class:`repro.obs.MetricsRegistry` — planned dispatches
+        #: and observed per-dispatch walls feed ``batcher.*`` instruments
+        self.metrics = metrics
         self._observed: Dict[EngineKey, Deque[dict]] = {}
 
     def slots_for(self, engine) -> int:
@@ -179,6 +183,9 @@ class Batcher:
         window = self._observed.setdefault(
             key, collections.deque(maxlen=self.OBSERVED_WINDOW))
         window.append(report)
+        if self.metrics is not None and "wall_s" in report:
+            self.metrics.histogram("batcher.dispatch_wall_s").observe(
+                report["wall_s"], key=key.describe())
 
     def observed(self, key: EngineKey) -> Optional[dict]:
         """Mean utilization / wall / pack over the key's recent dispatches."""

@@ -54,11 +54,17 @@ class TrajectoryCache:
                   lookup that finds no same-label entry may fall back to
                   the nearest cached label with ``|label - cached| <=
                   neighborhood``.  0 (default) keeps exact-label semantics.
+    metrics:      optional :class:`repro.obs.MetricsRegistry` — hit/miss/
+                  eviction events count into ``cache.*`` counters under the
+                  ``key=name`` label (also attachable after construction
+                  via :meth:`bind_metrics`; events before the bind live
+                  only in the int counters, which stay authoritative).
     """
 
     def __init__(self, capacity: int = 64, *,
                  max_bytes: Optional[int] = None,
-                 neighborhood: float = 0.0):
+                 neighborhood: float = 0.0,
+                 metrics=None, name: str = ""):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         if max_bytes is not None and max_bytes < 1:
@@ -69,6 +75,8 @@ class TrajectoryCache:
         self.capacity = capacity
         self.max_bytes = max_bytes
         self.neighborhood = neighborhood
+        self._metrics = metrics
+        self._name = name
         self._lock = threading.Lock()
         # (label, seed) -> (trajectory, nbytes), LRU order
         self._store: "collections.OrderedDict" = collections.OrderedDict()
@@ -76,6 +84,19 @@ class TrajectoryCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+
+    def bind_metrics(self, metrics, name: Optional[str] = None) -> None:
+        """Start counting hit/miss/eviction events into ``metrics`` (the
+        :class:`~repro.serving.EngineRegistry` binds its shared
+        observability bundle here)."""
+        self._metrics = metrics
+        if name is not None:
+            self._name = name
+
+    def _count(self, event: str, amount: int = 1) -> None:
+        if self._metrics is not None:
+            self._metrics.counter(f"cache.{event}").inc(
+                amount, key=self._name)
 
     # -- write side ----------------------------------------------------------
 
@@ -99,12 +120,17 @@ class TrajectoryCache:
                 self._bytes -= old[1]
             self._store[key] = (result.trajectory, nbytes)
             self._bytes += nbytes
+            evicted = 0
             while len(self._store) > self.capacity or (
                     self.max_bytes is not None
                     and self._bytes > self.max_bytes):
                 _, (_, evicted_bytes) = self._store.popitem(last=False)
                 self._bytes -= evicted_bytes
                 self.evictions += 1
+                evicted += 1
+        self._count("records")
+        if evicted:
+            self._count("evictions", evicted)
         return True
 
     # -- read side -----------------------------------------------------------
@@ -122,10 +148,15 @@ class TrajectoryCache:
             key = self._match(label, seed)
             if key is None:
                 self.misses += 1
-                return None
-            self.hits += 1
-            self._store.move_to_end(key)
-            traj = self._store[key][0]
+                hit = False
+            else:
+                self.hits += 1
+                self._store.move_to_end(key)
+                traj = self._store[key][0]
+                hit = True
+        self._count("hits" if hit else "misses")
+        if not hit:
+            return None
         return WarmStart(trajectory=traj, t_init=t_init)
 
     def _match(self, label, seed):

@@ -25,6 +25,7 @@ from typing import Deque, Dict, Optional, Tuple
 
 import jax
 
+from repro.obs import Observability, StatsView
 from repro.serving.batcher import Batcher, Dispatch
 from repro.serving.queue import RequestQueue
 from repro.serving.registry import EngineRegistry
@@ -59,11 +60,20 @@ class ServingLoop:
               :class:`~repro.serving.TrajectoryCache` at harvest/collect,
               so later submissions warm-start via the queue's
               ``warm_start`` hook (``EngineRegistry.warm_start_for``).
+    obs:      optional :class:`repro.obs.Observability`: the loop binds it
+              onto the registry (engines + caches mirror into its metrics
+              and trace onto its tracer), opens/closes per-ticket lifecycle
+              spans, and — when the bundle is ACTIVE (tracing on) — records
+              per-lane residual-vs-round convergence curves from each
+              round's piggybacked poll (the same one blocking poll harvest
+              pays for; recording adds zero fetches).  Default: a private
+              disabled bundle, so instrumented code never branches.
     """
 
     def __init__(self, registry: EngineRegistry, queue: RequestQueue,
                  batcher: Optional[Batcher] = None, *, depth: int = 2,
-                 chunk_iters: int = 0, refiner=None, cache: bool = False):
+                 chunk_iters: int = 0, refiner=None, cache: bool = False,
+                 obs: Optional[Observability] = None):
         if depth < 1:
             raise ValueError(f"depth must be >= 1, got {depth}")
         if chunk_iters < 0:
@@ -80,7 +90,16 @@ class ServingLoop:
         self.chunk_iters = chunk_iters
         self.refiner = refiner
         self.cache = cache
-        self.stats = {"dispatches": 0, "completed": 0, "failed": 0}
+        self.obs = obs if obs is not None else Observability.off()
+        # one bundle spans the stack: engines + caches mirror into the
+        # loop's registry whether or not tracing is on (duck-typed stub
+        # registries without bind_obs simply skip the mirror)
+        bind = getattr(registry, "bind_obs", None)
+        if bind is not None:
+            bind(self.obs)
+        self.stats = StatsView(
+            self.obs.metrics, "loop",
+            initial={"dispatches": 0, "completed": 0, "failed": 0})
         if chunk_iters:
             self.stats.update(chunks=0, refills=0)
         if refiner is not None:
@@ -89,8 +108,58 @@ class ServingLoop:
         self._inflight: Deque[Tuple[Dispatch, object]] = collections.deque()
         self._banks: Dict = {}          # EngineKey -> LaneBank
         self._lane_tickets: Dict = {}   # EngineKey -> List[Optional[Ticket]]
+        self._rounds: Dict = {}         # EngineKey -> stepwise round index
         self._stop_event = threading.Event()
         self._thread: Optional[threading.Thread] = None
+
+    # -- ticket lifecycle funnels (spans + stats + convergence) ---------------
+
+    def _ticket_begin(self, ticket) -> None:
+        """Open the ticket's lifecycle span if the queue didn't (a queue
+        constructed without the shared bundle): idempotent, backdated to
+        the request's arrival so queue wait still shows in the trace."""
+        self.obs.tracer.async_begin(
+            "ticket", ticket.seqno, key=ticket.key.describe(),
+            ts_s=ticket.request.arrival_time)
+
+    def _note_admit(self, ticket, now: Optional[float] = None) -> None:
+        self._ticket_begin(ticket)
+        self.obs.tracer.async_instant("admit", ticket.seqno)
+        arrival = ticket.request.arrival_time
+        if arrival is not None:
+            if now is None:
+                now = self.queue.clock()
+            self.obs.metrics.histogram("loop.queue_wait_s").observe(
+                max(now - arrival, 0.0), key=ticket.key.describe())
+
+    def _resolve_ticket(self, ticket, result) -> None:
+        """EVERY completion funnels here: close the convergence curve
+        (attaching ``ticket.residual_curve``), close the lifecycle span,
+        resolve the future, count it — exactly once per ticket."""
+        curve = self.obs.convergence.finish(ticket)
+        self._ticket_begin(ticket)
+        # getattr, not attribute access: loop tests resolve tickets with
+        # arbitrary stand-in results, and span args are best-effort
+        self.obs.tracer.async_end(
+            "ticket", ticket.seqno, key=ticket.key.describe(),
+            iters=getattr(result, "iters", None),
+            nfe=getattr(result, "nfe", None),
+            converged=getattr(result, "converged", None),
+            early_stopped=getattr(result, "early_stopped", None),
+            residual_curve=curve)
+        ticket.resolve(result)
+        self.stats["completed"] += 1
+
+    def _fail_ticket(self, ticket, error: BaseException) -> None:
+        """EVERY failure funnels here — span closed with the error, partial
+        convergence curve discarded, counted exactly once."""
+        self.obs.convergence.discard(ticket)
+        self._ticket_begin(ticket)
+        self.obs.tracer.async_end("ticket", ticket.seqno,
+                                  key=ticket.key.describe(),
+                                  error=str(error))
+        ticket.fail(error)
+        self.stats["failed"] += 1
 
     # -- one scheduling round ------------------------------------------------
 
@@ -144,7 +213,7 @@ class ServingLoop:
 
         One-round-lag polling: ``stepwise_step`` at the END of a round both
         enqueues the chunk (JAX async dispatch) and starts the
-        device->host copy of its piggybacked (slots, 4) scheduling
+        device->host copy of its piggybacked (slots, 5) scheduling
         summary, so the blocking poll inside the NEXT round's harvest
         finds the bytes already on the host — host scheduling (refill
         packing, queue work, OTHER keys' rounds) overlaps device compute,
@@ -169,8 +238,7 @@ class ServingLoop:
                 engine = self.registry.get(key)
             except Exception as error:  # noqa: BLE001 — poisoned key
                 for ticket in self.queue.pop(key, self.queue.pending(key)):
-                    ticket.fail(error)
-                    self.stats["failed"] += 1
+                    self._fail_ticket(ticket, error)
                 continue
             bank = self._banks.get(key)
             if bank is None:
@@ -185,13 +253,24 @@ class ServingLoop:
                     # tickets (nothing is admitted yet), keep serving
                     for ticket in self.queue.pop(key,
                                                  self.queue.pending(key)):
-                        ticket.fail(error)
-                        self.stats["failed"] += 1
+                        self._fail_ticket(ticket, error)
                     continue
                 self._banks[key] = bank
                 self._lane_tickets[key] = [None] * bank.slots
             tickets = self._lane_tickets[key]
             try:
+                if self.obs.active and bank.occupied:
+                    # convergence telemetry rides the round's ONE poll:
+                    # harvest shares this cached fetch, so recording the
+                    # per-lane residuals costs zero extra host traffic.
+                    # Lanes are read at the START of the round — before
+                    # harvest vacates retirees — so a lane's final
+                    # residual lands on its curve.
+                    polled = engine.stepwise_poll(bank)
+                    rnd = self._rounds.get(key, 0)
+                    self._rounds[key] = rnd + 1
+                    self.obs.convergence.observe_round(
+                        key, rnd, list(enumerate(tickets)), polled)
                 for lane, result in engine.stepwise_harvest(bank):
                     ticket = tickets[lane]
                     tickets[lane] = None
@@ -201,11 +280,13 @@ class ServingLoop:
                             self.queue, ticket, result):
                         # taken as a DRAFT: stage one resolved, a warm-
                         # started continuation re-enqueued on this ticket
+                        self.obs.tracer.async_instant(
+                            "draft", ticket.seqno, lane=lane,
+                            iters=result.iters)
                         self.stats["drafts"] += 1
                         self.stats["refines"] += 1
                         continue
-                    ticket.resolve(result)
-                    self.stats["completed"] += 1
+                    self._resolve_ticket(ticket, result)
                     if self.cache and result.converged \
                             and not result.early_stopped:
                         self.registry.cache(key).record(result)
@@ -251,23 +332,25 @@ class ServingLoop:
             try:
                 engine.validate_request(ticket.request)
             except Exception as error:  # noqa: BLE001
-                ticket.fail(error)
-                self.stats["failed"] += 1
+                self._fail_ticket(ticket, error)
             else:
                 valid.append(ticket)
         if not valid:
             return 0
         lanes = free[:len(valid)]
+        now = self.queue.clock()
+        for ticket in valid:
+            self._note_admit(ticket, now)
         try:
             engine.stepwise_refill(bank, lanes,
                                    [t.request for t in valid])
         except Exception as error:  # noqa: BLE001
             for ticket in valid:
-                ticket.fail(error)
-            self.stats["failed"] += len(valid)
+                self._fail_ticket(ticket, error)
             return 0
         for lane, ticket in zip(lanes, valid):
             tickets[lane] = ticket
+            self.obs.tracer.async_instant("splice", ticket.seqno, lane=lane)
         self.stats["refills"] += 1
         self.stats["dispatches"] += 1
         return len(valid)
@@ -283,13 +366,14 @@ class ServingLoop:
         bank.requests[lane] = None
         self.stats["preemptions"] += 1
         if ticket is not None:
+            self.obs.tracer.async_instant("preempt", ticket.seqno,
+                                          lane=lane)
             self.queue.resubmit(ticket)
 
     def _fail_bank(self, key, error: BaseException) -> None:
         for ticket in self._lane_tickets.get(key, []):
             if ticket is not None:
-                ticket.fail(error)
-                self.stats["failed"] += 1
+                self._fail_ticket(ticket, error)
         self._banks.pop(key, None)
         self._lane_tickets.pop(key, None)
 
@@ -317,13 +401,15 @@ class ServingLoop:
 
     def _dispatch(self, plan: Dispatch) -> None:
         engine = self.registry.get(plan.key)
+        now = self.queue.clock()
+        for ticket in plan.tickets:
+            self._note_admit(ticket, now)
         try:
             pending = engine.dispatch(
                 [t.request for t in plan.tickets], slots=plan.slots)
         except Exception as error:  # noqa: BLE001 — fail the batch, not the loop
             for ticket in plan.tickets:
-                ticket.fail(error)
-            self.stats["failed"] += len(plan.tickets)
+                self._fail_ticket(ticket, error)
             return
         self._inflight.append((plan, pending))
         self.stats["dispatches"] += 1
@@ -353,16 +439,14 @@ class ServingLoop:
             results = engine.collect(pending)
         except Exception as error:  # noqa: BLE001
             for ticket in plan.tickets:
-                ticket.fail(error)
-            self.stats["failed"] += len(plan.tickets)
+                self._fail_ticket(ticket, error)
             return
         if engine.last_dispatches:
             self.batcher.note(plan.key, engine.last_dispatches[-1])
         for ticket, result in zip(plan.tickets, results):
-            ticket.resolve(result)
+            self._resolve_ticket(ticket, result)
             if self.cache and result.converged and not result.early_stopped:
                 self.registry.cache(plan.key).record(result)
-        self.stats["completed"] += len(results)
 
     def _abort(self, error: BaseException) -> None:
         """Fail every in-flight, queued, and FUTURE ticket with ``error``
@@ -372,14 +456,12 @@ class ServingLoop:
         while self._inflight:
             plan, _ = self._inflight.popleft()
             for ticket in plan.tickets:
-                ticket.fail(error)
-            self.stats["failed"] += len(plan.tickets)
+                self._fail_ticket(ticket, error)
         for key in list(self._banks):
             self._fail_bank(key, error)
         for key in self.queue.keys():
             for ticket in self.queue.pop(key, self.queue.pending(key)):
-                ticket.fail(error)
-                self.stats["failed"] += 1
+                self._fail_ticket(ticket, error)
 
     # -- background-thread mode ----------------------------------------------
 

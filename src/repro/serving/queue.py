@@ -22,6 +22,7 @@ import threading
 import time
 from typing import Callable, Dict, List, Optional
 
+from repro.obs import Observability
 from repro.sampling.types import SampleRequest, SampleResult
 
 
@@ -68,6 +69,10 @@ class Ticket:
         self.completed_time: Optional[float] = None
         self.draft_time: Optional[float] = None
         self.refines = 0                 # refine rounds already planned
+        #: per-round convergence telemetry, attached at resolution by
+        #: :class:`repro.obs.ConvergenceRecorder` (stepwise serving with an
+        #: active Observability); None otherwise
+        self.residual_curve: Optional[List[Dict]] = None
         self.on_draft: Optional[Callable[[SampleResult], None]] = None
         self._clock = clock
         self._event = threading.Event()
@@ -175,14 +180,22 @@ class RequestQueue:
            when set and the request carries no ``init``, its return value
            (if any) is spliced in at submit time.  This is the Sec 4.2
            cache auto-population point (``EngineRegistry.warm_start_for``).
+    obs:   optional :class:`repro.obs.Observability` — submissions count
+           into its metrics registry and each ticket's lifecycle span opens
+           on its tracer at submit time (the loop closes it at resolve).
+           Wire the SAME bundle into the :class:`~repro.serving
+           .ServingLoop` for one coherent trace; without it the loop's
+           admit-time fallback still opens the span (backdated to arrival).
     """
 
     def __init__(self, clock: Callable[[], float] = time.monotonic, *,
                  validate: Optional[Callable] = None,
-                 warm_start: Optional[Callable] = None):
+                 warm_start: Optional[Callable] = None,
+                 obs: Optional[Observability] = None):
         self.clock = clock
         self.validate = validate
         self.warm_start = warm_start
+        self.obs = obs if obs is not None else Observability.off()
         self._lock = threading.Lock()
         self._buckets: Dict[EngineKey, List[Ticket]] = {}
         self._seq = itertools.count()
@@ -213,15 +226,26 @@ class RequestQueue:
             if self._closed is not None:
                 ticket.fail(self._closed)
                 return ticket
+        tracer = self.obs.tracer
+        tracer.async_begin("ticket", ticket.seqno, key=key.describe(),
+                           ts_s=request.arrival_time,
+                           label=request.label, seed=request.seed)
+        self.obs.metrics.counter("queue.submitted").inc(key=key.describe())
         try:
             if self.warm_start is not None and request.init is None:
                 init = self.warm_start(request, key)
                 if init is not None:
                     request = dataclasses.replace(request, init=init)
                     ticket.request = request
+                    tracer.async_instant("warm_start", ticket.seqno,
+                                         t_init=init.t_init)
             if self.validate is not None:
                 self.validate(request, key)
+            tracer.async_instant("validate", ticket.seqno)
         except Exception as error:  # noqa: BLE001 — fail the one ticket
+            self.obs.metrics.counter(
+                "queue.rejected").inc(key=key.describe())
+            tracer.async_end("ticket", ticket.seqno, error=str(error))
             ticket.fail(error)
             return ticket
         return self._enqueue(ticket)
@@ -240,6 +264,10 @@ class RequestQueue:
                 f"resolved; cannot resubmit")
         if request is not None:
             ticket.request = request
+        self.obs.metrics.counter(
+            "queue.resubmitted").inc(key=ticket.key.describe())
+        self.obs.tracer.async_instant("resubmit", ticket.seqno,
+                                      refines=ticket.refines)
         return self._enqueue(ticket)
 
     def _enqueue(self, ticket: Ticket) -> Ticket:

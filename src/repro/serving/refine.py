@@ -64,8 +64,12 @@ class RefinePlanner:
     so the planner composes with any loop/batcher configuration.
     """
 
-    def __init__(self, policy: Optional[RefinePolicy] = None):
+    def __init__(self, policy: Optional[RefinePolicy] = None, *,
+                 metrics=None):
         self.policy = policy or RefinePolicy()
+        #: optional :class:`repro.obs.MetricsRegistry` — drafts taken and
+        #: draft-stage latency feed ``refine.*`` instruments
+        self.metrics = metrics
 
     def plan(self, queue: RequestQueue, ticket: Ticket,
              result: SampleResult) -> bool:
@@ -78,6 +82,13 @@ class RefinePlanner:
             return False
         ticket.resolve_draft(result)
         ticket.refines += 1
+        if self.metrics is not None:
+            self.metrics.counter("refine.drafts").inc(
+                key=ticket.key.describe())
+            wait = ticket.draft_latency_s
+            if wait is not None:
+                self.metrics.histogram("refine.draft_latency_s").observe(
+                    wait, key=ticket.key.describe())
         continuation = dataclasses.replace(
             result.request or ticket.request,
             init=result.warm_start(self.policy.t_init),

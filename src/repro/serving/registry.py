@@ -13,6 +13,7 @@ from __future__ import annotations
 import threading
 from typing import Callable, Dict, Optional
 
+from repro.obs import Observability
 from repro.sampling.engine import SamplingEngine
 from repro.sampling.types import SampleRequest, WarmStart
 from repro.serving.cache import TrajectoryCache
@@ -41,12 +42,30 @@ class EngineRegistry:
         self._cache_capacity = cache_capacity
         self._cache_max_bytes = cache_max_bytes
         self._cache_neighborhood = cache_neighborhood
+        self._obs: Optional[Observability] = None
+
+    def bind_obs(self, obs: Observability) -> None:
+        """Attach one shared observability bundle: every engine and
+        trajectory cache constructed so far (and every future one) mirrors
+        its stats into ``obs.metrics`` under its key's label and emits
+        spans on ``obs.tracer``.  The :class:`~repro.serving.ServingLoop`
+        calls this with its own bundle at construction."""
+        with self._lock:
+            self._obs = obs
+            engines = list(self._engines.items())
+            caches = list(self._caches.items())
+        for key, engine in engines:
+            engine.bind_obs(obs, name=key.describe())
+        for key, cache in caches:
+            cache.bind_metrics(obs.metrics, name=key.describe())
 
     def get(self, key: EngineKey) -> SamplingEngine:
         with self._lock:
             engine = self._engines.get(key)
             if engine is None:
                 engine = self._engines[key] = self._factory(key)
+                if self._obs is not None:
+                    engine.bind_obs(self._obs, name=key.describe())
             return engine
 
     def engines(self) -> Dict[EngineKey, SamplingEngine]:
@@ -63,6 +82,9 @@ class EngineRegistry:
                     self._cache_capacity,
                     max_bytes=self._cache_max_bytes,
                     neighborhood=self._cache_neighborhood)
+                if self._obs is not None:
+                    cache.bind_metrics(self._obs.metrics,
+                                       name=key.describe())
             return cache
 
     # -- RequestQueue submit-time hooks --------------------------------------

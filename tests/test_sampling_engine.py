@@ -392,9 +392,10 @@ def test_stepwise_harvest_gathers_only_retired_lanes():
     assert lane == 0 and res.early_stopped and res.iters == 1
     lane_bytes = (T + 1) * D * 4
     fetched = bank.host_fetch_bytes - mark
-    # ONE retired lane's trajectory + its residual row + the (slots, 4)
-    # packed poll — nowhere near the full 4-lane bank
-    assert fetched == lane_bytes + T * 4 + bank.slots * 4 * 4
+    # ONE retired lane's trajectory + its residual row + the (slots, 5)
+    # packed poll (incl. its piggybacked residual column) — nowhere near
+    # the full 4-lane bank
+    assert fetched == lane_bytes + T * 4 + bank.slots * 5 * 4
     assert bank.gather_launches == 1 and bank.harvests == 1
     full_bank = bank.slots * (lane_bytes + T * 4)
     assert fetched < full_bank / 2
@@ -409,7 +410,7 @@ def test_stepwise_harvest_gathers_only_retired_lanes():
 
 
 def test_stepwise_poll_piggybacked_cached_and_invalidated():
-    """One blocking poll per round: the step program's packed (slots, 4)
+    """One blocking poll per round: the step program's packed (slots, 5)
     summary is fetched once, harvest/report share the cached copy, and
     step/refill invalidate it."""
     T = 12
@@ -458,7 +459,7 @@ def test_stepwise_seq_spec_skips_residual_fetch():
     assert all(res.residuals is None for _, res in results)
     fetched = bank.host_fetch_bytes - mark
     # 2 lanes' trajectories + packed poll; NO T x 4 residual rows
-    assert fetched == 2 * (T + 1) * D * 4 + bank.slots * 4 * 4
+    assert fetched == 2 * (T + 1) * D * 4 + bank.slots * 5 * 4
     # a taa engine at the same geometry DOES fetch its residual rows
     eng2 = make_engine(ddim_coeffs(T), get_sampler("taa"))
     bank2 = eng2.stepwise_open(2, chunk_iters=2)
@@ -469,7 +470,7 @@ def test_stepwise_seq_spec_skips_residual_fetch():
     [(_, res2)] = eng2.stepwise_harvest(bank2)
     assert res2.residuals is not None and res2.residuals.shape == (T,)
     assert bank2.host_fetch_bytes - mark2 == \
-        (T + 1) * D * 4 + T * 4 + bank2.slots * 4 * 4
+        (T + 1) * D * 4 + T * 4 + bank2.slots * 5 * 4
 
 
 def test_stepwise_report_and_stats_expose_protocol_counters():

@@ -887,16 +887,19 @@ def test_pump_and_drain_refuse_while_background_thread_owns_the_loop():
 
 # --- machine-readable bench results -----------------------------------------
 
-def test_write_bench_json_merges_sections(tmp_path):
-    from benchmarks.common import write_bench_json
+def test_write_bench_json_merges_sections_and_stamps_schema(tmp_path):
+    from benchmarks.common import BENCH_SCHEMA_VERSION, write_bench_json
     path = tmp_path / "BENCH_serving.json"
     write_bench_json("throughput", {"reqps": 2.0}, path=path)
     write_bench_json("async", {"speedup": 1.5}, path=path)
     data = json.loads(path.read_text())
-    assert data == {"throughput": {"reqps": 2.0}, "async": {"speedup": 1.5}}
+    assert data == {"throughput": {"reqps": 2.0}, "async": {"speedup": 1.5},
+                    "schema_version": BENCH_SCHEMA_VERSION}
     path.write_text("not json")
     write_bench_json("async", {"speedup": 2.0}, path=path)
-    assert json.loads(path.read_text()) == {"async": {"speedup": 2.0}}
+    assert json.loads(path.read_text()) == {
+        "async": {"speedup": 2.0},
+        "schema_version": BENCH_SCHEMA_VERSION}
 
 
 # --- sharded variant: async == run_batch under an 8-device mesh --------------

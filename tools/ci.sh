@@ -22,7 +22,15 @@
 # stream on the debug-time mesh (data=2 x time=2 x model=2: each
 # request's solve window shards over the `time` axis) plus the stepwise
 # guard's `time` phase, asserting window sharding keeps the five
-# compiled-once programs and one blocking poll per key per round.
+# compiled-once programs and one blocking poll per key per round;
+# and an eighth OBSERVABILITY pass — the early-exit soak re-run with
+# --trace-out (span tracing + per-lane residual telemetry on), the trace
+# summarized by tools/obs_report.py, and the stepwise guard's `obs`
+# phase asserting tracing is protocol-neutral (bitwise-identical solves,
+# stepwise_traces still 5, zero extra blocking polls or host fetches),
+# plus a check that the tracked BENCH_serving.json carries the
+# `observability` section (written by `benchmarks.run --only serve_async`)
+# with its protocol-neutrality invariants intact.
 # Extra args ("$@", e.g. a test file) are forwarded to
 # both pytest passes; a pass whose marker selects nothing in that target
 # (pytest exit 5) is not a failure.
@@ -80,3 +88,31 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python tools/stepwise_guard.py --phase time
+
+echo "--- observability pass (traced drain, trace report, obs guard) ---"
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.launch.serve --serve-async --smoke \
+        --mesh debug --data-parallel 4 --model-parallel 2 \
+        --requests 12 --steps-T 8 --batch-size 4 --arrival-rate 100 \
+        --chunk-iters 2 --loose-tau-frac 0.5 --loose-tau 1e-2 \
+        --quality-steps 3 --trace-out /tmp/repro_trace.json
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python tools/obs_report.py /tmp/repro_trace.json
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python tools/stepwise_guard.py --phase obs
+python - <<'PYEOF'
+import json
+
+data = json.load(open("BENCH_serving.json"))
+assert data.get("schema_version") == 2, data.get("schema_version")
+obs = data["observability"]
+assert obs["polls_per_round_equal"], obs
+assert obs["host_fetch_bytes_per_round_equal"], obs
+assert obs["bitwise_equal_traced_vs_untraced"], obs
+assert obs["residual_curves"] == obs["n_requests"], obs
+print(f"BENCH_serving.json observability section OK: "
+      f"{obs['residual_curves']}/{obs['n_requests']} residual curves, "
+      f"traced/untraced req/s ratio {obs['traced_over_untraced_reqps']:.2f}")
+PYEOF

@@ -1,0 +1,170 @@
+"""Human-readable summary of a ``serve.py --trace-out`` trace file.
+
+Reads the Chrome-trace JSON the :class:`repro.obs.SpanTracer` exports and
+prints what an operator tunes against, without opening Perfetto:
+
+  * per-track span table — count / p50 / p95 / total wall for every
+    complete ("X") span name (engine pack/dispatch/collect, stepwise
+    open/refill/step/poll/harvest), grouped by engine track;
+  * per-key round counts — how many stepwise ``step`` chunks each engine
+    ran over the drain;
+  * ticket lifecycle — queue-wait (submit -> admit) and end-to-end
+    (submit -> resolve) percentiles from the nestable-async ticket spans,
+    plus the lifecycle markers seen (validate/admit/splice/draft/...);
+  * residual sparklines — one line per resolved ticket that carried a
+    per-round convergence curve (``repro.obs.ConvergenceRecorder``),
+    rendered on a log scale so the fixed-point contraction (paper eq. 6's
+    sequential-limit residual) reads at a glance.
+
+Run from the repo root:
+    PYTHONPATH=src python tools/obs_report.py trace.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from collections import defaultdict
+from pathlib import Path
+
+SPARKS = "▁▂▃▄▅▆▇█"
+
+
+def percentile(values, q):
+    """Nearest-rank percentile (no numpy dependency needed here)."""
+    if not values:
+        return 0.0
+    ordered = sorted(values)
+    rank = min(len(ordered) - 1, max(0, math.ceil(q * len(ordered)) - 1))
+    return ordered[rank]
+
+
+def sparkline(residuals) -> str:
+    """Log-scale sparkline of a residual-vs-round curve; ``None`` entries
+    (sequential lanes, fresh lanes) render as gaps."""
+    finite = [r for r in residuals if r is not None and r > 0]
+    if not finite:
+        return "(no finite residuals)"
+    lo = math.log10(min(finite))
+    hi = math.log10(max(finite))
+    span = max(hi - lo, 1e-9)
+    out = []
+    for r in residuals:
+        if r is None or r <= 0:
+            out.append(" ")
+            continue
+        frac = (math.log10(r) - lo) / span
+        out.append(SPARKS[int(round(frac * (len(SPARKS) - 1)))])
+    return "".join(out)
+
+
+def load_events(path: Path):
+    payload = json.loads(path.read_text())
+    events = payload.get("traceEvents", payload)
+    names = {e["tid"]: e["args"]["name"] for e in events
+             if e.get("ph") == "M" and e.get("name") == "thread_name"}
+    return events, names
+
+
+def span_table(events, names, out=print):
+    """count / p50 / p95 / total per (track, span-name)."""
+    durs = defaultdict(list)
+    for e in events:
+        if e.get("ph") == "X":
+            track = names.get(e["tid"], f"tid{e['tid']}")
+            durs[(track, e["name"])].append(e.get("dur", 0.0) / 1e3)  # ms
+    if not durs:
+        out("no complete spans (was the drain traced?)")
+        return
+    out(f"{'track':>24s} {'span':>18s} {'count':>6s} {'p50':>9s} "
+        f"{'p95':>9s} {'total':>10s}")
+    for (track, name), ms in sorted(durs.items()):
+        out(f"{track:>24s} {name:>18s} {len(ms):6d} "
+            f"{percentile(ms, 0.50):8.2f}ms {percentile(ms, 0.95):8.2f}ms "
+            f"{sum(ms):8.1f}ms")
+
+
+def round_counts(events, names, out=print):
+    rounds = defaultdict(int)
+    for e in events:
+        if e.get("ph") == "X" and e["name"] == "stepwise.step":
+            rounds[names.get(e["tid"], f"tid{e['tid']}")] += 1
+    for track, n in sorted(rounds.items()):
+        out(f"{track}: {n} stepwise round(s)")
+
+
+def ticket_report(events, out=print):
+    """Queue-wait + end-to-end percentiles and residual sparklines from
+    the nestable-async ticket spans."""
+    tickets = defaultdict(dict)
+    for e in events:
+        ph = e.get("ph")
+        if ph not in ("b", "n", "e") or e.get("cat") != "ticket":
+            continue
+        t = tickets[e["id"]]
+        if ph == "b":
+            t["begin"] = e["ts"]
+            t["key"] = e.get("args", {}).get("key")
+        elif ph == "n":
+            t.setdefault("marks", {})[e["name"]] = e["ts"]
+        else:
+            t["end"] = e["ts"]
+            t["args"] = e.get("args", {})
+    if not tickets:
+        out("no ticket spans (was the drain traced?)")
+        return
+
+    waits, totals, markers = [], [], defaultdict(int)
+    for t in tickets.values():
+        marks = t.get("marks", {})
+        for name in marks:
+            markers[name] += 1
+        if "begin" in t and "admit" in marks:
+            waits.append((marks["admit"] - t["begin"]) / 1e3)
+        if "begin" in t and "end" in t:
+            totals.append((t["end"] - t["begin"]) / 1e3)
+    resolved = sum(1 for t in tickets.values() if "end" in t)
+    out(f"{len(tickets)} ticket span(s), {resolved} resolved; markers: "
+        + (", ".join(f"{k}={v}" for k, v in sorted(markers.items()))
+           or "none"))
+    if waits:
+        out(f"queue wait  p50 {percentile(waits, 0.50):8.2f}ms  "
+            f"p95 {percentile(waits, 0.95):8.2f}ms  (n={len(waits)})")
+    if totals:
+        out(f"end-to-end  p50 {percentile(totals, 0.50):8.2f}ms  "
+            f"p95 {percentile(totals, 0.95):8.2f}ms  (n={len(totals)})")
+
+    shown = 0
+    for ident in sorted(tickets, key=lambda i: int(i) if str(i).isdigit()
+                        else 0):
+        t = tickets[ident]
+        curve = (t.get("args") or {}).get("residual_curve") or []
+        if not curve:
+            continue
+        residuals = [p.get("residual") for p in curve]
+        finite = [r for r in residuals if r is not None]
+        tail = f" -> {finite[-1]:.1e}" if finite else ""
+        out(f"ticket #{ident} [{t.get('key', '?')}] "
+            f"{len(curve)} round(s): {sparkline(residuals)}{tail}")
+        shown += 1
+    if not shown:
+        out("no residual curves (sequential-only drain, or tracing was "
+            "off during the stepwise rounds)")
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("trace", type=Path,
+                   help="Chrome-trace JSON from serve.py --trace-out")
+    args = p.parse_args(argv)
+    events, names = load_events(args.trace)
+    print(f"{args.trace}: {len(events)} event(s)")
+    span_table(events, names)
+    round_counts(events, names)
+    ticket_report(events)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

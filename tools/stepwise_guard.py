@@ -23,6 +23,16 @@ resolve both stages.
 blocking poll per key per round — a sharding change that retraces per
 round or adds fetches fails here before it reaches a pod.
 
+``--phase obs`` guards the observability layer's protocol neutrality: the
+SAME drain traced (``repro.obs.Observability.enabled()`` — span tracing +
+per-lane residual telemetry) and untraced must produce bitwise-identical
+results with IDENTICAL protocol counters (stepwise_traces still 5,
+blocking polls / host-fetch bytes / retired-lane gathers unchanged —
+residual telemetry rides the widened packed summary, never its own
+fetch), and the traced drain must leave every ticket a complete
+submit -> resolve span chain plus a non-empty residual-vs-round curve,
+exported as strict Perfetto-loadable JSON.
+
 Run from the repo root:  PYTHONPATH=src python tools/stepwise_guard.py
 Time phase:  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src python tools/stepwise_guard.py --phase time
@@ -193,17 +203,128 @@ def phase_refine() -> int:
     return 0
 
 
+def phase_obs() -> int:
+    """Traced vs untraced drain over the same request population: the
+    observability layer must be protocol-neutral (bitwise-identical
+    results, identical stepwise protocol counters) while leaving every
+    traced ticket a complete span chain and a residual curve."""
+    import json
+    import tempfile
+
+    import numpy as np
+    from repro.obs import Observability
+
+    key = EngineKey("oracle", T, "taa")
+
+    def make_requests():
+        # staggered budgets: several harvest+refill rounds, mixed early exits
+        return [SampleRequest(label=i % N_LABELS, seed=90 + i,
+                              **({} if i % 3 == 0
+                                 else dict(tau=1e-2, quality_steps=1 + i % 4)))
+                for i in range(10)]
+
+    def drain(obs):
+        registry = make_registry()
+        queue = RequestQueue(obs=obs)
+        loop = ServingLoop(registry, queue,
+                           Batcher(BatchingPolicy(max_batch=4)),
+                           chunk_iters=2, obs=obs)
+        tickets = [queue.submit(r, key) for r in make_requests()]
+        engine = registry.get(key)
+        rounds = drain_with_poll_accounting(loop, queue, engine, "obs")
+        if rounds < 0:
+            return None
+        if not check_traces(engine, "obs"):
+            return None
+        report = loop.bank_reports()[key]
+        report["stepwise_traces"] = engine.stats["stepwise_traces"]
+        return dict(tickets=tickets,
+                    results=[t.result() for t in tickets],
+                    report=report, rounds=rounds)
+
+    base = drain(None)
+    if base is None:
+        return 1
+    obs = Observability.enabled()
+    traced = drain(obs)
+    if traced is None:
+        return 1
+
+    # 1. bitwise-identical solves: telemetry reads state, never perturbs it
+    for i, (a, b) in enumerate(zip(base["results"], traced["results"])):
+        if np.asarray(a.x0).tobytes() != np.asarray(b.x0).tobytes():
+            print(f"FAIL[obs]: request {i} x0 differs between traced and "
+                  f"untraced drains (telemetry perturbed the solve)")
+            return 1
+        if (a.iters, a.nfe, a.early_stopped) != \
+                (b.iters, b.nfe, b.early_stopped):
+            print(f"FAIL[obs]: request {i} iters/nfe/early_stopped differ "
+                  f"between traced and untraced drains")
+            return 1
+
+    # 2. identical protocol counters: residual telemetry rides the packed
+    #    summary — tracing must add zero polls, fetches, or gathers
+    for field in ("blocking_polls", "host_fetch_bytes", "gather_launches",
+                  "stepwise_traces"):
+        if base["report"][field] != traced["report"][field]:
+            print(f"FAIL[obs]: {field} changed under tracing "
+                  f"({base['report'][field]} -> {traced['report'][field]})")
+            return 1
+
+    # 3. every ticket: non-empty residual curve + complete span chain
+    events = obs.tracer.events()
+    begins = {e["id"] for e in events if e.get("ph") == "b"}
+    ends = {e["id"] for e in events if e.get("ph") == "e"}
+    marks = {}
+    for e in events:
+        if e.get("ph") == "n":
+            marks.setdefault(e["id"], set()).add(e["name"])
+    for t in traced["tickets"]:
+        ident = str(t.seqno)
+        if not t.residual_curve:
+            print(f"FAIL[obs]: ticket #{t.seqno} resolved without a "
+                  f"residual curve")
+            return 1
+        if ident not in begins or ident not in ends:
+            print(f"FAIL[obs]: ticket #{t.seqno} span chain incomplete "
+                  f"(begin={ident in begins}, end={ident in ends})")
+            return 1
+        if not marks.get(ident, set()) & {"admit", "splice"}:
+            print(f"FAIL[obs]: ticket #{t.seqno} has no admit/splice marker")
+            return 1
+
+    # 4. the export is strict JSON a trace viewer will load
+    with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as fh:
+        path = obs.tracer.export(fh.name)
+    payload = json.loads(path.read_text())
+    if not payload.get("traceEvents"):
+        print("FAIL[obs]: exported trace has no events")
+        return 1
+    path.unlink()
+
+    report = traced["report"]
+    curves = sum(len(t.residual_curve) for t in traced["tickets"])
+    print(f"OK[obs]: {report['completed']} served bitwise-identical under "
+          f"tracing, stepwise_traces=5, {report['blocking_polls']} blocking "
+          f"polls / {report['host_fetch_bytes']} B fetched unchanged, "
+          f"{len(events)} trace events, {curves} residual points over "
+          f"{len(traced['tickets'])} tickets")
+    return 0
+
+
 def main() -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--phase", default="all",
-                   choices=("all", "earlyexit", "refine", "time"),
-                   help="all (default: earlyexit + refine), or one phase; "
-                        "`time` needs 8 devices (forced host devices on "
-                        "CPU) and drains under the debug-time mesh")
+                   choices=("all", "earlyexit", "refine", "time", "obs"),
+                   help="all (default: earlyexit + refine + obs), or one "
+                        "phase; `time` needs 8 devices (forced host "
+                        "devices on CPU) and drains under the debug-time "
+                        "mesh")
     args = p.parse_args()
     phases = {"earlyexit": phase_earlyexit, "refine": phase_refine,
-              "time": phase_time}
-    run = ("earlyexit", "refine") if args.phase == "all" else (args.phase,)
+              "time": phase_time, "obs": phase_obs}
+    run = ("earlyexit", "refine", "obs") if args.phase == "all" \
+        else (args.phase,)
     for name in run:
         rc = phases[name]()
         if rc:
