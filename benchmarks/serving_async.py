@@ -67,6 +67,17 @@ DiT, placement from ``REPRO_BENCH_MESH`` like ``serving_throughput``):
     Needs 8 devices (``XLA_FLAGS=--xla_force_host_platform_device_count=8``);
     records a ``skipped`` marker otherwise.
 
+  * ``fused_round``  — the fused Anderson update (PR 9): the SAME
+    staggered stepwise population drained with the staged
+    gram -> solve -> apply round and with ``fuse_round=True`` (one
+    ``ops.taa_round`` dispatch per solver iteration) at identical mesh
+    geometry.  Records modeled ``update_launches`` per round and
+    requests/s for both, the launch reduction (3x by construction:
+    3 dispatches/iter -> 1), bitwise equality of the solves (the CPU
+    staged composition reuses the exact unfused primitives), and that
+    the host protocol is untouched (still 5 stepwise traces, equal
+    blocking polls per round).
+
   * ``observability`` — the cost of watching: the SAME staggered stepwise
     population drained untraced (the default off bundle) and traced
     (``repro.obs.Observability.enabled()`` — span tracing + per-lane
@@ -110,7 +121,7 @@ import numpy as np
 
 from benchmarks import common
 from repro.obs import Observability
-from repro.sampling import SampleRequest
+from repro.sampling import SampleRequest, get_sampler
 from repro.serving import (Batcher, BatchingPolicy, EngineKey, EngineRegistry,
                            RefinePlanner, RefinePolicy, RequestQueue,
                            ServingLoop)
@@ -243,6 +254,79 @@ def _time_shard(T, n_requests, max_batch):
         f"polls/round={shard['blocking_polls_per_round']:.2f} vs "
         f"{base['blocking_polls_per_round']:.2f};"
         f"max_rel_err={rel_err:.1e}")]
+
+
+def _fused_round(T, n_requests, max_batch):
+    """``fused_round`` section: the staged vs fused Anderson update over
+    the same staggered stepwise population at identical mesh geometry."""
+    placement = common.bench_placement()
+    geometry = common.mesh_geometry(placement)
+    key = EngineKey("dit-xl", T, "taa")
+    chunk_iters = 3
+    requests = [SampleRequest(label=i % 10, seed=5100 + i,
+                              **({} if i % 3 == 0
+                                 else dict(tau=1e-2,
+                                           quality_steps=2 + i % 4)))
+                for i in range(n_requests)]
+
+    def drain(spec):
+        registry = EngineRegistry(
+            lambda k: common.serving_engine(common.scenario("ddim", k.T),
+                                            spec=spec, placement=placement))
+        batcher = Batcher(BatchingPolicy(max_batch=max_batch))
+        slots = batcher.slots_for(registry.get(key))
+        registry.warmup(key, slots=slots, chunk_iters=chunk_iters)
+        engine = registry.get(key)
+        queue = RequestQueue()
+        loop = ServingLoop(registry, queue, batcher, chunk_iters=chunk_iters)
+        t0 = time.perf_counter()
+        tickets = [queue.submit(r, key) for r in requests]
+        loop.drain()
+        wall = time.perf_counter() - t0
+        results = [t.result() for t in tickets]
+        report = loop.bank_reports()[key]
+        rounds = loop.stats["chunks"] + 1
+        return dict(
+            reqps=len(requests) / wall,
+            rounds=rounds,
+            update_launches=report["update_launches"],
+            update_launches_per_round=report["update_launches"] / rounds,
+            update_launches_per_iter=engine.update_launches_per_iter(),
+            blocking_polls_per_round=report["blocking_polls"] / rounds,
+            stepwise_traces=engine.stats["stepwise_traces"],
+            iters=[r.iters for r in results],
+            x0s=[np.asarray(r.x0) for r in results])
+
+    staged = drain(get_sampler("taa"))
+    fused = drain(get_sampler("taa", fuse_round=True))
+    bitwise = all(a.tobytes() == b.tobytes()
+                  for a, b in zip(staged.pop("x0s"), fused.pop("x0s")))
+    reduction = staged["update_launches_per_round"] \
+        / max(fused["update_launches_per_round"], 1e-9)
+    common.write_bench_json("fused_round", dict(
+        T=T, n_requests=n_requests, chunk_iters=chunk_iters,
+        placement=placement.describe(), devices=placement.num_devices,
+        **geometry,
+        staged={k: v for k, v in staged.items() if k != "iters"},
+        fused={k: v for k, v in fused.items() if k != "iters"},
+        update_launch_reduction=reduction,
+        bitwise_equal_fused_vs_staged=bool(bitwise),
+        iters_equal=staged["iters"] == fused["iters"],
+        stepwise_traces_equal=staged["stepwise_traces"]
+        == fused["stepwise_traces"],
+        polls_per_round_equal=staged["blocking_polls_per_round"]
+        == fused["blocking_polls_per_round"]))
+    return [(
+        f"serve_async/ddim{T}/fused_round_k{chunk_iters}",
+        1e6 / fused["reqps"],
+        f"update_launches/round={fused['update_launches_per_round']:.1f} vs "
+        f"staged {staged['update_launches_per_round']:.1f} "
+        f"({reduction:.1f}x lower);"
+        f"reqps={fused['reqps']:.2f} vs {staged['reqps']:.2f};"
+        f"bitwise_equal={bitwise};"
+        f"stepwise_traces={fused['stepwise_traces']};"
+        f"polls/round={fused['blocking_polls_per_round']:.2f} vs "
+        f"{staged['blocking_polls_per_round']:.2f}")]
 
 
 def run(T: int = 25, n_requests: int = 24, max_batch: int = 8):
@@ -740,5 +824,6 @@ def run(T: int = 25, n_requests: int = 24, max_batch: int = 8):
         residual_curves=obs_curves,
         trace_events=len(tracer_bundle.tracer.events()),
         trace_events_dropped=tracer_bundle.tracer.dropped))
+    rows += _fused_round(T, n_requests, max_batch)
     rows += _time_shard(T, n_requests, max_batch)
     return rows

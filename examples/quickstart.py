@@ -70,6 +70,18 @@ Train a tiny DiT on synthetic latents, then:
      summary column — zero extra polls or fetches), so a resolved
      ticket's `residual_curve` shows the fixed-point contraction toward
      the sequential solution (paper eq. 6) round by round.
+ 11. fused Anderson round (`fuse_round`, `serve.py --fuse-round`): the
+     whole Theorem 3.2 update — Gram blocks, the T tiny regularized
+     solves, and the correction apply — collapses into ONE
+     `ops.taa_round` dispatch per iteration (a single `pallas_call` on
+     the Pallas path; off-TPU, a staged composition of the exact same
+     jnp primitives, so the CPU default stays bitwise-identical).  The
+     engine counts the modeled `update_launches` per round (3/iter
+     staged, 1/iter fused) in `last_dispatches` / `stepwise_report` /
+     `stats` — the CI-box launch-overhead metric.  On real GPUs, pair
+     it with `serve.py --backend-tune`, which merges the XLA:GPU
+     serving flags (latency-hiding scheduler, Triton fusions, async
+     collectives) into `XLA_FLAGS` before jax initializes.
 
     PYTHONPATH=src python examples/quickstart.py
     # multi-device placement demo on CPU:
@@ -353,6 +365,27 @@ def main():
     print(f"trace: {len(obs.tracer.events())} events -> {trace_path} "
           f"(load in Perfetto, or `python tools/obs_report.py {trace_path}`)")
     trace_path.unlink()
+
+    # --- 11. fused Anderson round: one update launch per iteration ----------
+    # fuse_round=True routes the whole Theorem 3.2 update (gram + T tiny
+    # solves + apply) through ONE ops.taa_round dispatch per iteration —
+    # a single pallas_call on TPU, the bitwise-identical staged jnp
+    # composition here on CPU.  The engine's modeled update_launches
+    # counter (3/iter staged vs 1/iter fused) is the launch-overhead
+    # proxy the CI box asserts instead of noisy wall-clock.
+    fused_engine = SamplingEngine(eps_apply, params, coeffs,
+                                  get_sampler("taa", fuse_round=True),
+                                  sample_shape=(16, cfg.latent_dim))
+    fused_results = fused_engine.run_batch(requests, batch_size=4)
+    same = all(bool(jnp.all(jnp.asarray(a.x0) == jnp.asarray(b.x0)))
+               for a, b in zip(fused_results, results))
+    d_f = fused_engine.last_dispatches[-1]
+    print(f"fused round: {d_f['update_launches']} update launch(es) over "
+          f"{d_f['device_iters']} iteration(s) (staged would take "
+          f"{3 * d_f['device_iters']}); bitwise-equal to the staged "
+          f"engine: {same}")
+    assert same
+    assert d_f["update_launches"] == d_f["device_iters"]
 
 
 if __name__ == "__main__":

@@ -44,7 +44,8 @@ def anderson_update(x_rows, R, dX, dF, window_mask, *, mode: str,
                     lam: float, safeguard_mask=None,
                     use_pallas: Optional[bool] = None,
                     interpret: bool = False,
-                    time_axis: Optional[str] = None):
+                    time_axis: Optional[str] = None,
+                    fuse_round: bool = False):
     """One accelerated update over the active window.
 
     x_rows: (T, D) current iterate rows 0..T-1
@@ -59,6 +60,10 @@ def anderson_update(x_rows, R, dX, dF, window_mask, *, mode: str,
         every reduction operand/output replicated over it, so any
         time_axis value keeps the update bitwise-identical (see the
         dispatch notes in ``repro.kernels.ops``).
+    fuse_round: route the whole round through ``ops.taa_round`` — one
+        fused launch on the Pallas path, the bitwise-identical staged
+        composition elsewhere — instead of the three-dispatch staging
+        below.
     Returns x_new rows (T, D) (only window rows are meaningful).
     """
     f32 = jnp.float32
@@ -72,6 +77,10 @@ def anderson_update(x_rows, R, dX, dF, window_mask, *, mode: str,
     kw = dict(use_pallas=use_pallas, interpret=interpret,
               time_axis=time_axis)
     wmask = window_mask.astype(f32)  # (T,)
+
+    if fuse_round:
+        return _ops.taa_round(x_rows, R, dX, dF, wmask, mode=mode, lam=lam,
+                              safeguard_mask=safeguard_mask, **kw)
 
     if mode == "taa":
         # gram + suffix cumsum + T tiny solves, fused Gram pass in ops

@@ -66,6 +66,11 @@ class ParaTAAConfig:
                                # eval only; every cross-row reduction stays
                                # replicated, so the time_shards > 1 program
                                # is bitwise-identical to the unsharded one.
+    fuse_round: bool = False   # route the Anderson round through
+                               # ops.taa_round: ONE launch per iteration on
+                               # the Pallas path (gram + solve + apply
+                               # fused), the bitwise-identical staged jnp
+                               # composition elsewhere
 
 
 @jax.tree_util.register_dataclass
@@ -213,7 +218,7 @@ def _iterate(state: SolverState, static, cfg: ParaTAAConfig,
         x[:T], R.astype(x.dtype), state.dX, dF, upd_mask,
         mode=mode, lam=cfg.lam, safeguard_mask=guard,
         use_pallas=cfg.use_pallas, interpret=cfg.interpret,
-        time_axis=ta)
+        time_axis=ta, fuse_round=cfg.fuse_round)
     x_rows_new = window_constrain(x_rows_new, ta, replicate=True)
 
     x_new = jnp.concatenate([x_rows_new, x[T:]], axis=0)

@@ -18,7 +18,9 @@ from repro.kernels.flash_attention import flash_attention as _flash_attention
 from repro.kernels.flash_decode import flash_decode as _flash_decode
 from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
 from repro.kernels.rglru_scan import rglru_scan_kernel as _rglru_scan
-from repro.kernels.taa_update import taa_gram as _taa_gram, taa_apply as _taa_apply
+from repro.kernels.taa_update import (taa_gram as _taa_gram,
+                                      taa_apply as _taa_apply,
+                                      taa_round as _taa_round_kernel)
 
 
 def _on_tpu() -> bool:
@@ -181,3 +183,69 @@ def taa_apply(x, R, dX, dF, gamma, mask, *,
                                interpret, time_axis)
     return _taa_apply_jit(x, R, dX, dF, gamma, mask, use_pallas=use_pallas,
                           interpret=interpret)
+
+
+def _taa_round_impl(x, R, dX, dF, mask, guard, mode, lam, use_pallas,
+                    interpret, time_axis):
+    if _pick(use_pallas):
+        g = jnp.zeros_like(mask) if guard is None \
+            else guard.astype(jnp.float32)
+        out = _taa_round_kernel(x, R, dX, dF, mask, g, mode=mode, lam=lam,
+                                interpret=interpret)
+        return _row_pin(out, time_axis, replicate=True)
+    # Staged reference: the EXACT primitives anderson_update's unfused path
+    # composes, in the same order — gram, (suffix) reduce + solve, apply —
+    # so the CPU default is bitwise-identical with fuse_round on or off.
+    T = x.shape[0]
+    m = dF.shape[0]
+    if mode == "taa":
+        gamma = _taa_rowwise_gamma_impl(dF, R, mask, lam, use_pallas,
+                                        interpret, time_axis)
+    else:
+        G, u = _taa_gram_impl(dF, R, mask, use_pallas, interpret, time_axis)
+        eye = jnp.eye(m, dtype=jnp.float32)
+        if mode == "aa":
+            M = jnp.sum(G, axis=0) + lam * eye
+            rhs = jnp.sum(u, axis=0)
+            g = jnp.linalg.solve(M, rhs)
+            gamma = jnp.broadcast_to(g[None], (T, m))
+        elif mode == "aa+":
+            M = jnp.sum(G, axis=0) + lam * eye
+            rhs = jnp.flip(jnp.cumsum(jnp.flip(u, 0), 0), 0)
+            gamma = jnp.linalg.solve(M[None], rhs[..., None])[..., 0]
+        else:
+            raise ValueError(mode)
+        gamma = _row_pin(gamma, time_axis, replicate=True)
+    if guard is not None:
+        gamma = jnp.where(guard[:, None], 0.0, gamma)
+    return _taa_apply_impl(x, R, dX, dF, gamma, mask, use_pallas, interpret,
+                           time_axis)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mode", "lam", "use_pallas", "interpret"))
+def _taa_round_jit(x, R, dX, dF, mask, guard, *, mode, lam, use_pallas,
+                   interpret):
+    return _taa_round_impl(x, R, dX, dF, mask, guard, mode, lam, use_pallas,
+                           interpret, None)
+
+
+def taa_round(x, R, dX, dF, mask, *, mode: str = "taa", lam: float = 1e-8,
+              safeguard_mask=None, use_pallas: Optional[bool] = None,
+              interpret: bool = False, time_axis: Optional[str] = None):
+    """The whole Theorem-3.2 round — Gram blocks, suffix cumsum, the T tiny
+    regularized solves (taa; aa/aa+ use their global/suffix reductions), the
+    Theorem-3.6 safeguard, and the history apply — as ONE dispatch.
+
+    On the Pallas path this is a single ``pallas_call`` (one launch instead
+    of gram + host solve + apply); elsewhere it falls back to the staged jnp
+    composition, bitwise-identical to running the three ops separately.
+    ``safeguard_mask``: (T,) bool rows forced to the plain FP update;
+    ``time_axis`` pins every cross-row reduction replicated, same rules as
+    the staged ops (see dispatch notes above).
+    """
+    if time_axis is not None:
+        return _taa_round_impl(x, R, dX, dF, mask, safeguard_mask, mode, lam,
+                               use_pallas, interpret, time_axis)
+    return _taa_round_jit(x, R, dX, dF, mask, safeguard_mask, mode=mode,
+                          lam=lam, use_pallas=use_pallas, interpret=interpret)

@@ -5,10 +5,22 @@ The suffix-cumsum reformulation (see repro.core.anderson) reduces TAA to:
   2. a reverse cumsum over t + T tiny (m x m) solves         [host jnp]
   3. the update x_t + R_t - (dX_t + dF_t)^T gamma_t
 
-Steps 1 and 3 are memory-bound passes over the (m, T, D) histories; these
-kernels fuse each into a single HBM sweep.  Grid: (T, d_blocks) with the
-d-axis sequential so the (m, m)/(m,) partials accumulate in VMEM scratch.
-m is padded to 8 (sublane) — the Gram tile stays in registers.
+Steps 1 and 3 are memory-bound passes over the (m, T, D) histories;
+``taa_gram`` / ``taa_apply`` fuse each into a single HBM sweep.  Grid:
+(T, d_blocks) with the d-axis sequential so the (m, m)/(m,) partials
+accumulate in VMEM scratch.  m is padded to 8 (sublane) — the Gram tile
+stays in registers.
+
+``taa_round`` goes further: ONE ``pallas_call`` for the whole round.  The
+grid grows a leading phase axis (2, T, d_blocks) — phase 0 is the Gram
+sweep with every (m, m)/(m,) row block parked in a (T, m, m)/(T, m) VMEM
+scratch instead of HBM; at the first step of phase 1 the suffix cumsum
+(an upper-triangular-ones matmul over the row axis), the ridge, and the T
+tiny (m, m) solves (unrolled pivot-free Gauss-Jordan — the Grams are
+SPD + ridge) all run in-register on those resident blocks; the rest of
+phase 1 is the apply sweep reading the (T, m) gammas straight from
+scratch.  Launches per round: 3 (gram + host solve + apply) -> 1, and the
+G/u/gamma intermediates never touch HBM or the host.
 """
 from __future__ import annotations
 
@@ -116,4 +128,134 @@ def taa_apply(x, R, dX, dF, gamma, mask, *, bd: int = 512,
         out_shape=jax.ShapeDtypeStruct((t, dpad), x.dtype),
         interpret=interpret,
     )(x, R, dX, dF, gamma, mask)
+    return out[:, :d]
+
+
+def _gauss_jordan(A, b, *, m: int):
+    """Batched pivot-free Gauss-Jordan solve A x = b; A: (n, m, m) SPD+ridge,
+    b: (n, m) -> (n, m).  m is static, so the elimination unrolls fully —
+    no gathers, no data-dependent control flow, VPU-only."""
+    aug = jnp.concatenate([A, b[..., None]], axis=-1)      # (n, m, m+1)
+    rowk = jax.lax.broadcasted_iota(jnp.int32, (m, 1), 0)  # 2D iota (TPU)
+    for k in range(m):
+        piv = aug[:, k, :] / aug[:, k, k:k + 1]            # (n, m+1)
+        factor = aug[:, :, k]                              # (n, m)
+        elim = aug - factor[..., None] * piv[:, None, :]
+        # row k eliminated itself to zero above: restore the normalized row
+        aug = jnp.where((rowk == k)[None], piv[:, None, :], elim)
+    return aug[:, :, m]
+
+
+def _round_kernel(x_ref, r_ref, dx_ref, df_ref, mask_ref, guard_ref, o_ref,
+                  g_all, u_all, gam, acc_g, acc_u, *,
+                  mode: str, lam: float, m: int, t: int):
+    ph = pl.program_id(0)
+    ti = pl.program_id(1)
+    di = pl.program_id(2)
+    nd = pl.num_programs(2)
+    w = mask_ref[0]
+
+    @pl.when(ph == 0)
+    def _gram_sweep():
+        @pl.when(di == 0)
+        def _init():
+            acc_g[...] = jnp.zeros_like(acc_g)
+            acc_u[...] = jnp.zeros_like(acc_u)
+
+        df = df_ref[:, 0].astype(jnp.float32) * w  # (m, bd)
+        r = r_ref[0].astype(jnp.float32) * w       # (bd,)
+        acc_g[...] += jax.lax.dot_general(df, df, (((1,), (1,)), ((), ())),
+                                          preferred_element_type=jnp.float32)
+        acc_u[...] += (df @ r)[:, None]
+
+        @pl.when(di == nd - 1)
+        def _park():
+            g_all[pl.ds(ti, 1)] = acc_g[...][None]
+            u_all[pl.ds(ti, 1)] = acc_u[...][:, 0][None]
+
+    @pl.when(ph == 1)
+    def _solve_and_apply():
+        @pl.when((ti == 0) & (di == 0))
+        def _solve():
+            G = g_all[...]                                  # (t, m, m)
+            u = u_all[...]                                  # (t, m)
+            row = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+            col = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+            upper = (col >= row).astype(jnp.float32)        # suffix-sum op
+            ei = jax.lax.broadcasted_iota(jnp.int32, (m, m), 0)
+            ej = jax.lax.broadcasted_iota(jnp.int32, (m, m), 1)
+            eye = (ei == ej).astype(jnp.float32)
+            if mode == "taa":
+                Gs = (upper @ G.reshape(t, m * m)).reshape(t, m, m) \
+                    + lam * eye
+                us = upper @ u
+            elif mode == "aa":
+                Gs = jnp.broadcast_to((jnp.sum(G, 0) + lam * eye)[None],
+                                      (t, m, m))
+                us = jnp.broadcast_to(jnp.sum(u, 0)[None], (t, m))
+            elif mode == "aa+":
+                Gs = jnp.broadcast_to((jnp.sum(G, 0) + lam * eye)[None],
+                                      (t, m, m))
+                us = upper @ u
+            else:
+                raise ValueError(mode)
+            gamma = _gauss_jordan(Gs, us, m=m)              # (t, m)
+            guard = guard_ref[0]                            # (t,)
+            gam[...] = jnp.where(guard[:, None] > 0, 0.0, gamma)
+
+        x = x_ref[0].astype(jnp.float32)           # (bd,)
+        r = r_ref[0].astype(jnp.float32)
+        hist = dx_ref[:, 0].astype(jnp.float32) \
+            + df_ref[:, 0].astype(jnp.float32)     # (m, bd)
+        gv = gam[pl.ds(ti, 1)][0]                  # (m,)
+        corr = gv @ hist                           # (bd,)
+        o_ref[0] = jnp.where(w > 0, x + r - corr, x).astype(o_ref.dtype)
+
+
+def taa_round(x, R, dX, dF, mask, guard, *, mode: str = "taa",
+              lam: float = 1e-8, bd: int = 512, interpret: bool = False):
+    """Whole Theorem-3.2 round in one launch: Gram blocks, suffix cumsum,
+    the T regularized (m, m) solves, and the history apply.
+
+    x, R: (T, D); dX, dF: (m, T, D); mask: (T,) f32 window weights;
+    guard: (T,) f32 — rows > 0 get gamma forced to 0 (Theorem 3.6
+    safeguard; pass zeros for no safeguard).  Returns (T, D) in x.dtype.
+
+    Grid (2, T, d_blocks): the out/x/dX index maps multiply by the phase
+    id, pinning their block at (0, 0) through the whole Gram sweep — the
+    output block is only flushed after phase 1's first step has written
+    it, so nothing undefined reaches HBM.
+    """
+    m, t, d = dF.shape
+    pad = (-d) % bd
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        R = jnp.pad(R, ((0, 0), (0, pad)))
+        dX = jnp.pad(dX, ((0, 0), (0, 0), (0, pad)))
+        dF = jnp.pad(dF, ((0, 0), (0, 0), (0, pad)))
+    dpad = d + pad
+    grid = (2, t, dpad // bd)
+    kernel = functools.partial(_round_kernel, mode=mode, lam=lam, m=m, t=t)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bd), lambda ph, ti, di: (ti * ph, di * ph)),
+            pl.BlockSpec((1, bd), lambda ph, ti, di: (ti, di)),
+            pl.BlockSpec((m, 1, bd),
+                         lambda ph, ti, di: (0, ti * ph, di * ph)),
+            pl.BlockSpec((m, 1, bd), lambda ph, ti, di: (0, ti, di)),
+            pl.BlockSpec((1,), lambda ph, ti, di: (ti,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, t), lambda ph, ti, di: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bd), lambda ph, ti, di: (ti * ph, di * ph)),
+        out_shape=jax.ShapeDtypeStruct((t, dpad), x.dtype),
+        scratch_shapes=[pltpu.VMEM((t, m, m), jnp.float32),
+                        pltpu.VMEM((t, m), jnp.float32),
+                        pltpu.VMEM((t, m), jnp.float32),
+                        pltpu.VMEM((m, m), jnp.float32),
+                        pltpu.VMEM((m, 1), jnp.float32)],
+        interpret=interpret,
+    )(x, R, dX, dF, mask, guard.reshape(1, t))
     return out[:, :d]

@@ -1,0 +1,87 @@
+"""GPU backend tuning knobs, applied BEFORE jax initializes its backend.
+
+XLA:GPU ships with its biggest serving wins off by default: the
+latency-hiding scheduler (overlaps collectives with compute), Triton
+gemm/softmax fusions, and async collectives on a dedicated
+highest-priority stream.  The standard idiom is to splice them into
+``XLA_FLAGS`` before the first jax import — once the backend initializes,
+the flags are locked.
+
+This module MUST stay jax-free: ``apply_backend_tune`` runs in serve.py's
+pre-import block (next to ``_force_host_devices``), and importing jax here
+would initialize the backend and defeat the whole exercise.  The platform
+sniff is env-only for the same reason: CUDA/ROCm machines advertise
+themselves via ``CUDA_VISIBLE_DEVICES`` / ``ROCR_VISIBLE_DEVICES`` /
+``JAX_PLATFORMS``, so a CPU CI box (or a TPU pod, where these flags are
+meaningless) stays a byte-for-byte no-op.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+from typing import Dict, Optional
+
+#: The GPU serving flag set (latency-hiding scheduler + Triton fusion +
+#: async collectives).  Merge-missing semantics: a flag the user already
+#: pinned in XLA_FLAGS wins.
+GPU_XLA_FLAGS = (
+    "--xla_gpu_enable_latency_hiding_scheduler=true",
+    "--xla_gpu_enable_highest_priority_async_stream=true",
+    "--xla_gpu_enable_async_collectives=true",
+    "--xla_gpu_triton_gemm_any=True",
+    "--xla_gpu_enable_triton_softmax_fusion=true",
+)
+
+
+def _flag_name(flag: str) -> str:
+    return flag.split("=", 1)[0]
+
+
+def detect_platform(env: Optional[Dict[str, str]] = None) -> str:
+    """Best-effort platform sniff WITHOUT importing jax: "gpu" only when
+    the environment positively advertises a CUDA/ROCm runtime (or the user
+    forced ``JAX_PLATFORMS=cuda|rocm|gpu``); everything else — including
+    TPU and plain CPU hosts — reports "other" and stays untouched."""
+    env = os.environ if env is None else env
+    forced = env.get("JAX_PLATFORMS", env.get("JAX_PLATFORM_NAME", ""))
+    if forced:
+        head = forced.split(",")[0].strip().lower()
+        return "gpu" if head in ("cuda", "rocm", "gpu") else "other"
+    for key in ("CUDA_VISIBLE_DEVICES", "ROCR_VISIBLE_DEVICES",
+                "HIP_VISIBLE_DEVICES"):
+        if env.get(key, "") not in ("", "-1"):
+            return "gpu"
+    return "other"
+
+
+def tuned_env(current_flags: str = "",
+              env: Optional[Dict[str, str]] = None) -> Optional[str]:
+    """The XLA_FLAGS value ``--backend-tune`` would install, or None for a
+    no-op (non-GPU platform).  Pure function of its inputs so the unit
+    tests need no env mutation: flags already present in
+    ``current_flags`` are left alone, missing ones are appended."""
+    if detect_platform(env) != "gpu":
+        return None
+    present = {_flag_name(f) for f in current_flags.split()}
+    missing = [f for f in GPU_XLA_FLAGS if _flag_name(f) not in present]
+    if not missing:
+        return current_flags
+    return " ".join([current_flags.strip()] + missing).strip()
+
+
+def apply_backend_tune(argv, env: Optional[Dict[str, str]] = None) -> bool:
+    """serve.py pre-import hook: when ``--backend-tune`` is in ``argv`` AND
+    the platform is GPU, merge :data:`GPU_XLA_FLAGS` into ``XLA_FLAGS``.
+    Returns True iff the env was modified.  Must run before the first jax
+    import (the backend locks its flags at init)."""
+    parser = argparse.ArgumentParser(add_help=False)
+    parser.add_argument("--backend-tune", action="store_true")
+    args, _ = parser.parse_known_args(argv)
+    if not args.backend_tune:
+        return False
+    env = os.environ if env is None else env
+    tuned = tuned_env(env.get("XLA_FLAGS", ""), env)
+    if tuned is None or tuned == env.get("XLA_FLAGS", ""):
+        return False
+    env["XLA_FLAGS"] = tuned
+    return True

@@ -150,3 +150,56 @@ def model_flops(cfg, shape, per_step: bool = True) -> float:
         return 2.0 * n_params * tokens
     tokens = shape.global_batch  # decode: one token per sequence
     return 2.0 * n_params * tokens
+
+
+# ---------------------------------------------------------------------------
+# Anderson-round update pricing (fused vs staged) for the SLO cost model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TaaRoundCost:
+    """Modeled per-iteration cost of one Theorem-3.2 Anderson update over a
+    (T, D) window with history m: HBM bytes moved and kernel launches, for
+    the staged three-dispatch round vs the fused ``kernels.taa_round``."""
+    staged_bytes: int
+    fused_bytes: int
+    staged_launches: int = 3
+    fused_launches: int = 1
+
+    @property
+    def byte_ratio(self) -> float:
+        """staged / fused bytes — the fused round's traffic headroom."""
+        return self.staged_bytes / self.fused_bytes
+
+    @property
+    def launch_ratio(self) -> float:
+        return self.staged_launches / self.fused_launches
+
+
+def taa_round_traffic(T: int, D: int, m: int, itemsize: int = 4) \
+        -> TaaRoundCost:
+    """Bytes each Anderson-round variant moves through HBM per iteration.
+
+    Both variants pay the same two big streaming sweeps over the (m, T, D)
+    histories: the Gram pass reads dF and R, the apply pass reads dX, dF,
+    x, and R and writes the (T, D) output.  The STAGED round additionally
+    round-trips every intermediate through HBM and the host: the Gram pass
+    writes its (T, m, m) + (T, m) blocks out, the host solve stage reads
+    them back, ships the (T, m) gammas device<->host (one D2H + one H2D),
+    and the apply pass re-reads the gammas.  The FUSED round parks all of
+    that in VMEM scratch inside one ``pallas_call`` — zero intermediate
+    HBM or host traffic, and 3 launches collapse to 1 (the CI-box metric:
+    ``update_launches`` in the engine reports).
+    """
+    big = T * D * itemsize                  # one (T, D) sheet
+    hist = m * T * D * itemsize             # one (m, T, D) history
+    blocks = T * (m * m + m) * itemsize     # per-row Gram blocks G + u
+    gamma = T * m * itemsize                # the solved gammas
+    # sweep 1 (gram): read dF + R; sweep 2 (apply): read dX + dF + x + R,
+    # write the (T, D) update — dF is streamed in both sweeps
+    fused = (hist + big) + (2 * hist + 3 * big)
+    staged = fused \
+        + 2 * blocks \
+        + 4 * gamma
+    return TaaRoundCost(staged_bytes=staged, fused_bytes=fused)

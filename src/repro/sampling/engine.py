@@ -113,6 +113,9 @@ class LaneBank:
     blocking_polls: int = 0
     gather_launches: int = 0
     harvests: int = 0                      # rounds that retired >= 1 lane
+    update_launches: int = 0               # modeled Anderson-update kernel
+                                           # launches (3/iter staged, 1
+                                           # fused, 0 when no update runs)
 
     def free_lanes(self) -> List[int]:
         return [i for i, r in enumerate(self.requests) if r is None]
@@ -180,7 +183,7 @@ class SamplingEngine:
             initial={"traces": 0, "stepwise_traces": 0, "batches": 0,
                      "requests": 0, "wall_s": 0.0, "pack_s": 0.0,
                      "host_fetch_bytes": 0, "blocking_polls": 0,
-                     "gather_launches": 0})
+                     "gather_launches": 0, "update_launches": 0})
         self.last_batch_walls = []  # per-dispatch walls of the last run_batch
         self.last_dispatches: List[Dict] = []  # per-dispatch reports
 
@@ -214,6 +217,21 @@ class SamplingEngine:
         if plc.time_shards > 1:
             return dataclasses.replace(cfg, time_axis=plc.time_axis)
         return cfg
+
+    def update_launches_per_iter(self) -> int:
+        """Modeled kernel launches per solver iteration for the Anderson
+        UPDATE stage — the launch-count proxy the CI box measures instead
+        of noisy wall-clock (ROADMAP measurement note).  3 for the staged
+        round (Gram pass + cumsum/solve stage + apply pass), 1 when the
+        round is fused into one ``ops.taa_round`` dispatch, 0 when no
+        Anderson update runs at all (seq and fp/history_m<=1 lanes have
+        only the plain fixed-point write)."""
+        if self.spec.is_sequential:
+            return 0
+        cfg = self._stepwise_cfg()
+        if cfg.history_m <= 1 or cfg.mode in ("fp", "seq"):
+            return 0
+        return 1 if cfg.fuse_round else 3
 
     # -- program construction ------------------------------------------------
 
@@ -429,8 +447,11 @@ class SamplingEngine:
         # path reclaims by retiring/refilling lanes mid-solve
         all_iters = np.asarray(info["iters"], np.int64)
         device_iters = int(all_iters.max()) if all_iters.size else 0
+        update_launches = device_iters * self.update_launches_per_iter()
+        self.stats["update_launches"] += update_launches
         res_batch = info.get("residuals")
         self.last_dispatches.append(dict(
+            update_launches=update_launches,
             residual=[_finite_or_none(np.max(res_batch[i]))
                       for i in range(n_real)]
             if res_batch is not None else [None] * n_real,
@@ -784,6 +805,9 @@ class SamplingEngine:
         if hasattr(summary, "copy_to_host_async"):
             summary.copy_to_host_async()
         bank.device_iters += bank.chunk_iters
+        launches = bank.chunk_iters * self.update_launches_per_iter()
+        bank.update_launches += launches
+        self.stats["update_launches"] += launches
 
     def _count_fetch(self, bank: LaneBank, nbytes: int, *,
                      polls: int = 0, gathers: int = 0) -> None:
@@ -908,6 +932,7 @@ class SamplingEngine:
             blocking_polls=bank.blocking_polls,
             gather_launches=bank.gather_launches,
             harvests=bank.harvests,
+            update_launches=bank.update_launches,
             devices=self.placement.num_devices,
             slot_utilization=self.placement.slot_utilization(
                 bank.occupied, bank.slots),

@@ -35,6 +35,10 @@ class SamplerSpec:
     use_pallas: kernel routing for the solver's TAA Gram/apply passes
                (``repro.kernels.ops``): None = auto (Pallas on TPU, the
                bitwise-identical jnp refs elsewhere), True/False force it.
+    fuse_round: fuse the whole Anderson round (gram + solve + apply) into
+               one ``ops.taa_round`` dispatch per iteration — a single
+               ``pallas_call`` on the Pallas path, the bitwise-identical
+               staged jnp composition elsewhere (``serve.py --fuse-round``).
     """
     name: str
     solver: str = "taa"
@@ -46,6 +50,7 @@ class SamplerSpec:
     safeguard: bool = True
     s_max: int = 0
     use_pallas: Optional[bool] = None
+    fuse_round: bool = False
 
     @property
     def is_sequential(self) -> bool:
@@ -109,7 +114,7 @@ class SamplerSpec:
             history_m=self.history_m, window=self.window, mode=self.solver,
             tau=self.tau, lam=self.lam, s_max=self.s_max_for(T),
             safeguard=self.safeguard, t_init=t_init,
-            use_pallas=self.use_pallas)
+            use_pallas=self.use_pallas, fuse_round=self.fuse_round)
 
     def stepwise_config(self, T: int) -> ParaTAAConfig:
         """Resolve this spec for the resumable stepwise driver.  Unlike

@@ -1,0 +1,63 @@
+"""launch.backend: GPU XLA_FLAGS tuning is opt-in, GPU-only, merge-missing,
+and never touches the environment otherwise (serve.py pre-jax-init hook)."""
+import sys
+
+from repro.launch.backend import (GPU_XLA_FLAGS, apply_backend_tune,
+                                  detect_platform, tuned_env)
+
+GPU_ENV = {"CUDA_VISIBLE_DEVICES": "0,1"}
+
+
+def test_module_is_jax_free():
+    """backend runs BEFORE the first jax import; importing jax there would
+    initialize the backend and lock XLA_FLAGS too early."""
+    assert "repro.launch.backend" in sys.modules
+    src = open("src/repro/launch/backend.py").read()
+    assert "import jax" not in src
+
+
+def test_detect_platform_env_only():
+    assert detect_platform({}) == "other"                       # bare CPU box
+    assert detect_platform({"CUDA_VISIBLE_DEVICES": ""}) == "other"
+    assert detect_platform({"CUDA_VISIBLE_DEVICES": "-1"}) == "other"
+    assert detect_platform(GPU_ENV) == "gpu"
+    assert detect_platform({"ROCR_VISIBLE_DEVICES": "0"}) == "gpu"
+    assert detect_platform({"JAX_PLATFORMS": "cuda"}) == "gpu"
+    assert detect_platform({"JAX_PLATFORMS": "tpu"}) == "other"
+    # forced platform wins over device-visibility vars
+    assert detect_platform({"JAX_PLATFORMS": "cpu",
+                            "CUDA_VISIBLE_DEVICES": "0"}) == "other"
+
+
+def test_tuned_env_noop_off_gpu_and_merge_missing_on_gpu():
+    assert tuned_env("", {}) is None                # CPU/TPU: no-op
+    assert tuned_env("--foo=1", {}) is None
+    out = tuned_env("", GPU_ENV)
+    assert out == " ".join(GPU_XLA_FLAGS)
+    # a flag the user pinned wins; only the missing ones are appended
+    pinned = "--xla_gpu_enable_latency_hiding_scheduler=false"
+    out = tuned_env(pinned, GPU_ENV)
+    assert out.startswith(pinned)
+    assert "--xla_gpu_enable_latency_hiding_scheduler=true" not in out
+    for flag in GPU_XLA_FLAGS[1:]:
+        assert flag in out
+    # idempotent: nothing left to merge
+    assert tuned_env(out, GPU_ENV) == out
+
+
+def test_apply_backend_tune_only_sets_env_when_requested():
+    env = dict(GPU_ENV)
+    assert apply_backend_tune([], env) is False     # flag absent -> untouched
+    assert "XLA_FLAGS" not in env
+    assert apply_backend_tune(["--solver", "taa"], env) is False
+    assert "XLA_FLAGS" not in env
+    assert apply_backend_tune(["--backend-tune"], env) is True
+    assert env["XLA_FLAGS"] == " ".join(GPU_XLA_FLAGS)
+    # second application is a no-op (already merged)
+    assert apply_backend_tune(["--backend-tune"], env) is False
+
+
+def test_apply_backend_tune_noop_on_cpu_host():
+    env = {}
+    assert apply_backend_tune(["--backend-tune"], env) is False
+    assert "XLA_FLAGS" not in env

@@ -187,6 +187,62 @@ def test_ops_taa_gram_wrapper_dispatches_to_ref_on_cpu():
                                rtol=1e-3, atol=1e-3)
 
 
+def _round_inputs(dtype=jnp.float32, T=14, D=96, m=3):
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (T, D)).astype(dtype)
+    R = (jax.random.normal(ks[1], (T, D)) * 0.3).astype(dtype)
+    dX = (jax.random.normal(ks[2], (m, T, D)) * 0.1).astype(dtype)
+    dF = (jax.random.normal(ks[3], (m, T, D)) * 0.1).astype(dtype)
+    wmask = jnp.arange(T) >= 3
+    guard = jnp.arange(T) >= T - 2
+    return x, R, dX, dF, wmask, guard
+
+
+@pytest.mark.parametrize("mode", ["aa", "aa+", "taa"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_taa_round_interpret_matches_staged(mode, dtype):
+    """The single-pallas_call fused round (interpret mode on CPU) matches
+    the staged gram->solve->apply composition for every Anderson mode and
+    dtype — the acceptance gate for the one-launch update."""
+    x, R, dX, dF, wmask, guard = _round_inputs(dtype)
+    mask = wmask.astype(jnp.float32)
+    kw = dict(mode=mode, lam=1e-6, safeguard_mask=guard)
+    staged = ops.taa_round(x, R, dX, dF, mask, use_pallas=False, **kw)
+    fused = ops.taa_round(x, R, dX, dF, mask, use_pallas=True,
+                          interpret=True, **kw)
+    err = float(jnp.max(jnp.abs(fused.astype(jnp.float32)
+                                - staged.astype(jnp.float32))))
+    assert err < _tol(dtype), (mode, err)
+
+
+def test_fused_taa_round_matches_literal_theorem_3_2():
+    """The fused kernel reproduces the literal per-row-block Theorem 3.2
+    oracle over the full window (no safeguard, full mask)."""
+    from repro.core.anderson import taa_update_literal
+    T, D, m = 10, 64, 3
+    x, R, dX, dF, _, _ = _round_inputs(T=T, D=D, m=m)
+    mask = jnp.ones((T,), jnp.float32)
+    got = ops.taa_round(x, R, dX, dF, mask, mode="taa", lam=1e-6,
+                        use_pallas=True, interpret=True)
+    want = taa_update_literal(x, R, dX, dF, 0, T - 1, 1e-6)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("mode", ["fp", "aa", "aa+", "taa"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fuse_round_cpu_default_is_bitwise_identical(mode, dtype):
+    """On the CPU default routing, anderson_update(fuse_round=True) stages
+    the EXACT same primitives in the same order as the unfused path, so the
+    outputs must be bit-for-bit equal — the regression gate that lets
+    fuse_round default on without perturbing any golden output."""
+    from repro.core.anderson import anderson_update
+    x, R, dX, dF, wmask, guard = _round_inputs(dtype)
+    kw = dict(mode=mode, lam=1e-6, safeguard_mask=guard)
+    unfused = anderson_update(x, R, dX, dF, wmask, fuse_round=False, **kw)
+    fused = anderson_update(x, R, dX, dF, wmask, fuse_round=True, **kw)
+    assert np.array_equal(np.asarray(unfused), np.asarray(fused)), mode
+
+
 def test_ops_dispatch_cpu_uses_ref():
     q = jax.random.normal(KEY, (1, 2, 128, 64))
     k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 2, 128, 64))

@@ -213,6 +213,35 @@ def test_cpu_default_routing_bitwise_unchanged(dtype):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+@pytest.mark.parametrize("mode,m", [("fp", 1), ("aa", 3), ("aa+", 3),
+                                    ("taa", 3)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fuse_round_cpu_default_bitwise_unchanged(mode, m, dtype):
+    """fuse_round=True on the CPU default routing stages the same jnp
+    primitives the unfused path composes, so sample AND sample_recording
+    must be bit-for-bit identical — the regression gate for shipping the
+    fused round behind a config flag."""
+    coeffs = ddim_coeffs(15)
+    eps_fn = make_oracle_denoiser(D)
+    xi = draw_noises(jax.random.PRNGKey(12), coeffs, (D,))
+    kw = dict(order_k=6, history_m=m, mode=mode, tau=1e-3, s_max=50)
+    traj, info = sample(eps_fn, coeffs, ParaTAAConfig(**kw), xi, dtype=dtype)
+    traj_f, info_f = sample(eps_fn, coeffs,
+                            ParaTAAConfig(fuse_round=True, **kw), xi,
+                            dtype=dtype)
+    np.testing.assert_array_equal(np.asarray(traj), np.asarray(traj_f))
+    assert int(info["iters"]) == int(info_f["iters"])
+    assert int(info["nfe"]) == int(info_f["nfe"])
+    rec, irec = sample_recording(eps_fn, coeffs, ParaTAAConfig(**kw), xi,
+                                 dtype=dtype)
+    rec_f, irec_f = sample_recording(eps_fn, coeffs,
+                                     ParaTAAConfig(fuse_round=True, **kw),
+                                     xi, dtype=dtype)
+    np.testing.assert_array_equal(np.asarray(rec), np.asarray(rec_f))
+    np.testing.assert_array_equal(np.asarray(irec["res_history"]),
+                                  np.asarray(irec_f["res_history"]))
+
+
 def _drive_chunked(eps_fn, coeffs, cfg, xi, chunk, **init_kw):
     """Drive init_state/step_chunk across host boundaries until finished."""
     state = init_state(coeffs, cfg, xi, **init_kw)

@@ -2,7 +2,8 @@
 import numpy as np
 
 from repro.roofline.analysis import (parse_collective_bytes, roofline_terms,
-                                     model_flops, PEAK_FLOPS, HBM_BW, LINK_BW)
+                                     model_flops, taa_round_traffic,
+                                     PEAK_FLOPS, HBM_BW, LINK_BW)
 from repro.configs.registry import ARCHS, get_shape
 
 HLO = """
@@ -53,3 +54,24 @@ def test_model_flops_moe_counts_active_only():
     assert model_flops(moe, shape) == 6.0 * active * shape.global_batch * shape.seq_len
     assert model_flops(dense, get_shape("decode_32k")) == \
         2.0 * dense.param_count(active_only=True) * 128
+
+
+def test_taa_round_traffic_prices_fused_vs_staged():
+    """The fused round's predicted bytes are exactly the two streaming
+    sweeps; the staged round adds the Gram-block + gamma HBM/host
+    round-trips on top of the SAME sweeps — so the byte ratio is a pure
+    function of the intermediate traffic and the launch ratio is 3x."""
+    T, D, m, itemsize = 25, 32 * 32 * 4, 3, 4
+    cost = taa_round_traffic(T, D, m, itemsize=itemsize)
+    big = T * D * itemsize
+    hist = m * T * D * itemsize
+    # sweep 1 reads dF + R; sweep 2 reads dX + dF + x + R and writes out
+    assert cost.fused_bytes == (hist + big) + (2 * hist + 3 * big)
+    blocks = T * (m * m + m) * itemsize
+    gamma = T * m * itemsize
+    assert cost.staged_bytes == cost.fused_bytes + 2 * blocks + 4 * gamma
+    assert cost.staged_bytes > cost.fused_bytes
+    assert 1.0 < cost.byte_ratio < 1.5  # intermediates are small vs sweeps
+    assert cost.launch_ratio == 3.0
+    # intermediates scale with m^2, not D: shrinking D grows the ratio
+    assert taa_round_traffic(T, 64, m).byte_ratio > cost.byte_ratio

@@ -496,6 +496,51 @@ def test_stepwise_report_and_stats_expose_protocol_counters():
     assert d["host_fetch_bytes"] == eng2.stats["host_fetch_bytes"] > 0
 
 
+def test_update_launches_counted_per_round_and_cut_by_fuse_round():
+    """The launch-accounting tentpole: every dispatch and stepwise round
+    counts the modeled Anderson-update launches (3/iter staged, 1/iter
+    fused, 0 when no update runs), surfaces them in last_dispatches /
+    stepwise_report / stats, and fuse_round cuts them 3x while keeping
+    the outputs bitwise-identical on the CPU default routing."""
+    T = 15
+    coeffs = ddim_coeffs(T)
+    staged = make_engine(coeffs, get_sampler("taa"))
+    fused = make_engine(coeffs, get_sampler("taa", fuse_round=True))
+    assert staged.update_launches_per_iter() == 3
+    assert fused.update_launches_per_iter() == 1
+    assert make_engine(coeffs, get_sampler("seq")).update_launches_per_iter() == 0
+    assert make_engine(coeffs, get_sampler("fp")).update_launches_per_iter() == 0
+
+    reqs = [SampleRequest(label=i % N_LABELS, seed=60 + i) for i in range(3)]
+    res_s = staged.run_batch(reqs, batch_size=3)
+    res_f = fused.run_batch(reqs, batch_size=3)
+    for a, b in zip(res_s, res_f):
+        np.testing.assert_array_equal(np.asarray(a.trajectory),
+                                      np.asarray(b.trajectory))
+        assert a.iters == b.iters
+    [d_s] = staged.last_dispatches
+    [d_f] = fused.last_dispatches
+    assert d_s["update_launches"] == d_s["device_iters"] * 3
+    assert d_f["update_launches"] == d_f["device_iters"] * 1
+    assert d_s["update_launches"] == 3 * d_f["update_launches"]
+    assert staged.stats["update_launches"] == d_s["update_launches"]
+    assert fused.stats["update_launches"] == d_f["update_launches"]
+
+    # stepwise drain: per-bank counter, surfaced in the report
+    for eng, per_iter in ((staged, 3), (fused, 1)):
+        eng.reset_stats()
+        bank = eng.stepwise_open(2, chunk_iters=2)
+        eng.stepwise_refill(bank, [0, 1],
+                            [SampleRequest(label=0, seed=70),
+                             SampleRequest(label=1, seed=71)])
+        _drain_bank(eng, bank)
+        report = eng.stepwise_report(bank)
+        assert report["update_launches"] == bank.update_launches > 0
+        assert bank.update_launches == bank.device_iters * per_iter
+        assert eng.stats["update_launches"] == bank.update_launches
+        assert eng.stats["stepwise_traces"] == 5  # protocol unchanged
+
+
 # --- warm-start handles ------------------------------------------------------
 
 def test_result_exposes_warm_start_handle():

@@ -30,7 +30,14 @@
 # stepwise_traces still 5, zero extra blocking polls or host fetches),
 # plus a check that the tracked BENCH_serving.json carries the
 # `observability` section (written by `benchmarks.run --only serve_async`)
-# with its protocol-neutrality invariants intact.
+# with its protocol-neutrality invariants intact;
+# and a ninth FUSED-ROUND pass — the early-exit soak re-run with
+# --fuse-round --backend-tune (one ops.taa_round dispatch per solver
+# iteration; the GPU XLA knobs are a no-op on this CPU box), the
+# stepwise guard's `fused` phase asserting fused == staged bitwise with
+# unchanged protocol counters and >= 2x fewer modeled update launches
+# per round, and a check that BENCH_serving.json's `fused_round` section
+# holds the same invariants.
 # Extra args ("$@", e.g. a test file) are forwarded to
 # both pytest passes; a pass whose marker selects nothing in that target
 # (pytest exit 5) is not a failure.
@@ -115,4 +122,30 @@ assert obs["residual_curves"] == obs["n_requests"], obs
 print(f"BENCH_serving.json observability section OK: "
       f"{obs['residual_curves']}/{obs['n_requests']} residual curves, "
       f"traced/untraced req/s ratio {obs['traced_over_untraced_reqps']:.2f}")
+PYEOF
+
+echo "--- fused-round pass (one update launch per iteration, fused guard) ---"
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.launch.serve --serve-async --smoke \
+        --mesh debug --data-parallel 4 --model-parallel 2 \
+        --requests 12 --steps-T 8 --batch-size 4 --arrival-rate 100 \
+        --chunk-iters 2 --loose-tau-frac 0.5 --loose-tau 1e-2 \
+        --quality-steps 3 --fuse-round --backend-tune
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python tools/stepwise_guard.py --phase fused
+python - <<'PYEOF'
+import json
+
+data = json.load(open("BENCH_serving.json"))
+fr = data["fused_round"]
+assert fr["bitwise_equal_fused_vs_staged"], fr
+assert fr["update_launch_reduction"] >= 2, fr
+assert fr["stepwise_traces_equal"], fr
+assert fr["polls_per_round_equal"], fr
+print(f"BENCH_serving.json fused_round section OK: "
+      f"{fr['update_launch_reduction']:.1f}x fewer update launches/round "
+      f"({fr['staged']['update_launches_per_round']:.1f} -> "
+      f"{fr['fused']['update_launches_per_round']:.1f}), bitwise-equal, "
+      f"protocol unchanged")
 PYEOF

@@ -33,6 +33,15 @@ fetch), and the traced drain must leave every ticket a complete
 submit -> resolve span chain plus a non-empty residual-vs-round curve,
 exported as strict Perfetto-loadable JSON.
 
+``--phase fused`` guards the fused Anderson round (PR 9): the SAME drain
+with ``fuse_round=True`` (one ``ops.taa_round`` dispatch per iteration)
+and staged (gram -> solve -> apply) must produce bitwise-identical
+results with IDENTICAL protocol counters (still 5 stepwise traces, one
+blocking poll per key per round, same fetched bytes/gathers) while the
+fused drain's modeled ``update_launches`` per round come in at least 2x
+LOWER than staged — the launch-overhead win the CI box asserts instead
+of noisy wall-clock.
+
 Run from the repo root:  PYTHONPATH=src python tools/stepwise_guard.py
 Time phase:  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src python tools/stepwise_guard.py --phase time
@@ -55,10 +64,11 @@ from helpers import make_label_denoiser  # noqa: E402 — the tests' oracle
 D, N_LABELS, T = 16, 4, 10
 
 
-def make_registry(placement=None):
+def make_registry(placement=None, spec_overrides=None):
     eps_apply = make_label_denoiser(dim=D, n_labels=N_LABELS)
     return EngineRegistry(lambda k: SamplingEngine(
-        eps_apply, None, ddim_coeffs(k.T), get_sampler(k.solver),
+        eps_apply, None, ddim_coeffs(k.T),
+        get_sampler(k.solver, **(spec_overrides or {})),
         sample_shape=(D,), placement=placement))
 
 
@@ -312,17 +322,103 @@ def phase_obs() -> int:
     return 0
 
 
+def phase_fused() -> int:
+    """Staged vs fuse_round=True drain over the same request population:
+    the fused round must be bitwise-identical with identical protocol
+    counters while cutting the modeled update launches per round >= 2x."""
+    import numpy as np
+
+    key = EngineKey("oracle", T, "taa")
+
+    def make_requests():
+        # staggered budgets: several harvest+refill rounds, mixed early exits
+        return [SampleRequest(label=i % N_LABELS, seed=110 + i,
+                              **({} if i % 3 == 0
+                                 else dict(tau=1e-2, quality_steps=1 + i % 4)))
+                for i in range(10)]
+
+    def drain(spec_overrides):
+        registry = make_registry(spec_overrides=spec_overrides)
+        queue = RequestQueue()
+        loop = ServingLoop(registry, queue,
+                           Batcher(BatchingPolicy(max_batch=4)),
+                           chunk_iters=2)
+        tickets = [queue.submit(r, key) for r in make_requests()]
+        engine = registry.get(key)
+        rounds = drain_with_poll_accounting(loop, queue, engine, "fused")
+        if rounds < 0:
+            return None
+        if not check_traces(engine, "fused"):
+            return None
+        report = loop.bank_reports()[key]
+        report["stepwise_traces"] = engine.stats["stepwise_traces"]
+        return dict(results=[t.result() for t in tickets],
+                    report=report, rounds=rounds)
+
+    staged = drain(None)
+    if staged is None:
+        return 1
+    fused = drain(dict(fuse_round=True))
+    if fused is None:
+        return 1
+
+    # 1. bitwise-identical solves: the fused round composes the exact same
+    #    primitives on the CPU default routing
+    for i, (a, b) in enumerate(zip(staged["results"], fused["results"])):
+        if np.asarray(a.x0).tobytes() != np.asarray(b.x0).tobytes():
+            print(f"FAIL[fused]: request {i} x0 differs between fused and "
+                  f"staged drains")
+            return 1
+        if (a.iters, a.nfe, a.early_stopped) != \
+                (b.iters, b.nfe, b.early_stopped):
+            print(f"FAIL[fused]: request {i} iters/nfe/early_stopped differ "
+                  f"between fused and staged drains")
+            return 1
+
+    # 2. identical protocol counters: fusing the update stage must not
+    #    change what crosses the host<->device boundary
+    for field in ("blocking_polls", "host_fetch_bytes", "gather_launches",
+                  "stepwise_traces"):
+        if staged["report"][field] != fused["report"][field]:
+            print(f"FAIL[fused]: {field} changed under fuse_round "
+                  f"({staged['report'][field]} -> {fused['report'][field]})")
+            return 1
+
+    # 3. the launch win: strictly fewer update launches, >= 2x per round
+    s_l, f_l = staged["report"]["update_launches"], \
+        fused["report"]["update_launches"]
+    if not f_l < s_l:
+        print(f"FAIL[fused]: update_launches not reduced "
+              f"({s_l} staged vs {f_l} fused)")
+        return 1
+    s_rate = s_l / staged["rounds"]
+    f_rate = f_l / fused["rounds"]
+    if s_rate < 2 * f_rate:
+        print(f"FAIL[fused]: update launches/round only "
+              f"{s_rate:.1f} -> {f_rate:.1f} (< 2x reduction)")
+        return 1
+
+    print(f"OK[fused]: {fused['report']['completed']} served "
+          f"bitwise-identical to staged, stepwise_traces=5, "
+          f"{fused['report']['blocking_polls']} blocking polls / "
+          f"{fused['report']['host_fetch_bytes']} B fetched unchanged, "
+          f"update launches/round {s_rate:.1f} -> {f_rate:.1f} "
+          f"({s_l} -> {f_l} total, {s_rate / f_rate:.1f}x)")
+    return 0
+
+
 def main() -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--phase", default="all",
-                   choices=("all", "earlyexit", "refine", "time", "obs"),
+                   choices=("all", "earlyexit", "refine", "time", "obs",
+                            "fused"),
                    help="all (default: earlyexit + refine + obs), or one "
                         "phase; `time` needs 8 devices (forced host "
                         "devices on CPU) and drains under the debug-time "
                         "mesh")
     args = p.parse_args()
     phases = {"earlyexit": phase_earlyexit, "refine": phase_refine,
-              "time": phase_time, "obs": phase_obs}
+              "time": phase_time, "obs": phase_obs, "fused": phase_fused}
     run = ("earlyexit", "refine", "obs") if args.phase == "all" \
         else (args.phase,)
     for name in run:
