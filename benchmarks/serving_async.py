@@ -78,6 +78,19 @@ DiT, placement from ``REPRO_BENCH_MESH`` like ``serving_throughput``):
     the host protocol is untouched (still 5 stepwise traces, equal
     blocking polls per round).
 
+  * ``elastic``      — fault tolerance priced (PR 10): the SAME staggered
+    stepwise population drained twice on the 8-device debug mesh — once
+    uninterrupted, once under a ``FaultInjector`` that kills 4 of the 8
+    devices mid-solve, forcing the ``ResilientServingLoop`` to fetch every
+    live bank to host, rebuild the engine on the surviving 4-device
+    sub-mesh (``plan_elastic``), re-place the exact state bytes, and
+    resume.  Records the recovery's extra device-NFE per request (the
+    MODELED in-flight chunk a real loss discards, plus any true re-work),
+    rebuild wall time, SLO attainment with vs without chaos (SLO = 2x the
+    uninterrupted p95), that 100% of tickets resolve, and that the
+    resumed solves are BITWISE-identical to the uninterrupted drain.
+    Needs 8 devices; records a ``skipped`` marker otherwise.
+
   * ``observability`` — the cost of watching: the SAME staggered stepwise
     population drained untraced (the default off bundle) and traced
     (``repro.obs.Observability.enabled()`` — span tracing + per-lane
@@ -327,6 +340,117 @@ def _fused_round(T, n_requests, max_batch):
         f"stepwise_traces={fused['stepwise_traces']};"
         f"polls/round={fused['blocking_polls_per_round']:.2f} vs "
         f"{staged['blocking_polls_per_round']:.2f}")]
+
+
+def _elastic(T, n_requests, max_batch):
+    """``elastic`` section: the same population drained uninterrupted vs
+    under injected device loss (4 of 8 killed mid-solve, engine rebuilt on
+    the survivors) — prices the recovery in NFE, wall time, and SLO."""
+    if jax.device_count() < 8:
+        common.write_bench_json("elastic", dict(
+            skipped=True, devices=jax.device_count(),
+            reason="needs 8 devices: rerun under "
+                   "XLA_FLAGS=--xla_force_host_platform_device_count=8"))
+        return []
+    from repro.launch.mesh import make_mesh
+    from repro.sampling import Placement
+    from repro.serving import FaultInjector, ResilientServingLoop
+
+    chunk_iters = 2
+    chaos_round, chaos_drop = 3, 4
+    key = EngineKey("dit-xl", T, "taa")
+    requests = [SampleRequest(label=i % 10, seed=6100 + i,
+                              **({} if i % 3 == 0
+                                 else dict(tau=1e-2,
+                                           quality_steps=2 + i % 4)))
+                for i in range(n_requests)]
+    plc8 = Placement.for_mesh(make_mesh(
+        "debug", data_parallel=4, model_parallel=2,
+        devices=jax.devices()[:8]))
+
+    def factory(k, plc):
+        return common.serving_engine(common.scenario("ddim", k.T),
+                                     placement=plc)
+
+    def drain(injector):
+        registry = EngineRegistry(lambda k: factory(k, plc8))
+        batcher = Batcher(BatchingPolicy(max_batch=max_batch))
+        queue = RequestQueue()
+        if injector is None:
+            loop = ServingLoop(registry, queue, batcher,
+                               chunk_iters=chunk_iters)
+        else:
+            loop = ResilientServingLoop(
+                registry, queue, batcher, engine_factory=factory,
+                placement=plc8, injector=injector, chunk_iters=chunk_iters)
+        t0 = time.perf_counter()
+        tickets = [queue.submit(r, key) for r in requests]
+        loop.drain()
+        wall = time.perf_counter() - t0
+        results = [t.result() for t in tickets]
+        report = loop.bank_reports()[key]
+        return dict(
+            loop=loop, registry=registry, wall=wall,
+            reqps=n_requests / wall,
+            latencies=[t.latency_s for t in tickets],
+            resolved=sum(t.done() for t in tickets),
+            device_nfe=report["device_nfe"],
+            x0s=[np.asarray(r.x0) for r in results])
+
+    base = drain(None)
+    chaos = drain(FaultInjector({chaos_round: chaos_drop}))
+
+    base_p50, base_p95 = _percentiles(base["latencies"])
+    chaos_p50, chaos_p95 = _percentiles(chaos["latencies"])
+    # SLO: twice the uninterrupted p95 — the bar recovery must clear
+    slo_s = 2.0 * base_p95
+    base_slo = float(np.mean(np.asarray(base["latencies"]) <= slo_s))
+    chaos_slo = float(np.mean(np.asarray(chaos["latencies"]) <= slo_s))
+    bitwise = all(a.tobytes() == b.tobytes()
+                  for a, b in zip(chaos["x0s"], base["x0s"]))
+    all_resolved = (base["resolved"] == n_requests
+                    and chaos["resolved"] == n_requests)
+    res = dict(chaos["loop"].resilience)
+    devices_after = chaos["registry"].get(key).placement.num_devices
+    extra_nfe_req = (chaos["device_nfe"] - base["device_nfe"]) / n_requests
+
+    common.write_bench_json("elastic", dict(
+        T=T, n_requests=n_requests, chunk_iters=chunk_iters,
+        chaos_round=chaos_round, chaos_drop=chaos_drop,
+        slo_s=slo_s,
+        baseline=dict(
+            reqps=base["reqps"], p50_s=base_p50, p95_s=base_p95,
+            slo_attainment=base_slo, devices=plc8.num_devices,
+            device_nfe_per_request=base["device_nfe"] / n_requests),
+        chaos=dict(
+            reqps=chaos["reqps"], p50_s=chaos_p50, p95_s=chaos_p95,
+            slo_attainment=chaos_slo, devices_after=devices_after,
+            device_nfe_per_request=chaos["device_nfe"] / n_requests,
+            device_losses=res["device_losses"],
+            rebuilds=res["rebuilds"],
+            rebuild_wall_s=res["rebuild_wall_s"],
+            recovered_lanes=res["recovered_lanes"],
+            recovery_nfe=res["recovery_nfe"],
+            recovery_nfe_per_request=res["recovery_nfe"] / n_requests,
+            resubmitted_lanes=res["resubmitted_lanes"],
+            draft_fallbacks=res["draft_fallbacks"],
+            retries=res["retries"]),
+        recovery_extra_device_nfe_per_request=extra_nfe_req,
+        all_resolved=bool(all_resolved),
+        bitwise_equal_chaos_vs_baseline=bool(bitwise)))
+    return [(
+        f"serve_async/ddim{T}/elastic_k{chunk_iters}/"
+        f"drop{chaos_drop}at{chaos_round}",
+        1e6 / chaos["reqps"],
+        f"resolved={chaos['resolved']}/{n_requests};"
+        f"losses={res['device_losses']};rebuilds={res['rebuilds']} "
+        f"({res['rebuild_wall_s']:.2f}s);"
+        f"recovered_lanes={res['recovered_lanes']};"
+        f"recovery_nfe/req={res['recovery_nfe'] / n_requests:.1f};"
+        f"devices=8->{devices_after};"
+        f"reqps={chaos['reqps']:.2f} vs uninterrupted {base['reqps']:.2f};"
+        f"slo_attainment={chaos_slo:.2f} vs {base_slo:.2f};"
+        f"bitwise_equal={bitwise}")]
 
 
 def run(T: int = 25, n_requests: int = 24, max_batch: int = 8):
@@ -826,4 +950,5 @@ def run(T: int = 25, n_requests: int = 24, max_batch: int = 8):
         trace_events_dropped=tracer_bundle.tracer.dropped))
     rows += _fused_round(T, n_requests, max_batch)
     rows += _time_shard(T, n_requests, max_batch)
+    rows += _elastic(T, n_requests, max_batch)
     return rows

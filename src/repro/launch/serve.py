@@ -120,8 +120,8 @@ from repro.runtime import StragglerMitigator
 from repro.sampling import (Placement, SampleRequest, SamplingEngine,
                             get_sampler)
 from repro.serving import (Batcher, BatchingPolicy, EngineKey, EngineRegistry,
-                           RefinePlanner, RefinePolicy, RequestQueue,
-                           ServingLoop)
+                           FaultInjector, RefinePlanner, RefinePolicy,
+                           RequestQueue, ResilientServingLoop, ServingLoop)
 
 
 def make_eps_apply(cfg):
@@ -262,10 +262,30 @@ def serve_async(args, cfg, params, placement: Placement):
         validate=registry.validate_submit if args.cache else None,
         warm_start=registry.warm_start_for if args.cache else None,
         obs=obs)
-    loop = ServingLoop(registry, queue, Batcher(policy, metrics=obs.metrics),
-                       depth=args.async_depth,
-                       chunk_iters=args.chunk_iters,
-                       refiner=refiner, cache=args.cache, obs=obs)
+    if args.chaos_drop:
+        if not args.chunk_iters:
+            raise SystemExit("--chaos-drop requires --chunk-iters > 0 "
+                             "(recovery splices fetched LaneBank state "
+                             "back into live stepwise banks)")
+        # elastic fault-tolerant variant: the supervisor drops
+        # --chaos-drop devices at round --chaos-round, rebuilds every
+        # engine on the surviving sub-mesh, and resumes mid-solve — the
+        # per-placement factory is how it constructs replacement engines
+        def elastic_factory(key: EngineKey, plc: Placement):
+            return make_engine(params, cfg, resolve_coeffs(args, key.T),
+                               resolve_spec(args, key.solver), placement=plc)
+        loop = ResilientServingLoop(
+            registry, queue, Batcher(policy, metrics=obs.metrics),
+            engine_factory=elastic_factory, placement=placement,
+            injector=FaultInjector({args.chaos_round: args.chaos_drop}),
+            depth=args.async_depth, chunk_iters=args.chunk_iters,
+            refiner=refiner, cache=args.cache, obs=obs)
+    else:
+        loop = ServingLoop(registry, queue,
+                           Batcher(policy, metrics=obs.metrics),
+                           depth=args.async_depth,
+                           chunk_iters=args.chunk_iters,
+                           refiner=refiner, cache=args.cache, obs=obs)
     for key in keys:  # compile ahead of traffic so p95 is not a jit compile
         engine = registry.get(key)
         registry.warmup(key, slots=loop.batcher.slots_for(engine),
@@ -334,6 +354,21 @@ def serve_async(args, cfg, params, placement: Placement):
           f"p95 {np.percentile(latencies, 95):.2f}s; "
           f"mean NFE/request {np.mean([r.nfe for r in results]):.0f}; "
           f"{n_early} early-exit(s); loop stats {loop.stats}")
+    if args.chaos_drop:
+        res = loop.resilience
+        unresolved = [t for t in tickets if not t.done()]
+        assert not unresolved, \
+            f"{len(unresolved)} ticket(s) unresolved after chaos drain"
+        survivors = len(loop._survivors())
+        print(f"chaos: lost {res['device_losses']} device(s) at round "
+              f"{args.chaos_round}, {res['rebuilds']} rebuild(s) onto "
+              f"{survivors} survivor(s) in {res['rebuild_wall_s']:.2f}s; "
+              f"{res['recovered_lanes']} lane(s) recovered mid-solve "
+              f"(+{res['recovery_nfe']} recovery NFE), "
+              f"{res['resubmitted_lanes']} resubmitted, "
+              f"{res['draft_fallbacks']} draft fallback(s), "
+              f"{res['retries']} in-place retries — "
+              f"{len(tickets)}/{len(tickets)} tickets resolved")
     if args.refine:
         two_tier = [t for t in tickets if t.refines]
         unresolved = [t for t in tickets
@@ -470,6 +505,15 @@ def main(argv=None):
                         "record converged results, auto-populate "
                         "SampleRequest.init at submit time (with "
                         "submit-time warm-start validation)")
+    p.add_argument("--chaos-drop", type=int, default=0,
+                   help="chaos test (requires --chunk-iters): drop this "
+                        "many devices from the serving mesh mid-drain and "
+                        "let the elastic supervisor rebuild the engines on "
+                        "the survivors — every ticket still resolves, "
+                        "resumed solves are bitwise-identical "
+                        "(0 = no fault injection)")
+    p.add_argument("--chaos-round", type=int, default=3,
+                   help="supervision round at which --chaos-drop fires")
     p.add_argument("--trace-out", default=None, metavar="PATH",
                    help="write a Chrome-trace JSON (Perfetto/about:tracing "
                         "loadable) of the --serve-async drain: per-ticket "

@@ -1,9 +1,9 @@
 from repro.runtime.fault_tolerance import (
     HeartbeatMonitor, RestartPolicy, StragglerMitigator, run_supervised,
 )
-from repro.runtime.elastic import ElasticMeshPlan
+from repro.runtime.elastic import ElasticMeshPlan, plan_elastic
 
 __all__ = [
     "HeartbeatMonitor", "RestartPolicy", "StragglerMitigator",
-    "run_supervised", "ElasticMeshPlan",
+    "run_supervised", "ElasticMeshPlan", "plan_elastic",
 ]

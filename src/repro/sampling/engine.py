@@ -125,6 +125,41 @@ class LaneBank:
         return sum(r is not None for r in self.requests)
 
 
+@dataclasses.dataclass
+class BankSnapshot:
+    """A host-resident, placement-free copy of a live :class:`LaneBank`.
+
+    The elastic-recovery unit: ``SamplingEngine.fetch_bank`` pulls every
+    state leaf off the (possibly dying) mesh as plain numpy, and
+    ``adopt_bank`` on a DIFFERENT engine — typically one built on the
+    surviving sub-mesh — re-places the exact bytes and resumes the solve
+    mid-chunk.  Because ``step_chunk`` is a guarded scan whose per-lane
+    math is independent of the data-axis partitioning (PR 7's bitwise
+    sharded==unsharded invariant), a snapshot/adopt round-trip changes
+    nothing about the trajectory: the resumed lanes are bitwise-identical
+    to an uninterrupted run.
+
+    ``counters`` carries the bank-lifetime work accounting (device/useful
+    iters, harvests, fetch bytes, ...) across the migration so a rebuilt
+    bank's ``stepwise_report`` still describes the whole solve, not just
+    the post-recovery tail.
+    """
+    state: Any                              # numpy SolverState pytree
+    labels: Any                             # (slots,) numpy int32
+    requests: List[Optional[SampleRequest]]
+    slots: int
+    chunk_iters: int
+    counters: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def occupied(self) -> int:
+        return sum(r is not None for r in self.requests)
+
+    def nbytes(self) -> int:
+        leaves = jax.tree.leaves(self.state)
+        return int(sum(a.nbytes for a in leaves) + self.labels.nbytes)
+
+
 class SamplingEngine:
     """Batched sampling executor for one (denoiser, T, solver) configuration.
 
@@ -942,6 +977,68 @@ class SamplingEngine:
             model_shards=self.placement.model_shards,
             time_shards=self.placement.time_shards,
             **self._work_report(useful, bank.device_iters, bank.slots))
+
+    # -- elastic migration ---------------------------------------------------
+
+    #: LaneBank counters a snapshot carries across an engine rebuild, so a
+    #: migrated bank's report still covers its whole life.
+    _CARRIED_COUNTERS = ("device_iters", "useful_iters", "harvested_nfe",
+                         "completed", "refills", "pack_s",
+                         "host_fetch_bytes", "blocking_polls",
+                         "gather_launches", "harvests", "update_launches")
+
+    def fetch_bank(self, bank: LaneBank) -> BankSnapshot:
+        """Pull a live bank's entire solver state to the host as a
+        placement-free :class:`BankSnapshot` (the elastic-recovery fetch).
+        One blocking device->host transfer of the full state pytree —
+        deliberately NOT the piggybacked summary path: recovery needs the
+        exact trajectory bytes, and it runs once per device-loss event,
+        not once per round.  Counted against this bank's fetch accounting
+        (``host_fetch_bytes`` + 1 blocking poll) so recovery cost is
+        visible in the same ledger as the steady-state protocol."""
+        with self._tracer.span("stepwise.fetch_bank", tid=self.name,
+                               slots=bank.slots, occupied=bank.occupied):
+            state, labels = jax.device_get((bank.state, bank.labels))
+        state = jax.tree.map(np.asarray, state)
+        labels = np.asarray(labels)
+        counters = {k: getattr(bank, k) for k in self._CARRIED_COUNTERS}
+        snap = BankSnapshot(state=state, labels=labels,
+                            requests=list(bank.requests), slots=bank.slots,
+                            chunk_iters=bank.chunk_iters, counters=counters)
+        self._count_fetch(bank, snap.nbytes(), polls=1)
+        snap.counters["host_fetch_bytes"] = bank.host_fetch_bytes
+        snap.counters["blocking_polls"] = bank.blocking_polls
+        return snap
+
+    def adopt_bank(self, snapshot: BankSnapshot, *,
+                   chunk_iters: Optional[int] = None) -> LaneBank:
+        """Re-place a :class:`BankSnapshot` onto THIS engine's placement
+        and return a live :class:`LaneBank` that resumes the solve exactly
+        where ``fetch_bank`` froze it.  No program launch: each state leaf
+        is ``device_put`` onto the batch sharding (matching the in-program
+        batch-only constraint the step program applies), so the next
+        ``stepwise_step`` continues the guarded scan on the new mesh with
+        bitwise-identical per-lane math.  ``summary``/``poll_cache`` start
+        empty — the first post-adopt poll takes the documented fallback
+        path (still exactly one blocking poll for that round)."""
+        B = snapshot.slots
+        if self.placement.round_batch(B) != B:
+            raise ValueError(
+                f"snapshot slots={B} do not divide the adopting engine's "
+                f"data shards ({self.placement.data_shards}); rebuild with "
+                f"a compatible data-parallel degree")
+        with self._tracer.span("stepwise.adopt_bank", tid=self.name,
+                               slots=B, occupied=snapshot.occupied):
+            def place(leaf):
+                (out,) = self.placement.place_batch(jnp.asarray(leaf))
+                return out
+            state = jax.tree.map(place, snapshot.state)
+            labels = place(snapshot.labels)
+        bank = LaneBank(state=state, labels=labels,
+                        requests=list(snapshot.requests), slots=B,
+                        chunk_iters=int(chunk_iters or snapshot.chunk_iters),
+                        **snapshot.counters)
+        return bank
 
     def reset_stats(self) -> None:
         """Rewind the serving counters and dispatch reports — e.g. after a

@@ -79,6 +79,13 @@ class SampleRequest:
     tau: Optional[float] = None
     max_iters: Optional[int] = None
     quality_steps: Optional[int] = None
+    #: serving metadata like the three above (the engine ignores it): when
+    #: set, the queue's expiry sweep fails the ticket with ``TimeoutError``
+    #: once ``timeout_s`` seconds pass after ``arrival_time`` without the
+    #: request being admitted — a bounded wait instead of a hung
+    #: ``result()``.  ``dataclasses.replace``-based continuations (refine,
+    #: preemption resubmits) inherit it automatically.
+    timeout_s: Optional[float] = None
 
     @property
     def has_solver_overrides(self) -> bool:

@@ -47,26 +47,42 @@ protocol-neutral (same 5 stepwise programs, same one blocking poll per
 live key per round, bitwise-identical solves; ``tools/stepwise_guard.py
 --phase obs`` enforces it).
 
+  * :class:`ResilientServingLoop` (``repro.serving.resilience``) —
+    elastic fault tolerance around the stepwise loop: heartbeat beats and
+    straggler deadlines per round, and on (injected) device loss an
+    engine REBUILD — every live ``LaneBank`` fetched to host, a fresh
+    engine constructed on the surviving sub-mesh via ``plan_elastic``,
+    the exact state bytes re-placed, and the solve resumed mid-chunk
+    bitwise-identically.  No submitted :class:`Ticket` is ever dropped:
+    unmigratable banks resubmit their tickets, and under repeated loss
+    lanes degrade to the draft tier instead of erroring.
+
 Results are bitwise-identical to ``engine.run_batch`` over the same
 requests at the same slot geometry — batching is a scheduling concern, not
 a numerics one (iteration-level refill included: a lane's state evolves
 exactly as if it ran alone).  See ``launch/serve.py --serve-async`` for
-the live driver and ``benchmarks/serving_async.py`` for throughput /
-latency / NFE-per-request measurements against the blocking loop.
+the live driver (``--chaos-drop``/``--chaos-round`` for the fault-injected
+variant) and ``benchmarks/serving_async.py`` for throughput / latency /
+NFE-per-request measurements against the blocking loop.
 """
 from repro.obs import Observability
 from repro.serving.batcher import Batcher, BatchingPolicy, Dispatch
 from repro.serving.cache import TrajectoryCache
-from repro.serving.loop import ServingLoop
+from repro.serving.loop import ServingLoop, ShutdownError
 from repro.serving.queue import EngineKey, RequestQueue, Ticket
 from repro.serving.refine import RefinePlanner, RefinePolicy
 from repro.serving.registry import EngineRegistry
+from repro.serving.resilience import (DeviceLossError, FaultInjector,
+                                      ResilientServingLoop,
+                                      duplicate_window_eval)
 
 __all__ = [
     "Batcher", "BatchingPolicy", "Dispatch",
-    "ServingLoop",
+    "ServingLoop", "ShutdownError",
     "EngineKey", "RequestQueue", "Ticket",
     "EngineRegistry", "TrajectoryCache",
     "RefinePlanner", "RefinePolicy",
+    "DeviceLossError", "FaultInjector", "ResilientServingLoop",
+    "duplicate_window_eval",
     "Observability",
 ]

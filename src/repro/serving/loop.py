@@ -31,6 +31,13 @@ from repro.serving.queue import RequestQueue
 from repro.serving.registry import EngineRegistry
 
 
+class ShutdownError(RuntimeError):
+    """The serving loop was stopped (``stop(drain=False)``) while tickets
+    were still open: every stranded ticket fails with this instead of
+    hanging its ``result()`` forever.  A draft stage that already resolved
+    stays deliverable (``Ticket.fail`` keeps ``_draft``)."""
+
+
 class ServingLoop:
     """Continuous-batching executor over an :class:`EngineRegistry`.
 
@@ -170,6 +177,7 @@ class ServingLoop:
         ``depth``; stepwise mode harvests/refills/advances the live banks.
         """
         self._assert_not_threaded()
+        self._sweep_timeouts()
         if self.chunk_iters:
             return self._pump_stepwise(flush=flush)
         plans = self.batcher.plan(
@@ -185,6 +193,24 @@ class ServingLoop:
             self._dispatch(plan)
             dispatched += len(plan.tickets)
         return dispatched
+
+    def _sweep_timeouts(self) -> None:
+        """Expire queued tickets whose ``SampleRequest.timeout_s`` elapsed
+        before admission: each fails through the standard funnel (span
+        closed, counted) with a ``TimeoutError``.  Runs at the top of every
+        pump round, so an expired refine continuation is cancelled here too
+        — its already-resolved draft stays deliverable."""
+        sweep = getattr(self.queue, "sweep_expired", None)
+        if sweep is None:
+            return
+        for ticket in sweep():
+            waited = None
+            if ticket.request.arrival_time is not None:
+                waited = self.queue.clock() - ticket.request.arrival_time
+            self._fail_ticket(ticket, TimeoutError(
+                f"request {ticket.key.describe()}#{ticket.seqno} expired "
+                f"in queue after {waited if waited is not None else '?'}s "
+                f"(timeout_s={ticket.request.timeout_s})"))
 
     def drain(self) -> None:
         """Dispatch everything queued and collect every in-flight batch."""
@@ -504,14 +530,42 @@ class ServingLoop:
 
     def stop(self, *, drain: bool = True) -> None:
         """Stop the background thread; by default drain what remains (on the
-        caller's thread, after the worker has exited)."""
+        caller's thread, after the worker has exited).
+
+        EVERY open ticket resolves or fails by the time this returns:
+        ``drain=True`` runs the remaining rounds (a drain failure aborts
+        the loop — nothing is left hanging — then re-raises);
+        ``drain=False`` fails whatever is still open (queued tickets,
+        live lanes, in-flight batches — including two-tier tickets whose
+        draft resolved but whose refine continuation is still pending)
+        with :class:`ShutdownError` instead of stranding their
+        ``result()`` callers."""
         if self._thread is None:
             return
         self._stop_event.set()
         self._thread.join()
         self._thread = None
+        if self.error is not None:
+            return                  # worker aborted: everything failed already
         if drain:
-            self.drain()
+            try:
+                self.drain()
+            except BaseException:
+                if self.error is None:
+                    # drain aborts the loop on a worker-style failure path
+                    # only when pump() raised outside a per-bank handler;
+                    # make sure nothing stays open either way
+                    self._abort(ShutdownError(
+                        "serving loop drain failed during stop()"))
+                raise
+            return
+        if self._inflight or self._occupied_lanes() or len(self.queue) \
+                or any(t is not None
+                       for lanes in self._lane_tickets.values()
+                       for t in lanes):
+            self._abort(ShutdownError(
+                "serving loop stopped (drain=False) before completing "
+                "open tickets"))
 
     def __enter__(self) -> "ServingLoop":
         return self.start()

@@ -314,6 +314,36 @@ class RequestQueue:
                 self._buckets.pop(key, None)
         return taken
 
+    def sweep_expired(self, now: Optional[float] = None) -> List[Ticket]:
+        """Pop every QUEUED ticket whose request carries a ``timeout_s``
+        that has elapsed (queue clock) and return them — without failing
+        them: the caller (``ServingLoop.pump``) funnels each through its
+        ``_fail_ticket`` path with a ``TimeoutError`` so spans close and
+        loop counters stay coherent.  Tickets already admitted to a lane
+        are not the queue's to expire; once dispatched, a request runs to
+        completion (its ticket resolves normally) or fails with its bank."""
+        if now is None:
+            now = self.clock()
+        expired: List[Ticket] = []
+        with self._lock:
+            for key in list(self._buckets):
+                bucket = self._buckets[key]
+                keep = []
+                for t in bucket:
+                    r = t.request
+                    if (r.timeout_s is not None
+                            and r.arrival_time is not None
+                            and now - r.arrival_time > r.timeout_s):
+                        expired.append(t)
+                    else:
+                        keep.append(t)
+                if len(keep) != len(bucket):
+                    if keep:
+                        self._buckets[key] = keep
+                    else:
+                        del self._buckets[key]
+        return expired
+
     def pending(self, key: EngineKey) -> int:
         with self._lock:
             return len(self._buckets.get(key, ()))

@@ -73,6 +73,26 @@ class EngineRegistry:
         with self._lock:
             return dict(self._engines)
 
+    def replace(self, key: EngineKey, engine: SamplingEngine) -> None:
+        """Swap in a replacement engine for ``key`` — the elastic-recovery
+        path: after device loss, the supervisor builds a fresh engine on
+        the surviving sub-mesh and installs it here so every later
+        ``get(key)`` routes to it.  The replacement joins the shared
+        observability bundle like a factory-built engine would."""
+        with self._lock:
+            self._engines[key] = engine
+            obs = self._obs
+        if obs is not None:
+            engine.bind_obs(obs, name=key.describe())
+
+    def set_factory(self,
+                    factory: Callable[[EngineKey], SamplingEngine]) -> None:
+        """Replace the construction callback for keys not yet built — after
+        an elastic rebuild, NEW keys must come up on the surviving sub-mesh,
+        not on the placement the old factory closed over."""
+        with self._lock:
+            self._factory = factory
+
     def cache(self, key: EngineKey) -> TrajectoryCache:
         """``key``'s trajectory cache (lazy, one per key like its engine)."""
         with self._lock:

@@ -1,0 +1,439 @@
+"""Elastic fault-tolerant serving: the supervision layer around
+:class:`~repro.serving.ServingLoop`.
+
+ParaTAA trades extra devices for latency, so one request's solve spans
+MORE hardware than a sequential sampler's would — and inherits a
+proportionally larger exposure to device loss and stragglers.  This
+module makes the serving stack survive mesh shrinkage mid-solve without
+dropping a single :class:`~repro.serving.Ticket`:
+
+  * :class:`FaultInjector` — deterministic, injectable device loss for
+    the 8-forced-device debug mesh (chaos tests / ``serve.py --chaos-*``):
+    at a chosen supervision round it removes devices from the pool and
+    every subsequent step on them raises :class:`DeviceLossError`.
+  * :class:`ResilientServingLoop` — a :class:`ServingLoop` subclass that
+    wraps every stepwise round with the :mod:`repro.runtime` control
+    plane: a :class:`~repro.runtime.HeartbeatMonitor` beat per live key
+    per round, :class:`~repro.runtime.StragglerMitigator` round-latency
+    tracking, and :class:`~repro.runtime.RestartPolicy` supervision of
+    bank failures (exponential backoff between in-place retries, then
+    elastic downsize, then abort).
+  * On device loss it executes an ENGINE REBUILD: every live
+    :class:`~repro.sampling.engine.LaneBank`'s solver state is fetched to
+    the host (``SamplingEngine.fetch_bank``), the surviving sub-mesh is
+    computed via :func:`~repro.runtime.plan_elastic`, a fresh engine is
+    constructed on it, and the exact state bytes are re-placed
+    (``adopt_bank``) so the solve resumes mid-chunk — bitwise-identical
+    to an uninterrupted run, because the guarded chunk's per-lane math is
+    independent of the data-axis partitioning (PR 7's invariant).
+  * Under repeated loss past ``min_full_quality_devices`` it DEGRADES
+    instead of erroring: live lanes fall back to the PR 6 draft tier
+    (``quality_steps`` early exit) warm-started from their fetched
+    trajectory, so clients still get a usable iterate.
+  * :func:`duplicate_window_eval` — straggler mitigation for ``*-time``
+    meshes: the slowest timestep-shard's eval is duplicated on spare
+    capacity and the first finisher wins; both compute identical values,
+    so the race is deterministic in value (the sketch in
+    ``runtime/fault_tolerance.py``).
+
+Recovery cost is visible, not hidden: the ``resilience`` counters
+(``device_losses``, ``rebuilds``, ``recovered_lanes``, ``recovery_nfe``,
+``straggler_duplications``, ``draft_fallbacks``, ``retries``,
+``rebuild_wall_s``) mirror into the loop's :mod:`repro.obs` registry and
+feed ``BENCH_serving.json``'s ``elastic`` section.  ``recovery_nfe`` is
+MODELED work (like the engine's ``update_launches``): the in-flight
+chunk a real loss would discard re-runs on the new mesh, costing
+``occupied x chunk_iters x window`` eps evaluations per rebuilt bank —
+the CI box measures protocol counts, not wall-clock (ROADMAP note).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.mesh import MeshSpec
+from repro.obs import StatsView
+from repro.runtime import (HeartbeatMonitor, RestartPolicy,
+                           StragglerMitigator, plan_elastic)
+from repro.sampling.placement import Placement
+from repro.sampling.types import WarmStart
+from repro.serving.loop import ServingLoop
+
+__all__ = ["DeviceLossError", "FaultInjector", "ResilientServingLoop",
+           "duplicate_window_eval"]
+
+
+class DeviceLossError(RuntimeError):
+    """A device in the serving mesh was lost (simulated by
+    :class:`FaultInjector` on the debug mesh; a real deployment maps
+    XLA's dead-device errors here)."""
+
+
+class FaultInjector:
+    """Deterministic device-loss schedule for chaos tests.
+
+    drop_at: ``{round: count}`` — at supervision round ``round`` (the
+             injector's own tick counter, one tick per pump round),
+             ``count`` devices are dropped from the END of the current
+             pool (the tail holds the highest device ids, so the
+             survivors stay a contiguous prefix — reshapeable into any
+             sub-mesh).  At least one device always survives.
+    """
+
+    def __init__(self, drop_at: Dict[int, int]):
+        self.drop_at = dict(drop_at)
+        self.round = 0
+        self.lost: List = []
+
+    def tick(self, devices: Sequence) -> List:
+        """Advance one supervision round; returns the devices newly lost
+        THIS round (empty most rounds)."""
+        count = self.drop_at.get(self.round, 0)
+        self.round += 1
+        if not count:
+            return []
+        alive = [d for d in devices if d not in self.lost]
+        count = min(count, max(len(alive) - 1, 0))
+        newly = alive[len(alive) - count:] if count else []
+        self.lost.extend(newly)
+        return newly
+
+    def surviving(self, devices: Sequence) -> List:
+        return [d for d in devices if d not in self.lost]
+
+
+def duplicate_window_eval(engine, bank, shard: int, *, device=None):
+    """Straggler mitigation for ``*-time`` meshes: re-run the slowest
+    timestep-shard's residual-summary eval on spare capacity and let the
+    first finisher win.
+
+    The duplicated computation is the shard's slice of the per-lane
+    residual reduction (rows ``[shard*T/S, (shard+1)*T/S)`` of
+    ``R_prev``) — the same transfer + reduce + race pattern a full
+    window-eval duplicate exercises, at chaos-test cost.  Primary and
+    duplicate are the SAME pure function of the same bytes, so whichever
+    finishes first the value is identical: the race is deterministic in
+    value.  Returns ``(value, winner)`` where ``winner`` is ``"primary"``
+    or ``"spare"``; raises if the two disagree (they cannot, unless the
+    spare device is actually faulty — which is exactly what the check
+    catches)."""
+    shards = max(engine.placement.time_shards, 1)
+    T = engine.coeffs.T
+    lo = shard * T // shards
+    hi = max((shard + 1) * T // shards, lo + 1)   # never an empty slice
+    rows = bank.state.R_prev[:, lo:hi]            # (slots, rows, D)
+
+    def reduce_rows(r):
+        return jnp.max(jnp.abs(r), axis=(1, 2))   # per-lane shard residual
+
+    primary = reduce_rows(rows)
+    winner = "primary"
+    if device is not None:
+        spare = reduce_rows(jax.device_put(np.asarray(rows), device))
+        ready = getattr(spare, "is_ready", None)
+        if ready is not None and ready():
+            winner = "spare"
+        spare_np, primary_np = np.asarray(spare), np.asarray(primary)
+        if not np.array_equal(spare_np, primary_np):
+            raise DeviceLossError(
+                f"straggler duplicate for shard {shard} disagrees with the "
+                f"primary eval — spare device {device} is faulty")
+        return (spare_np if winner == "spare" else primary_np), winner
+    return np.asarray(primary), winner
+
+
+class ResilientServingLoop(ServingLoop):
+    """:class:`ServingLoop` with the fault-tolerance control plane wired
+    around every stepwise round.
+
+    engine_factory: ``(EngineKey, Placement) -> SamplingEngine`` — how to
+              construct an engine on an ARBITRARY placement; the rebuild
+              path calls it with the surviving sub-mesh's placement
+              (``serve.py`` passes its ``make_engine`` closure).
+    placement: the serving placement whose mesh devices form the initial
+              pool; ``None``/host placement disables fault injection
+              (nothing to lose).
+    injector: optional :class:`FaultInjector`, ticked once per round.
+    policy:   :class:`~repro.runtime.RestartPolicy` supervising bank
+              failures (default: 2 in-place retries before downsizing).
+    straggler: :class:`~repro.runtime.StragglerMitigator` fed every
+              round's wall time; ``mitigate_stragglers`` consults its
+              ``duplicate_assignments`` against spare capacity.
+    heartbeat_timeout_s: silence window after which a key is classified
+              failed (``HeartbeatMonitor``).
+    min_full_quality_devices: below this many survivors, recovered lanes
+              DEGRADE to the draft tier instead of resuming full-quality.
+    degrade_quality_steps: the draft tier's ``quality_steps`` budget.
+    clean_rounds_reset: consecutive healthy rounds before the restart
+              budget resets (``RestartPolicy.record_success_window``).
+    clock/sleep: injectable for deterministic backoff tests.
+    """
+
+    def __init__(self, registry, queue, batcher=None, *,
+                 engine_factory: Callable,
+                 placement: Optional[Placement] = None,
+                 injector: Optional[FaultInjector] = None,
+                 policy: Optional[RestartPolicy] = None,
+                 straggler: Optional[StragglerMitigator] = None,
+                 heartbeat_timeout_s: float = 60.0,
+                 min_full_quality_devices: int = 2,
+                 degrade_quality_steps: int = 2,
+                 clean_rounds_reset: int = 8,
+                 recoverable: Optional[Callable[[BaseException], bool]] = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 sleep: Callable[[float], None] = time.sleep,
+                 **kwargs):
+        super().__init__(registry, queue, batcher, **kwargs)
+        if not self.chunk_iters:
+            raise ValueError(
+                "ResilientServingLoop requires chunk_iters > 0: recovery "
+                "splices fetched LaneBank state back into live banks "
+                "(stepwise mode)")
+        self._engine_factory = engine_factory
+        self._placement = placement
+        self._injector = injector
+        self.policy = policy or RestartPolicy()
+        self.straggler = straggler or StragglerMitigator()
+        self.heartbeat = HeartbeatMonitor((), timeout_s=heartbeat_timeout_s,
+                                          clock=clock)
+        self.min_full_quality_devices = min_full_quality_devices
+        self.degrade_quality_steps = degrade_quality_steps
+        self.clean_rounds_reset = clean_rounds_reset
+        # RuntimeError covers DeviceLossError and XLA's dead-device
+        # errors; ValueError/TypeError (bad requests, shape mismatches)
+        # are not device faults and fail fast
+        self._recoverable = recoverable or (
+            lambda e: isinstance(e, RuntimeError))
+        self._clock = clock
+        self._sleep = sleep
+        self._round = 0
+        self._clean_rounds = 0
+        self._recovering = False
+        if placement is not None and placement.is_sharded:
+            self._pool = list(placement.mesh.devices.flat)
+        else:
+            self._pool = []
+        self.resilience = StatsView(
+            self.obs.metrics, "resilience",
+            initial={"device_losses": 0, "rebuilds": 0,
+                     "recovered_lanes": 0, "recovery_nfe": 0,
+                     "straggler_duplications": 0, "retries": 0,
+                     "draft_fallbacks": 0, "resubmitted_lanes": 0,
+                     "rebuild_wall_s": 0.0})
+
+    # -- supervised rounds ---------------------------------------------------
+
+    def _pump_stepwise(self, *, flush: bool = False) -> int:
+        if self._injector is not None and self._pool:
+            newly = self._injector.tick(self._pool)
+            if newly:
+                self.resilience["device_losses"] += len(newly)
+                self._on_device_loss(newly)
+        t0 = self._clock()
+        admitted = super()._pump_stepwise(flush=flush)
+        self._after_round(self._clock() - t0)
+        return admitted
+
+    def _after_round(self, round_s: float) -> None:
+        self._round += 1
+        self.straggler.record(round_s)
+        for key in list(self._banks):
+            self.heartbeat.beat(key, self._round)
+        self._clean_rounds += 1
+        if self._clean_rounds >= self.clean_rounds_reset \
+                and self.policy.restarts:
+            self.policy.record_success_window()
+
+    def failed_keys(self):
+        """Keys silent past the heartbeat timeout (a key beats once per
+        round it participates in, so a stuck round shows up here)."""
+        return self.heartbeat.failed()
+
+    # -- failure supervision (the _fail_bank funnel) --------------------------
+
+    def _fail_bank(self, key, error: BaseException) -> None:
+        """Supervised replacement for the base loop's fail-everything
+        path: recoverable errors go through the RestartPolicy — in-place
+        retry with exponential backoff, then elastic downsize — and only
+        an exhausted budget (or an unrecoverable error) actually fails
+        the bank's tickets."""
+        if self._recovering or self.error is not None \
+                or not self._recoverable(error):
+            # mid-rebuild, aborting (stop/_abort funnels ShutdownError
+            # through here and MUST pop the bank), or a non-device fault
+            return super()._fail_bank(key, error)
+        action = self.policy.next_action()
+        if action == "abort":
+            return super()._fail_bank(key, error)
+        self.policy.record_restart()
+        self._sleep(self.policy.backoff())
+        self._clean_rounds = 0
+        if action == "restart":
+            # in-place retry: keep the bank and its lane tickets; the next
+            # round re-polls/re-steps the same state on the same mesh
+            self.resilience["retries"] += 1
+            return
+        survivors = self._survivors()
+        self._rebuild(survivors, error)
+
+    def _on_device_loss(self, newly_lost: Sequence) -> None:
+        """Device loss is never retried in place — the devices are gone.
+        Rebuild immediately on the survivors."""
+        self._clean_rounds = 0
+        survivors = self._survivors()
+        self._rebuild(survivors, DeviceLossError(
+            f"lost {len(newly_lost)} device(s): "
+            f"{[getattr(d, 'id', d) for d in newly_lost]}"))
+
+    def _survivors(self) -> List:
+        if self._injector is not None:
+            return self._injector.surviving(self._pool)
+        return list(self._pool)
+
+    # -- the rebuild ---------------------------------------------------------
+
+    def _rebuild(self, survivors: List, cause: BaseException) -> None:
+        """Fetch every live bank to host, build fresh engines on the
+        surviving sub-mesh, re-place the exact state bytes, resume.
+        Every lane's ticket stays open through the whole rebuild — a bank
+        that cannot be migrated resubmits its tickets to the queue
+        instead (zero dropped either way)."""
+        if not survivors:
+            return self._abort(DeviceLossError(
+                f"no surviving devices ({cause})"))
+        t0 = self._clock()
+        self._recovering = True
+        try:
+            old_placement = self._placement or Placement.host()
+            plan = plan_elastic(
+                len(survivors),
+                target_model_parallel=max(old_placement.model_shards, 1))
+            mesh = MeshSpec("elastic", plan.shape, plan.axis_names,
+                            "surviving sub-mesh").build(devices=survivors)
+            new_placement = Placement.for_mesh(mesh)
+            degrade = len(survivors) < self.min_full_quality_devices
+            built = list(self.registry.engines())
+            for key in list(self._banks):
+                self._migrate_bank(key, new_placement, degrade=degrade)
+            # engines without a live bank still reference lost devices:
+            # swap them too, so their NEXT bank opens on the survivors
+            for key in built:
+                if key in self._banks:
+                    continue
+                try:
+                    self.registry.replace(
+                        key, self._engine_factory(key, new_placement))
+                except Exception:  # noqa: BLE001 — the key rebuilds lazily
+                    pass           # via the swapped factory on next traffic
+            self._placement = new_placement
+            self._pool = list(survivors)
+            # keys not seen yet must come up on the survivors too
+            factory = self._engine_factory
+            self.registry.set_factory(
+                lambda k, _plc=new_placement: factory(k, _plc))
+            self.resilience["rebuilds"] += 1
+        finally:
+            self._recovering = False
+            self.resilience["rebuild_wall_s"] += self._clock() - t0
+
+    def _migrate_bank(self, key, placement: Placement, *,
+                      degrade: bool) -> None:
+        old_engine = self.registry.get(key)
+        bank = self._banks[key]
+        tickets = self._lane_tickets[key]
+        try:
+            snapshot = old_engine.fetch_bank(bank)
+        except Exception:  # noqa: BLE001 — the old mesh is unreachable:
+            # lose the in-flight progress, never the tickets
+            return self._resubmit_bank(key, tickets)
+        if degrade:
+            return self._degrade_bank(key, old_engine, snapshot, tickets)
+        try:
+            new_engine = self._engine_factory(key, placement)
+            new_bank = new_engine.adopt_bank(snapshot)
+        except Exception:  # noqa: BLE001
+            return self._resubmit_bank(key, tickets)
+        self.registry.replace(key, new_engine)
+        self._banks[key] = new_bank
+        # lane indexing is preserved by adopt_bank, so the lane->ticket
+        # map carries over untouched
+        occupied = new_bank.occupied
+        self.resilience["recovered_lanes"] += occupied
+        # modeled recovery NFE: a real loss discards the chunk in flight;
+        # re-running it costs chunk_iters window-evals per live lane
+        self.resilience["recovery_nfe"] += \
+            occupied * new_bank.chunk_iters * new_engine.window
+
+    def _resubmit_bank(self, key, tickets) -> None:
+        """Fallback when state migration is impossible: the bank's open
+        tickets re-enter the queue with their requests intact (warm
+        starts included) and the bank is dropped."""
+        for lane, ticket in enumerate(tickets):
+            if ticket is not None and not ticket.done():
+                self.obs.tracer.async_instant("resubmit_recovery",
+                                              ticket.seqno, lane=lane)
+                self.queue.resubmit(ticket)
+                self.resilience["resubmitted_lanes"] += 1
+        self._banks.pop(key, None)
+        self._lane_tickets.pop(key, None)
+
+    def _degrade_bank(self, key, old_engine, snapshot, tickets) -> None:
+        """Graceful degradation: below ``min_full_quality_devices``
+        survivors, live lanes fall back to the PR 6 draft tier — each
+        open ticket resubmits with a ``quality_steps`` early-exit budget,
+        warm-started from its fetched trajectory so the progress made so
+        far is kept, instead of erroring."""
+        T = old_engine.coeffs.T
+        shape = old_engine.sample_shape
+        for lane, ticket in enumerate(tickets):
+            if ticket is None or ticket.done():
+                continue
+            request = snapshot.requests[lane] or ticket.request
+            traj = np.asarray(snapshot.state.x[lane]).reshape((T + 1,) + shape)
+            degraded = dataclasses.replace(
+                request, init=WarmStart(trajectory=traj),
+                quality_steps=self.degrade_quality_steps)
+            self.obs.tracer.async_instant("draft_fallback", ticket.seqno,
+                                          lane=lane)
+            self.queue.resubmit(ticket, degraded)
+            self.resilience["draft_fallbacks"] += 1
+        self._banks.pop(key, None)
+        self._lane_tickets.pop(key, None)
+
+    # -- straggler duplication ------------------------------------------------
+
+    def spare_devices(self) -> List:
+        """Pool devices outside the current serving mesh — the spare
+        capacity straggler duplicates run on."""
+        if self._placement is None or not self._placement.is_sharded:
+            return []
+        in_mesh = set(map(id, self._placement.mesh.devices.flat))
+        return [d for d in self._survivors() if id(d) not in in_mesh]
+
+    def mitigate_stragglers(self, key,
+                            shard_latencies: Dict[int, float]) -> List[int]:
+        """Duplicate the slowest timestep-shards' evals on spare devices
+        (``*-time`` meshes).  Returns the shards duplicated; each
+        duplicate is bitwise-checked against the primary
+        (:func:`duplicate_window_eval`) so a faulty spare surfaces
+        instead of corrupting the race."""
+        spares = self.spare_devices()
+        if not spares:
+            return []
+        shards = self.straggler.duplicate_assignments(
+            shard_latencies, len(spares))
+        if not shards:
+            return []
+        engine = self.registry.get(key)
+        bank = self._banks.get(key)
+        if bank is None:
+            return []
+        for shard, device in zip(shards, spares):
+            duplicate_window_eval(engine, bank, shard, device=device)
+            self.resilience["straggler_duplications"] += 1
+        return shards

@@ -1,0 +1,377 @@
+"""`repro.serving.resilience` coverage: the FaultInjector schedule, the
+RestartPolicy-supervised `_fail_bank` funnel (backoff sequencing against a
+fake clock), per-request queue timeouts, the `stop(drain=False)` stranded-
+ticket regression, straggler-duplicate determinism, and — in the mesh
+subprocess — the full chaos drain: 4 of 8 devices lost mid-solve, every
+ticket resolves, and the rebuilt engine's resumed solves are bitwise-equal
+to an uninterrupted run."""
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import ddim_coeffs
+from repro.runtime import RestartPolicy
+from repro.sampling import SampleRequest, SamplingEngine, get_sampler
+from repro.serving import (Batcher, BatchingPolicy, DeviceLossError,
+                           EngineKey, EngineRegistry, FaultInjector,
+                           RequestQueue, ResilientServingLoop, ServingLoop,
+                           ShutdownError, duplicate_window_eval)
+from tests.helpers import make_label_denoiser
+
+D = 16
+N_LABELS = 4
+T = 8
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+def host_factory():
+    eps_apply = make_label_denoiser(dim=D, n_labels=N_LABELS)
+
+    def factory(key):
+        return SamplingEngine(eps_apply, None, ddim_coeffs(key.T),
+                              get_sampler(key.solver), sample_shape=(D,))
+
+    return factory
+
+
+KEY = EngineKey("oracle", T, "taa")
+
+
+# --- FaultInjector ----------------------------------------------------------
+
+
+def test_fault_injector_drops_on_schedule_from_the_tail():
+    devices = list(range(8))
+    inj = FaultInjector({2: 3})
+    assert inj.tick(devices) == []
+    assert inj.tick(devices) == []
+    assert inj.tick(devices) == [5, 6, 7]       # tail drop: contiguous prefix
+    assert inj.tick(devices) == []              # schedule is one-shot
+    assert inj.surviving(devices) == [0, 1, 2, 3, 4]
+    assert inj.lost == [5, 6, 7]
+
+
+def test_fault_injector_always_leaves_one_survivor():
+    inj = FaultInjector({0: 99})
+    newly = inj.tick([0, 1])
+    assert newly == [1]
+    assert inj.surviving([0, 1]) == [0]
+    # a later drop cannot take the last device either
+    inj.drop_at[1] = 5
+    assert inj.tick([0, 1]) == []
+    assert inj.surviving([0, 1]) == [0]
+
+
+# --- RestartPolicy supervision of _fail_bank --------------------------------
+
+
+def test_fail_bank_backoff_then_downsize_sequencing():
+    """Recoverable bank failures follow the RestartPolicy: two in-place
+    retries with exponentially-backed-off sleeps (fake clock — no real
+    waiting), then the elastic downsize; with no surviving devices (host
+    pool is empty) the downsize degenerates to an abort that still fails
+    every ticket instead of hanging them."""
+    clock, sleeps = FakeClock(), []
+    registry = EngineRegistry(host_factory())
+    queue = RequestQueue()
+    loop = ResilientServingLoop(
+        registry, queue, Batcher(BatchingPolicy(max_batch=4)),
+        engine_factory=lambda key, plc: host_factory()(key),
+        policy=RestartPolicy(backoff_base_s=5.0, elastic_after=2),
+        clock=clock, sleep=sleeps.append, chunk_iters=2)
+    tickets = [queue.submit(SampleRequest(label=i % N_LABELS, seed=20 + i),
+                            KEY) for i in range(4)]
+    loop.pump(flush=True)                       # open the bank mid-solve
+    assert loop._banks[KEY].occupied == 4
+
+    loop._fail_bank(KEY, RuntimeError("injected device fault"))
+    assert sleeps == [10.0]                     # base * 2^1 after recording
+    assert KEY in loop._banks                   # in-place retry keeps state
+    loop._fail_bank(KEY, RuntimeError("injected device fault"))
+    assert sleeps == [10.0, 20.0]
+    assert loop.resilience["retries"] == 2
+
+    # third strike: elastic_after exhausted -> downsize; the host loop has
+    # no device pool, so zero survivors abort the loop
+    loop._fail_bank(KEY, RuntimeError("injected device fault"))
+    assert sleeps == [10.0, 20.0, 40.0]
+    assert isinstance(loop.error, DeviceLossError)
+    assert loop.resilience["rebuilds"] == 0
+    for t in tickets:
+        assert t.done()
+        with pytest.raises(DeviceLossError):
+            t.result(timeout=0)
+
+
+def test_unrecoverable_error_fails_bank_immediately():
+    registry = EngineRegistry(host_factory())
+    queue = RequestQueue()
+    sleeps = []
+    loop = ResilientServingLoop(
+        registry, queue, Batcher(BatchingPolicy(max_batch=4)),
+        engine_factory=lambda key, plc: host_factory()(key),
+        sleep=sleeps.append, chunk_iters=2)
+    tickets = [queue.submit(SampleRequest(label=0, seed=30), KEY)]
+    loop.pump(flush=True)
+    loop._fail_bank(KEY, ValueError("bad request shape"))
+    assert sleeps == []                         # no retry, no backoff
+    assert loop.resilience["retries"] == 0
+    assert tickets[0].done()
+    with pytest.raises(ValueError):
+        tickets[0].result(timeout=0)
+    assert loop.error is None                   # one bank failed, loop lives
+
+
+# --- per-ticket timeouts ----------------------------------------------------
+
+
+def test_sweep_expired_pops_only_expired_tickets():
+    clock = FakeClock()
+    queue = RequestQueue(clock=clock)
+    t_short = queue.submit(SampleRequest(label=0, seed=1, timeout_s=5.0), KEY)
+    t_long = queue.submit(SampleRequest(label=1, seed=2, timeout_s=50.0), KEY)
+    t_none = queue.submit(SampleRequest(label=2, seed=3), KEY)
+    assert queue.sweep_expired() == []
+    clock.t = 10.0
+    expired = queue.sweep_expired()
+    assert expired == [t_short]
+    assert not t_short.done()                   # the CALLER funnels the fail
+    assert len(queue) == 2
+    clock.t = 100.0
+    assert queue.sweep_expired() == [t_long]    # no-timeout requests never
+    assert len(queue) == 1                      # expire
+    assert not t_none.done()
+
+
+def test_loop_fails_expired_tickets_with_timeout_error():
+    clock = FakeClock()
+    registry = EngineRegistry(host_factory())
+    queue = RequestQueue(clock=clock)
+    loop = ServingLoop(registry, queue, Batcher(BatchingPolicy(max_batch=4)),
+                       chunk_iters=2)
+    expired = queue.submit(
+        SampleRequest(label=0, seed=40, timeout_s=5.0), KEY)
+    kept = queue.submit(SampleRequest(label=1, seed=41, timeout_s=500.0), KEY)
+    clock.t = 10.0                              # past the short deadline
+    loop.drain()
+    assert expired.done()
+    with pytest.raises(TimeoutError, match="expired in queue"):
+        expired.result(timeout=0)
+    assert kept.result(timeout=0).converged or kept.result(timeout=0).iters
+    assert loop.stats["failed"] == 1
+    assert loop.stats["completed"] == 1
+
+
+def test_admitted_tickets_are_not_expired():
+    """Once a request holds a lane it runs to completion: the sweep only
+    expires QUEUED tickets, so a timeout shorter than the solve does not
+    kill an admitted request."""
+    clock = FakeClock()
+    registry = EngineRegistry(host_factory())
+    queue = RequestQueue(clock=clock)
+    loop = ServingLoop(registry, queue, Batcher(BatchingPolicy(max_batch=4)),
+                       chunk_iters=2)
+    ticket = queue.submit(
+        SampleRequest(label=0, seed=42, timeout_s=5.0), KEY)
+    loop.pump(flush=True)                       # admitted to a lane
+    clock.t = 10.0                              # deadline passes mid-solve
+    loop.drain()
+    assert ticket.result(timeout=0) is not None
+
+
+# --- stop() must never strand a ticket --------------------------------------
+
+
+def test_stop_without_drain_fails_open_tickets():
+    """Regression: stop(drain=False) with queued work and a live two-tier
+    ticket must fail every open ticket with ShutdownError — an already-
+    resolved draft stage stays deliverable."""
+    registry = EngineRegistry(host_factory())
+    queue = RequestQueue()
+    loop = ServingLoop(registry, queue, Batcher(BatchingPolicy(max_batch=4)))
+    loop.start(poll_s=0.001)
+    # park the worker first so the submissions below deterministically
+    # remain open when stop() runs its post-join accounting
+    loop._stop_event.set()
+    loop._thread.join()
+    stranded = queue.submit(SampleRequest(label=0, seed=50), KEY)
+    two_tier = queue.submit(SampleRequest(label=1, seed=51), KEY)
+    draft = object()
+    two_tier.resolve_draft(draft)               # draft done, refine pending
+    loop.stop(drain=False)
+    for t in (stranded, two_tier):
+        assert t.done()
+        with pytest.raises(ShutdownError):
+            t.result(timeout=0)
+    assert two_tier.draft_done()
+    assert two_tier.draft_result(timeout=0) is draft
+    late = queue.submit(SampleRequest(label=2, seed=52), KEY)
+    assert late.done()                          # closed queue: pre-failed
+    with pytest.raises(ShutdownError):
+        late.result(timeout=0)
+
+
+def test_stop_with_drain_resolves_everything():
+    registry = EngineRegistry(host_factory())
+    queue = RequestQueue()
+    loop = ServingLoop(registry, queue, Batcher(BatchingPolicy(max_batch=4)),
+                       chunk_iters=2)
+    loop.start(poll_s=0.001)
+    tickets = [queue.submit(SampleRequest(label=i % N_LABELS, seed=60 + i),
+                            KEY) for i in range(6)]
+    time.sleep(0.01)
+    loop.stop()                                 # default drain=True
+    assert all(t.done() for t in tickets)
+    assert all(t.result(timeout=0) is not None for t in tickets)
+    assert loop.error is None
+
+
+# --- straggler duplication ---------------------------------------------------
+
+
+def test_duplicate_window_eval_is_deterministic_in_value():
+    registry = EngineRegistry(host_factory())
+    queue = RequestQueue()
+    loop = ServingLoop(registry, queue, Batcher(BatchingPolicy(max_batch=4)),
+                       chunk_iters=2)
+    [queue.submit(SampleRequest(label=i % N_LABELS, seed=70 + i), KEY)
+     for i in range(4)]
+    loop.pump(flush=True)
+    engine, bank = registry.get(KEY), loop._banks[KEY]
+    primary, winner0 = duplicate_window_eval(engine, bank, 0)
+    assert winner0 == "primary"
+    dup, winner = duplicate_window_eval(engine, bank, 0,
+                                        device=jax.devices()[0])
+    assert winner in ("primary", "spare")       # the race is free to go
+    assert np.array_equal(primary, dup)         # either way; the VALUE isn't
+    assert primary.shape == (bank.slots,)
+    loop.drain()
+
+
+# --- the chaos drain (mesh) --------------------------------------------------
+
+CHAOS_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "tests")
+import json
+import jax
+import numpy as np
+from helpers import make_label_denoiser
+from repro.core import ddim_coeffs
+from repro.launch.mesh import make_mesh
+from repro.sampling import (Placement, SampleRequest, SamplingEngine,
+                            get_sampler)
+from repro.serving import (Batcher, BatchingPolicy, EngineKey,
+                           EngineRegistry, FaultInjector, RequestQueue,
+                           ResilientServingLoop, duplicate_window_eval)
+
+D, N_LABELS, T = 16, 4, 8
+eps_apply = make_label_denoiser(dim=D, n_labels=N_LABELS)
+key = EngineKey("oracle", T, "taa")
+
+def factory(k, plc):
+    return SamplingEngine(eps_apply, None, ddim_coeffs(k.T),
+                          get_sampler(k.solver), sample_shape=(D,),
+                          placement=plc)
+
+plc8 = Placement.for_mesh(make_mesh("debug", data_parallel=4,
+                                    model_parallel=2))
+reqs = [SampleRequest(label=i % N_LABELS, seed=100 + i,
+                      **({} if i % 3 == 0
+                         else dict(tau=1e-2, quality_steps=1 + i % 4)))
+        for i in range(10)]
+
+def drain(injector):
+    registry = EngineRegistry(lambda k: factory(k, plc8))
+    queue = RequestQueue()
+    loop = ResilientServingLoop(
+        registry, queue, Batcher(BatchingPolicy(max_batch=4)),
+        engine_factory=factory, placement=plc8, injector=injector,
+        chunk_iters=2)
+    tickets = [queue.submit(r, key) for r in reqs]
+    loop.drain()
+    x0s = [np.asarray(t.result(timeout=0).x0) for t in tickets]
+    return loop, registry, queue, tickets, x0s
+
+_, _, _, base_tk, ref = drain(None)
+loop, registry, queue, tickets, got = drain(FaultInjector({3: 4}))
+engine = registry.get(key)
+
+out = {
+    "baseline_resolved": sum(t.done() for t in base_tk),
+    "chaos_resolved": sum(t.done() for t in tickets),
+    "n": len(reqs),
+    "bitwise": all(a.tobytes() == b.tobytes() for a, b in zip(got, ref)),
+    "resilience": {k: v for k, v in loop.resilience.items()},
+    "devices_after": engine.placement.num_devices,
+    "traces_after": engine.stats["stepwise_traces"],
+}
+
+# post-rebuild protocol: a second wave on the survivors compiles nothing
+# new and still resolves bitwise-identically
+wave = [queue.submit(r, key) for r in reqs]
+loop.drain()
+out["wave_resolved"] = sum(t.done() for t in wave)
+out["wave_bitwise"] = all(
+    np.asarray(t.result(timeout=0).x0).tobytes() == r.tobytes()
+    for t, r in zip(wave, ref))
+out["wave_retraces"] = engine.stats["stepwise_traces"] - out["traces_after"]
+
+# straggler duplication on the rebuilt mesh: a lost device still works as
+# spare host capacity, and the duplicate's value matches the primary
+[queue.submit(r, key) for r in reqs[:4]]
+loop.pump(flush=True)
+bank = loop._banks[key]
+spare = loop._injector.lost[0]
+p, _ = duplicate_window_eval(engine, bank, 0)
+d, winner = duplicate_window_eval(engine, bank, 0, device=spare)
+out["straggler_equal"] = bool(np.array_equal(p, d))
+out["straggler_winner"] = winner
+loop.drain()
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.mark.mesh
+def test_chaos_drain_loses_half_the_mesh_and_drops_nothing():
+    proc = subprocess.run(
+        [sys.executable, "-c", CHAOS_SCRIPT], capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+             "JAX_PLATFORMS": "cpu"},
+        cwd=Path(__file__).resolve().parent.parent, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][0]
+    out = json.loads(line[7:])
+    assert out["chaos_resolved"] == out["n"], out
+    assert out["baseline_resolved"] == out["n"], out
+    assert out["bitwise"], "resumed solves diverged from uninterrupted run"
+    res = out["resilience"]
+    assert res["device_losses"] == 4, res
+    assert res["rebuilds"] >= 1, res
+    assert res["recovered_lanes"] >= 1, res
+    assert res["recovery_nfe"] >= 1, res
+    assert res["rebuild_wall_s"] > 0, res
+    assert out["devices_after"] == 4, out
+    # the rebuilt engine serves a whole second wave without recompiling
+    assert out["wave_resolved"] == out["n"], out
+    assert out["wave_bitwise"], out
+    assert out["wave_retraces"] == 0, out
+    assert out["traces_after"] <= 5, out
+    # straggler duplicate raced on spare capacity, identical value
+    assert out["straggler_equal"], out
+    assert out["straggler_winner"] in ("primary", "spare"), out

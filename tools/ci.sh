@@ -38,6 +38,14 @@
 # unchanged protocol counters and >= 2x fewer modeled update launches
 # per round, and a check that BENCH_serving.json's `fused_round` section
 # holds the same invariants.
+# And a tenth ELASTIC pass — the early-exit soak re-run with --chaos-drop 4
+# (a FaultInjector kills 4 of 8 devices mid-drain; the ResilientServingLoop
+# rebuilds every engine on the surviving sub-mesh and resumes the live
+# banks, so every ticket still resolves), the stepwise guard's `elastic`
+# phase asserting the resumed solves are bitwise-identical to an
+# uninterrupted drain with one blocking poll per key per round and zero
+# retraces on the rebuilt engine, and a check that BENCH_serving.json's
+# `elastic` section reports 100% resolution plus the recovery's extra NFE.
 # Extra args ("$@", e.g. a test file) are forwarded to
 # both pytest passes; a pass whose marker selects nothing in that target
 # (pytest exit 5) is not a failure.
@@ -148,4 +156,36 @@ print(f"BENCH_serving.json fused_round section OK: "
       f"({fr['staged']['update_launches_per_round']:.1f} -> "
       f"{fr['fused']['update_launches_per_round']:.1f}), bitwise-equal, "
       f"protocol unchanged")
+PYEOF
+
+echo "--- elastic pass (chaos drain: device loss mid-solve, elastic guard) ---"
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.launch.serve --serve-async --smoke \
+        --mesh debug --data-parallel 4 --model-parallel 2 \
+        --requests 12 --steps-T 8 --batch-size 4 --arrival-rate 100 \
+        --chunk-iters 2 --loose-tau-frac 0.5 --loose-tau 1e-2 \
+        --quality-steps 3 --chaos-drop 4 --chaos-round 6
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python tools/stepwise_guard.py --phase elastic
+python - <<'PYEOF'
+import json
+
+data = json.load(open("BENCH_serving.json"))
+el = data["elastic"]
+assert not el.get("skipped"), el
+assert el["all_resolved"], el
+assert el["bitwise_equal_chaos_vs_baseline"], el
+assert el["chaos"]["device_losses"] == 4, el
+assert el["chaos"]["rebuilds"] >= 1, el
+assert el["chaos"]["recovery_nfe"] > 0, el
+print(f"BENCH_serving.json elastic section OK: "
+      f"{el['chaos']['device_losses']} device losses, "
+      f"{el['chaos']['rebuilds']} rebuild(s) in "
+      f"{el['chaos']['rebuild_wall_s']:.2f}s, "
+      f"+{el['chaos']['recovery_nfe_per_request']:.1f} recovery NFE/request, "
+      f"SLO attainment {el['baseline']['slo_attainment']:.2f} -> "
+      f"{el['chaos']['slo_attainment']:.2f} under chaos, all resolved, "
+      f"bitwise-equal")
 PYEOF

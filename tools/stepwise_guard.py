@@ -407,18 +407,130 @@ def phase_fused() -> int:
     return 0
 
 
+def phase_elastic() -> int:
+    """Chaos drain on the 8-forced-device debug mesh: 4 devices drop
+    mid-solve, the supervisor rebuilds every engine on the 4 survivors
+    and resumes.  Asserts (1) every submitted ticket resolves, (2) the
+    resumed solves are BITWISE-identical to an uninterrupted full-mesh
+    drain of the same requests, (3) post-rebuild rounds keep the
+    one-blocking-poll-per-key-per-round protocol with ZERO retraces on
+    the new engine (a second request wave after the rebuild compiles
+    nothing), and (4) the resilience counters report the recovery."""
+    import jax
+    if jax.device_count() < 8:
+        print("FAIL[elastic]: the chaos drain needs 8 devices; rerun under "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+        return 1
+    import numpy as np
+    from repro.launch.mesh import make_mesh
+    from repro.sampling import Placement
+    from repro.serving import FaultInjector, ResilientServingLoop
+
+    key = EngineKey("oracle", T, "taa")
+    eps_apply = make_label_denoiser(dim=D, n_labels=N_LABELS)
+
+    def factory(k, plc):
+        return SamplingEngine(eps_apply, None, ddim_coeffs(k.T),
+                              get_sampler(k.solver), sample_shape=(D,),
+                              placement=plc)
+
+    def make_requests():
+        return [SampleRequest(label=i % N_LABELS, seed=130 + i,
+                              **({} if i % 3 == 0
+                                 else dict(tau=1e-2, quality_steps=1 + i % 4)))
+                for i in range(10)]
+
+    plc8 = Placement.for_mesh(make_mesh("debug", data_parallel=4,
+                                        model_parallel=2))
+
+    # uninterrupted reference drain on the full mesh
+    registry = EngineRegistry(lambda k: factory(k, plc8))
+    queue = RequestQueue()
+    loop = ServingLoop(registry, queue, Batcher(BatchingPolicy(max_batch=4)),
+                       chunk_iters=2)
+    tickets = [queue.submit(r, key) for r in make_requests()]
+    loop.drain()
+    ref = [np.asarray(t.result().x0) for t in tickets]
+
+    # chaos drain: the injector kills 4 of 8 devices at round 3 (banks are
+    # live and mid-solve by then)
+    registry = EngineRegistry(lambda k: factory(k, plc8))
+    queue = RequestQueue()
+    loop = ResilientServingLoop(
+        registry, queue, Batcher(BatchingPolicy(max_batch=4)),
+        engine_factory=factory, placement=plc8,
+        injector=FaultInjector({3: 4}), chunk_iters=2)
+    tickets = [queue.submit(r, key) for r in make_requests()]
+    loop.drain()
+
+    undone = sum(not t.done() for t in tickets)
+    if undone:
+        print(f"FAIL[elastic]: {undone} ticket(s) unresolved after the "
+              f"chaos drain")
+        return 1
+    for i, t in enumerate(tickets):
+        if np.asarray(t.result().x0).tobytes() != ref[i].tobytes():
+            print(f"FAIL[elastic]: request {i} x0 differs from the "
+                  f"uninterrupted drain (recovery perturbed the solve)")
+            return 1
+
+    res = loop.resilience
+    if res["device_losses"] != 4 or res["rebuilds"] < 1:
+        print(f"FAIL[elastic]: expected 4 device losses and >= 1 rebuild, "
+              f"got {dict(res)}")
+        return 1
+    if res["recovered_lanes"] < 1 or res["recovery_nfe"] < 1:
+        print(f"FAIL[elastic]: no mid-solve lanes were recovered "
+              f"({dict(res)}) — the drop fired outside a live solve")
+        return 1
+
+    engine = registry.get(key)
+    if engine.placement.num_devices != 4:
+        print(f"FAIL[elastic]: post-rebuild engine runs on "
+              f"{engine.placement.num_devices} devices, want 4 survivors")
+        return 1
+
+    # second wave on the rebuilt engine: the protocol invariants must hold
+    # with ZERO additional compilations
+    traces_before = engine.stats["stepwise_traces"]
+    wave = [queue.submit(r, key) for r in make_requests()]
+    rounds = drain_with_poll_accounting(loop, queue, engine, "elastic")
+    if rounds < 0:
+        return 1
+    for i, t in enumerate(wave):
+        if np.asarray(t.result().x0).tobytes() != ref[i].tobytes():
+            print(f"FAIL[elastic]: post-rebuild request {i} x0 differs "
+                  f"from the full-mesh reference")
+            return 1
+    retraces = engine.stats["stepwise_traces"] - traces_before
+    if retraces:
+        print(f"FAIL[elastic]: the post-rebuild wave retraced {retraces} "
+              f"stepwise program(s) on the new engine")
+        return 1
+
+    print(f"OK[elastic]: lost 4/8 devices mid-solve, {res['rebuilds']} "
+          f"rebuild(s), {res['recovered_lanes']} lane(s) resumed "
+          f"bitwise-identical (+{res['recovery_nfe']} modeled recovery "
+          f"NFE); {len(tickets) + len(wave)} tickets all resolved, "
+          f"post-rebuild wave: 1 poll/round over {rounds} rounds, "
+          f"0 retraces ({engine.stats['stepwise_traces']} programs)")
+    return 0
+
+
 def main() -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--phase", default="all",
                    choices=("all", "earlyexit", "refine", "time", "obs",
-                            "fused"),
+                            "fused", "elastic"),
                    help="all (default: earlyexit + refine + obs), or one "
-                        "phase; `time` needs 8 devices (forced host "
-                        "devices on CPU) and drains under the debug-time "
-                        "mesh")
+                        "phase; `time` and `elastic` need 8 devices "
+                        "(forced host devices on CPU) — `time` drains "
+                        "under the debug-time mesh, `elastic` injects "
+                        "device loss mid-drain and checks the rebuild")
     args = p.parse_args()
     phases = {"earlyexit": phase_earlyexit, "refine": phase_refine,
-              "time": phase_time, "obs": phase_obs, "fused": phase_fused}
+              "time": phase_time, "obs": phase_obs, "fused": phase_fused,
+              "elastic": phase_elastic}
     run = ("earlyexit", "refine", "obs") if args.phase == "all" \
         else (args.phase,)
     for name in run:
